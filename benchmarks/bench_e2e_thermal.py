@@ -1,0 +1,29 @@
+"""End-to-end thermal-conductivity case (paper Fig. 3a/b: FC/SIS/ℓ0 split).
+
+Runs the reduced multi-task replica and reports the per-phase time
+breakdown — the same three bars as the paper's Fig. 3b.
+"""
+from __future__ import annotations
+
+from repro.configs.sisso_thermal import thermal_conductivity_case
+from repro.core import SissoRegressor
+from .common import emit
+
+
+def main():
+    case = thermal_conductivity_case(reduced=True)
+    fit = SissoRegressor(case.config).fit(
+        case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
+    total = sum(fit.timings.values())
+    for phase in ("fc", "sis", "l0"):
+        emit(f"thermal_{phase}", fit.timings[phase] * 1e6,
+             f"{100 * fit.timings[phase] / total:.0f}% of total")
+    best = fit.best()
+    rows = [f.row for f in best.features]
+    fv = fit.fspace.values_matrix()[rows]
+    emit("thermal_total", total * 1e6,
+         f"r2={best.r2(case.y, fv):.4f} dim={best.dim} multitask")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""ℓ0-regularization benchmark (paper Fig. 3 ℓ0 bars + batch-size claim).
+
+Reports models/second for: the paper-faithful batched-QR engine, the
+Gram-cached closed-form engine (TPU adaptation), and the Pallas tile kernel
+(interpret mode on CPU — the structural win is the blocked Gram reuse; see
+EXPERIMENTS.md §Perf for the roofline-level account).
+Sweeps the ℓ0 batch size around the paper's 65 536/131 072 settings.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.l0 import compute_gram_stats, score_tuples_qr
+from repro.core.sis import TaskLayout
+from repro.kernels import ops as kops
+from .common import emit, time_call
+
+
+def main(samples: int = 400, m: int = 256, quick: bool = False):
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0.5, 3.0, (m, samples))
+    y = 2 * x[3] * x[10] + rng.normal(0, 0.3, samples)
+    layout = TaskLayout.single(samples)
+    xs, ys = jnp.asarray(x), jnp.asarray(y)
+    stats = compute_gram_stats(xs, ys, layout)
+    pairs_all = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
+
+    for batch in (4096, 16384, 32640):
+        if batch > len(pairs_all):
+            continue
+        pairs = jnp.asarray(pairs_all[:batch])
+        qr = jax.jit(lambda p: score_tuples_qr(xs, ys, layout, p))
+        gram = jax.jit(lambda p: kops.l0_score_pairs(stats, p))
+        t_qr = time_call(qr, pairs)
+        t_gram = time_call(gram, pairs)
+        emit(f"l0_qr_batch{batch}", t_qr * 1e6,
+             f"{batch / t_qr:.0f} models/s (paper-faithful QR)")
+        emit(f"l0_gram_batch{batch}", t_gram * 1e6,
+             f"{batch / t_gram:.0f} models/s (Gram closed form; "
+             f"{t_qr / t_gram:.1f}x vs QR)")
+
+    # full-sweep via the tiled kernel (exact top-10)
+    t_tile = time_call(
+        lambda: kops.l0_search_tiled(x, y, layout, n_keep=10, block=128),
+        repeats=1, warmup=0)
+    n_models = m * (m - 1) // 2
+    emit("l0_tiled_full_sweep", t_tile * 1e6,
+         f"{n_models / t_tile:.0f} models/s incl. exact top-10 "
+         "(Pallas interpret)")
+
+
+if __name__ == "__main__":
+    main()

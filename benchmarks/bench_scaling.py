@@ -1,0 +1,33 @@
+"""Strong-scaling benchmark (paper Fig. 4).
+
+Wall-clock multi-node scaling cannot be measured on one CPU core, so this
+reports the *work-partition* strong-scaling of the distributed SISSO
+phases: per-device candidate counts, merge payload sizes, and the serial
+fraction (top-k merge) for 1..256 devices — the quantities that set the
+Fig. 4 curves.  The collective model matches core/distributed.py (one
+psum over samples + one k-sized gather per phase).
+"""
+from __future__ import annotations
+
+from repro.core.l0 import n_models
+from .common import emit
+
+
+def main():
+    n_candidates = 465_242_552      # paper kaggle FC count
+    n_l0 = 1_249_975_000            # paper kaggle l0 models
+    k = 50_000                      # SIS subspace
+    per_cand_flops = 2 * 2400       # pearson per candidate (kaggle S=2400)
+    per_model_flops = 40            # gram closed-form per pair
+    for nodes in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+        sis_local = n_candidates / nodes
+        l0_local = n_l0 / nodes
+        merge = k  # score payload gathered per phase
+        serial_frac = merge / (sis_local + merge)
+        emit(f"scaling_{nodes}nodes", 0.0,
+             f"SIS {sis_local:.3g} cands/dev; L0 {l0_local:.3g} models/dev; "
+             f"merge payload {merge}; serial fraction {serial_frac:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time (s) of fn(*args), blocking on device results."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, (list, tuple, dict)) else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        try:
+            jax.block_until_ready(r)
+        except Exception:
+            pass
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

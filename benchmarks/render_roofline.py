@@ -1,0 +1,48 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun results JSON.
+
+    PYTHONPATH=src python -m benchmarks.render_roofline dryrun_results_final.json
+"""
+import json
+import sys
+
+
+def fmt(results, multi_pod):
+    rows = []
+    head = ("| arch | shape | chips | peak GiB/dev | t_compute s | t_memory s "
+            "| t_collective s | dominant | useful FLOPs ratio |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for r in results:
+        if r["multi_pod"] != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                        f"skipped: {r['reason'][:40]} | — |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['n_chips']} "
+            f"| {r['memory']['peak_bytes_per_device'] / 2**30:.2f} "
+            f"| {t['t_compute_s']:.3e} | {t['t_memory_s']:.3e} "
+            f"| {t['t_collective_s']:.3e} | {t['dominant'][2:-2]} "
+            f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_final.json"
+    results = json.load(open(path))
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    er = sum(1 for r in results if r["status"] == "error")
+    print(f"### Summary: {ok} compiled OK, {sk} skipped (documented), "
+          f"{er} errors\n")
+    print("### Single-pod mesh (16, 16) = 256 chips\n")
+    print(fmt(results, False))
+    print("\n### Multi-pod mesh (2, 16, 16) = 512 chips\n")
+    print(fmt(results, True))
+
+
+if __name__ == "__main__":
+    main()

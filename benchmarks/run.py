@@ -1,0 +1,24 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  On this CPU container the
+absolute numbers calibrate the *relative* claims (QR vs Gram engines,
+fused-vs-materialized SIS, FP64 vs FP32, phase breakdowns); the TPU roofline
+analysis lives in EXPERIMENTS.md (fed by launch/dryrun.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import (bench_e2e_kaggle, bench_e2e_thermal, bench_feature_gen,
+               bench_l0, bench_precision, bench_scaling, bench_sis)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for mod in (bench_feature_gen, bench_sis, bench_l0, bench_precision,
+                bench_e2e_thermal, bench_e2e_kaggle, bench_scaling):
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

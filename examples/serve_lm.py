@@ -1,0 +1,75 @@
+"""Batched serving demo: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b] [--tokens 16]
+
+Runs the reduced config of the chosen arch (any of the 10 assigned families,
+including SWA ring caches, local/global alternation, SSM states and the
+whisper encoder-decoder path).
+"""
+import argparse
+import importlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+ARCH_MODULES = {
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "qwen2.5-32b": "repro.configs.qwen2p5_32b",
+    "nemotron-4-15b": "repro.configs.nemotron4_15b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3p5_moe",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=sorted(ARCH_MODULES))
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = importlib.import_module(ARCH_MODULES[args.arch]).reduced()
+    rng = np.random.default_rng(0)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    n_prompt = 8
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, n_prompt)), jnp.int32)}
+    if cfg.family == "vlm":
+        prompts["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        prompts["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, 16, cfg.d_model)), jnp.float32)
+
+    n_ctx = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+    max_seq = n_ctx + n_prompt + args.tokens
+    t0 = time.perf_counter()
+    logits, cache = lm.prefill(cfg, params, prompts, max_seq=max_seq)
+    step = jax.jit(lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for t in range(args.tokens - 1):
+        pos = (t + n_prompt) if cfg.family == "audio" else (n_ctx + n_prompt + t)
+        logits, cache = step(params, tok, cache, pos)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.perf_counter() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"{args.arch} ({cfg.family}): generated {gen.shape} tokens in "
+          f"{dt:.2f}s ({args.batch * args.tokens / dt:.1f} tok/s)")
+    print("sequences:", gen[:, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: TPU-native multi-pod SISSO framework in JAX.
+
+Reproduction + extension of "A high-performance and portable implementation
+of the SISSO method for CPUs and GPUs" (Eibl et al., 2025).  See DESIGN.md
+for the paper->TPU mapping and EXPERIMENTS.md for the validation, roofline
+and perf-iteration records.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+"""gemma2-2b — local/global alternation, softcaps [arXiv:2408.00118]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("gemma2-2b")
+def gemma2_2b(**kw) -> LMConfig:
+    return LMConfig(
+        name="gemma2-2b", family="dense", n_layers=26, d_model=2304,
+        n_heads=8, n_kv_heads=4, head_dim=256, d_ff=9216,
+        vocab_size=256_000, mlp="geglu", attn_type="local_global",
+        window=4096, attn_softcap=50.0, logit_softcap=30.0,
+        gemma_norms=True, tie_embeddings=True, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="gemma2-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        mlp="geglu", attn_type="local_global", window=16,
+        attn_softcap=50.0, logit_softcap=30.0, gemma_norms=True,
+        tie_embeddings=True, dtype="float32")

@@ -1,0 +1,24 @@
+"""internvl2-2b — InternViT(stub) + InternLM2 backbone [arXiv:2404.16821].
+
+Per the task spec the vision frontend is a STUB: input_specs() provides
+precomputed patch embeddings which are prepended to the text sequence.
+"""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("internvl2-2b")
+def internvl2_2b(**kw) -> LMConfig:
+    return LMConfig(
+        name="internvl2-2b", family="vlm", n_layers=24, d_model=2048,
+        n_heads=16, n_kv_heads=8, head_dim=128, d_ff=8192,
+        vocab_size=92_553, mlp="swiglu", frontend="vision_stub",
+        n_frontend_tokens=256, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="internvl2-smoke", family="vlm", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        mlp="swiglu", frontend="vision_stub", n_frontend_tokens=8,
+        dtype="float32")

@@ -1,0 +1,20 @@
+"""mamba2-2.7b — SSD state-space model [arXiv:2405.21060]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("mamba2-2.7b")
+def mamba2_2p7b(**kw) -> LMConfig:
+    return LMConfig(
+        name="mamba2-2.7b", family="ssm", n_layers=64, d_model=2560,
+        n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab_size=50_280,
+        ssm_state=128, d_inner=5120, ssm_head_dim=64, conv_kernel=4,
+        tie_embeddings=True, sub_quadratic=True, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="mamba2-smoke", family="ssm", n_layers=2, d_model=64,
+        n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab_size=256,
+        ssm_state=16, d_inner=128, ssm_head_dim=32, conv_kernel=4,
+        tie_embeddings=True, sub_quadratic=True, dtype="float32")

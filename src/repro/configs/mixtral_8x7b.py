@@ -1,0 +1,21 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with SWA [arXiv:2401.04088]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("mixtral-8x7b")
+def mixtral_8x7b(**kw) -> LMConfig:
+    return LMConfig(
+        name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14_336,
+        vocab_size=32_000, mlp="swiglu", n_experts=8, top_k=2,
+        attn_type="swa", window=4096, rope_theta=1_000_000.0,
+        sub_quadratic=True, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="mixtral-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=96, vocab_size=256,
+        mlp="swiglu", n_experts=4, top_k=2, attn_type="swa", window=16,
+        sub_quadratic=True, capacity_factor=4.0, dtype="float32")

@@ -1,0 +1,18 @@
+"""nemotron-4-15b — dense GQA, squared-ReLU MLP [arXiv:2402.16819]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("nemotron-4-15b")
+def nemotron4_15b(**kw) -> LMConfig:
+    return LMConfig(
+        name="nemotron-4-15b", family="dense", n_layers=32, d_model=6144,
+        n_heads=48, n_kv_heads=8, head_dim=128, d_ff=24_576,
+        vocab_size=256_000, mlp="relu2", **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="nemotron-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=192, vocab_size=256,
+        mlp="relu2", dtype="float32")

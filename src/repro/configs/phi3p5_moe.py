@@ -1,0 +1,19 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE [hf:microsoft/Phi-3.5-MoE]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("phi3.5-moe-42b-a6.6b")
+def phi3p5_moe(**kw) -> LMConfig:
+    return LMConfig(
+        name="phi3.5-moe-42b-a6.6b", family="moe", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=6400,
+        vocab_size=32_064, mlp="swiglu", n_experts=16, top_k=2, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="phi3.5-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=256,
+        mlp="swiglu", n_experts=4, top_k=2, capacity_factor=4.0,
+        dtype="float32")

@@ -1,0 +1,19 @@
+"""qwen2-1.5b — dense GQA, QKV bias [arXiv:2407.10671]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("qwen2-1.5b")
+def qwen2_1p5b(**kw) -> LMConfig:
+    return LMConfig(
+        name="qwen2-1.5b", family="dense", n_layers=28, d_model=1536,
+        n_heads=12, n_kv_heads=2, head_dim=128, d_ff=8960,
+        vocab_size=151_936, mlp="swiglu", qkv_bias=True,
+        rope_theta=1_000_000.0, tie_embeddings=True, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="qwen2-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        mlp="swiglu", qkv_bias=True, tie_embeddings=True, dtype="float32")

@@ -1,0 +1,19 @@
+"""qwen2.5-32b — dense GQA decoder with QKV bias [hf:Qwen/Qwen2.5]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("qwen2.5-32b")
+def qwen2p5_32b(**kw) -> LMConfig:
+    return LMConfig(
+        name="qwen2.5-32b", family="dense", n_layers=64, d_model=5120,
+        n_heads=40, n_kv_heads=8, head_dim=128, d_ff=27_648,
+        vocab_size=152_064, mlp="swiglu", qkv_bias=True,
+        rope_theta=1_000_000.0, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="qwen2.5-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=5, n_kv_heads=1, head_dim=16, d_ff=160, vocab_size=256,
+        mlp="swiglu", qkv_bias=True, dtype="float32")

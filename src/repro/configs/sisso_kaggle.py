@@ -1,0 +1,51 @@
+"""NOMAD-2018 Kaggle band-gap test case (paper §III.A.2, Table II).
+
+Paper setup: 2400 (Al_x In_y Ga_{1-x-y})2O3 samples, 12 primary features
+(6 lattice params, x, y, 1-x-y, ECN of Al/Ga/In), rung-limited pool with 11
+operators, 2-dim descriptors, SIS subspace 50 000, 10 residuals, bounds
+[1e-3, 1e5], ℓ0 batch 131072, feature-gen batch 1e8 => 1.25e9 ℓ0 models,
+465 242 552 candidates, single task.
+
+Synthetic replica: same sample count / feature count / operator pool /
+bounds / single-task shape, planted band-gap-like law.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import SissoConfig
+from ..core.operators import KAGGLE_OPS
+from .sisso_thermal import SissoCase
+
+
+def kaggle_bandgap_case(reduced: bool = False, seed: int = 11) -> SissoCase:
+    rng = np.random.default_rng(seed)
+    s = 300 if reduced else 2400
+    names = ["a1", "a2", "a3", "b1", "b2", "b3",          # lattice params
+             "x", "y", "z",                                # compositions
+             "ecn_al", "ecn_ga", "ecn_in"]                 # coordination
+    p = len(names)
+    x = np.zeros((p, s))
+    x[:6] = rng.uniform(5.0, 15.0, size=(6, s))            # lattice params (Å)
+    comp = rng.dirichlet(np.ones(3), size=s).T             # x + y + z = 1
+    x[6:9] = np.clip(comp, 0.01, None)
+    x[9:12] = rng.uniform(3.5, 6.5, size=(3, s))           # ECN
+    # planted: gap ~ c1 * x/a1 + c2 * sqrt(ecn_al) + c0
+    y = 4.1 * x[6] / x[0] + 1.9 * np.sqrt(x[9]) - 1.2
+    y = y + 0.005 * rng.normal(size=s)
+
+    if reduced:
+        cfg = SissoConfig(
+            max_rung=1, n_dim=2, n_sis=30, n_residual=5,
+            op_names=KAGGLE_OPS, on_the_fly_last_rung=True,
+            l_bound=1e-3, u_bound=1e5, precision="fp64",
+        )
+    else:
+        cfg = SissoConfig(
+            max_rung=3, n_dim=2, n_sis=50_000, n_residual=10,
+            op_names=KAGGLE_OPS, on_the_fly_last_rung=False,
+            l_bound=1e-3, u_bound=1e5, precision="fp32",
+            l0_block=131_072,            # paper's ℓ0 batch size
+            max_pairs_per_op=500_000,
+        )
+    return SissoCase("kaggle_bandgap", x, y, names, None, None, cfg)

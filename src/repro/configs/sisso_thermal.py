@@ -1,0 +1,77 @@
+"""Thermal-conductivity test case (paper §III.A.1, Table II).
+
+Paper setup: 156 samples (75 experimental + 57 aiGK + 12 duplicated
+rock-salts per task), 17 primary features, rung 3, 3-dim descriptors,
+SIS subspace 2000/dim, 10 residuals, bounds [1e-5, 1e8], 14 operators,
+multi-task (experimental vs calculated), on-the-fly last rung
+=> 2.08e10 ℓ0 models.
+
+The measured dataset is not redistributable here, so the *synthetic
+replica* keeps every computational shape (sample count, task split,
+feature count, operator pool, bounds, on-the-fly mode) and plants a
+physically-shaped ground truth so correctness is testable.  ``reduced=True``
+scales the combinatorics down for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from ..core import SissoConfig
+from ..core.operators import THERMAL_OPS
+from ..core.units import Unit
+
+
+@dataclasses.dataclass
+class SissoCase:
+    name: str
+    x: np.ndarray
+    y: np.ndarray
+    names: List[str]
+    units: Optional[List[Unit]]
+    task_ids: Optional[np.ndarray]
+    config: SissoConfig
+
+
+def thermal_conductivity_case(reduced: bool = False, seed: int = 7) -> SissoCase:
+    rng = np.random.default_rng(seed)
+    n_exp, n_calc = 75 + 12, 57 + 12          # paper: 156 total
+    s = n_exp + n_calc
+    p = 17
+    basis = ("kg", "m", "s", "K")
+    # volume-, mass-, temperature- and dimensionless-shaped primaries
+    unit_pool = [
+        Unit.from_mapping({"m": 3}, basis),
+        Unit.from_mapping({"kg": 1}, basis),
+        Unit.from_mapping({"K": 1}, basis),
+        Unit.dimensionless(basis),
+    ]
+    units = [unit_pool[i % len(unit_pool)] for i in range(p)]
+    names = [f"f{i}" for i in range(p)]
+    x = rng.uniform(0.5, 5.0, size=(p, s))
+    task_ids = np.repeat([0, 1], [n_exp, n_calc])
+    # planted law with task-dependent coefficients (multi-task structure):
+    # kappa ~ c1 * f0*f4 + c2 * f2^2   (f0,f4 share units; f2 is temperature)
+    d1 = x[0] * x[4]
+    d2 = x[2] ** 2
+    y = np.where(task_ids == 0,
+                 3.0 * d1 - 0.8 * d2 + 1.0,
+                 2.2 * d1 - 0.5 * d2 - 0.5)
+    y = y + 0.01 * rng.normal(size=s)
+
+    if reduced:
+        cfg = SissoConfig(
+            max_rung=1, n_dim=2, n_sis=25, n_residual=5,
+            op_names=THERMAL_OPS, on_the_fly_last_rung=True,
+            l_bound=1e-5, u_bound=1e8, precision="fp64",
+        )
+    else:
+        cfg = SissoConfig(
+            max_rung=3, n_dim=3, n_sis=2000, n_residual=10,
+            op_names=THERMAL_OPS, on_the_fly_last_rung=True,
+            l_bound=1e-5, u_bound=1e8, precision="fp64",
+            max_pairs_per_op=200_000,
+        )
+    return SissoCase("thermal_conductivity", x, y, names, units, task_ids, cfg)

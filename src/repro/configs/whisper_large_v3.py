@@ -1,0 +1,26 @@
+"""whisper-large-v3 — enc-dec, conv frontend stub [arXiv:2212.04356].
+
+Frontend stub per task spec: input_specs() provides precomputed frame
+embeddings (B, T_frames, d_model) in place of the mel+conv stem.
+"""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("whisper-large-v3")
+def whisper_large_v3(**kw) -> LMConfig:
+    return LMConfig(
+        name="whisper-large-v3", family="audio", n_layers=32, d_model=1280,
+        n_heads=20, n_kv_heads=20, head_dim=64, d_ff=5120,
+        vocab_size=51_866, mlp="gelu", is_encoder_decoder=True,
+        n_enc_layers=32, max_target_len=448, frontend="audio_stub",
+        tie_embeddings=True, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="whisper-smoke", family="audio", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        mlp="gelu", is_encoder_decoder=True, n_enc_layers=2,
+        max_target_len=16, frontend="audio_stub", tie_embeddings=True,
+        dtype="float32")

@@ -1,0 +1,22 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attn block [arXiv:2411.15242]."""
+from ..models.base import LMConfig
+from . import register_arch
+
+
+@register_arch("zamba2-2.7b")
+def zamba2_2p7b(**kw) -> LMConfig:
+    return LMConfig(
+        name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+        n_heads=32, n_kv_heads=32, head_dim=80, d_ff=10_240,
+        vocab_size=32_000, mlp="swiglu", ssm_state=64, d_inner=5120,
+        ssm_head_dim=64, attn_every=6, tie_embeddings=True,
+        sub_quadratic=True, **kw)
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="zamba2-smoke", family="hybrid", n_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        mlp="swiglu", ssm_state=16, d_inner=128, ssm_head_dim=32,
+        attn_every=2, tie_embeddings=True, sub_quadratic=True,
+        dtype="float32")

@@ -1,0 +1,18 @@
+"""SISSO core: the paper's contribution as composable JAX modules."""
+from .feature_space import FeatureSpace, Feature, CandidateBlock
+from .model import SissoModel
+from .sis import TaskLayout, sis_screen, build_score_context, score_block
+from .l0 import (
+    GramStats, compute_gram_stats, score_tuples_gram, score_tuples_qr,
+    l0_search, n_models, tuple_blocks,
+)
+from .solver import SissoConfig, SissoRegressor, SissoFit
+from .units import Unit
+
+__all__ = [
+    "FeatureSpace", "Feature", "CandidateBlock", "SissoModel", "TaskLayout",
+    "sis_screen", "build_score_context", "score_block", "GramStats",
+    "compute_gram_stats", "score_tuples_gram", "score_tuples_qr", "l0_search",
+    "n_models", "tuple_blocks", "SissoConfig", "SissoRegressor", "SissoFit",
+    "Unit",
+]

@@ -1,0 +1,140 @@
+"""Distributed SISSO phases over a (pod, data, model) mesh.
+
+Mapping (DESIGN.md §4):
+* `data` (+`pod`)  — candidate axis: SIS feature blocks / ℓ0 tuple blocks.
+* `model`          — sample axis: Gram & projection partial sums, `psum`ed.
+
+The heavy inner loops are collective-free; only O(k) score/argmin payloads
+cross devices (vs the paper's serial gather/redistribute of features).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sis import ScoreContext, scores_from_reductions
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sis_scores_distributed(
+    mesh: Mesh,
+    x: jnp.ndarray,          # (F, S) candidate feature values
+    ctx: ScoreContext,
+    n_top: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k (scores, indices) with features sharded over data(+pod) and
+    samples sharded over model.
+
+    Inside each shard: three local matmuls (the SIS reductions) on the
+    sample sub-axis; one psum over 'model' combines them; local top-k over
+    the feature shard; a single all-gather of k-sized payloads merges.
+    """
+    dp = _dp_axes(mesh)
+    f, s = x.shape
+    nd = int(np.prod([mesh.shape[a] for a in dp]))
+    nm = int(mesh.shape["model"])
+    assert f % nd == 0 and s % nm == 0, (f, nd, s, nm)
+    k_local = min(n_top, f // nd)
+
+    m = jnp.asarray(ctx.membership, x.dtype)
+    yt = jnp.asarray(ctx.y_tilde, x.dtype)
+    counts = jnp.asarray(ctx.counts, x.dtype)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, "model"), P(None, "model"), P(None, "model")),
+        out_specs=(P(dp), P(dp)),
+    )
+    def local(x_blk, m_blk, yt_blk):
+        sums = jax.lax.psum(x_blk @ m_blk.T, "model")
+        sumsq = jax.lax.psum((x_blk * x_blk) @ m_blk.T, "model")
+        dots = jax.lax.psum(x_blk @ yt_blk.T, "model")
+        scores = scores_from_reductions(sums, sumsq, dots, counts,
+                                        ctx.n_residuals)
+        vals, idx = jax.lax.top_k(scores, k_local)
+        base = f // nd * jax.lax.axis_index(dp[0] if len(dp) == 1 else dp)
+        return vals, idx + base
+
+    vals, idx = jax.jit(local)(x, m, yt)
+    vals, idx = np.asarray(vals), np.asarray(idx)
+    order = np.argsort(-vals, kind="stable")[:n_top]
+    return vals[order], idx[order]
+
+
+def l0_pairs_distributed(
+    mesh: Mesh,
+    x: jnp.ndarray,      # (m, S) subspace features
+    y: jnp.ndarray,      # (S,)
+    task_slices,
+    pairs: np.ndarray,   # (B, 2) — padded & sharded over data(+pod)
+    n_keep: int = 10,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Distributed exhaustive pair scoring: tuple space over data(+pod),
+    samples over model (per-task Gram partials psum'ed), top-k merge."""
+    from ..kernels.ref import solve3_sse
+
+    dp = _dp_axes(mesh)
+    nd = int(np.prod([mesh.shape[a] for a in dp]))
+    b = len(pairs)
+    b_pad = ((b + nd - 1) // nd) * nd
+    pairs_pad = np.zeros((b_pad, 2), np.int32)
+    pairs_pad[:b] = pairs
+    valid = np.zeros((b_pad,), bool)
+    valid[:b] = True
+    nm = int(mesh.shape["model"])
+    s = x.shape[1]
+    s_pad = ((s + nm - 1) // nm) * nm
+    x_p = jnp.zeros((x.shape[0], s_pad), x.dtype).at[:, :s].set(x)
+    y_p = jnp.zeros((s_pad,), y.dtype).at[:s].set(y)
+    k_local = min(n_keep, b_pad // nd)
+
+    # per-task membership rows for sample-sharded Gram partials
+    t = len(task_slices)
+    mem = np.zeros((t, s_pad), np.float64)
+    for ti, (lo, hi) in enumerate(task_slices):
+        mem[ti, lo:hi] = 1.0
+    mem = jnp.asarray(mem, x.dtype)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, "model"), P("model"), P(None, "model"),
+                  P(dp, None), P(dp)),
+        out_specs=(P(dp), P(dp)),
+    )
+    def local(x_blk, y_blk, mem_blk, prs, vld):
+        i, j = prs[:, 0], prs[:, 1]
+        total = jnp.zeros((prs.shape[0],), x_blk.dtype)
+        for ti in range(t):
+            w = mem_blk[ti]
+            xw = x_blk * w[None, :]
+            gii = jax.lax.psum((xw * x_blk).sum(axis=1), "model")
+            fsum = jax.lax.psum(xw.sum(axis=1), "model")
+            bv = jax.lax.psum(xw @ y_blk, "model")
+            n = jax.lax.psum(w.sum(), "model")
+            ysum = jax.lax.psum(w @ y_blk, "model")
+            yty = jax.lax.psum((w * y_blk) @ y_blk, "model")
+            gij = jax.lax.psum((xw[i] * x_blk[j]).sum(axis=1), "model")
+            total = total + solve3_sse(
+                gii[i], gii[j], n, gij, fsum[i], fsum[j],
+                bv[i], bv[j], ysum, yty)
+        total = jnp.where(vld, total, jnp.inf)
+        neg, idx = jax.lax.top_k(-total, k_local)
+        base = prs.shape[0] * 0 + idx  # local indices within the shard
+        shard = jax.lax.axis_index(dp[0] if len(dp) == 1 else dp)
+        return -neg, base + shard * (b_pad // nd)
+
+    sses, idx = jax.jit(local)(x_p, y_p, mem, jnp.asarray(pairs_pad),
+                               jnp.asarray(valid))
+    sses, idx = np.asarray(sses), np.asarray(idx)
+    order = np.argsort(sses, kind="stable")[:n_keep]
+    keep = np.isfinite(sses[order])
+    return pairs_pad[idx[order][keep]].astype(np.int64), sses[order][keep]

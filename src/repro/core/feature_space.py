@@ -1,0 +1,358 @@
+"""Feature creation (FC) — the first SISSO phase.
+
+Implements the paper's GPU algorithm (Fig. 2, right) adapted to TPU/JAX:
+
+* **operator-outer-loop** (paper P1): for each operator, all candidate child
+  combinations are evaluated as one batched device sweep over an SoA value
+  matrix ``X: (n_features, n_samples)``.
+* **host/device rule split** (paper P2): unit-, domain- and structural-dedup
+  rules run on host metadata and *prevent* evaluation; value rules (bounds,
+  NaN, variance, duplicate values) are applied on device to the evaluated
+  block and produce a validity mask — exactly the paper's "validity list".
+* **on-the-fly last rung** (paper P3): the highest rung is optionally never
+  materialized; candidates are kept as ``(op_id, child_a, child_b)`` integer
+  triples and (re-)evaluated inside SIS (see kernels/fused_sis.py).
+
+Value-based duplicate elimination uses two fixed random projections of the
+standardized feature values (sign-canonicalized, so ``x`` and ``-x`` — which
+span the same model space — collide), quantized to a relative tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import operators as ops_mod
+from .operators import ChildMeta, Operator, apply_op
+from .units import Unit
+
+log = logging.getLogger(__name__)
+
+_DEDUP_TOL = 1e-5
+_MIN_STD = 1e-10
+
+
+@dataclasses.dataclass
+class Feature:
+    fid: int
+    rung: int
+    unit: Unit
+    expr: str
+    complexity: int
+    op_id: Optional[int] = None  # None => primary feature
+    child_a: Optional[int] = None  # fid
+    child_b: Optional[int] = None  # fid
+    row: Optional[int] = None  # row in the materialized value matrix
+    vmin: float = 0.0
+    vmax: float = 0.0
+
+    @property
+    def meta(self) -> ChildMeta:
+        return ChildMeta(self.vmin, self.vmax)
+
+
+@dataclasses.dataclass
+class CandidateBlock:
+    """A batch of same-operator last-rung candidates (never materialized)."""
+
+    op_id: int
+    child_a: np.ndarray  # (B,) rows into the materialized value matrix
+    child_b: np.ndarray  # (B,) rows; == child_a for unary ops
+
+    def __len__(self) -> int:
+        return len(self.child_a)
+
+
+class FeatureSpace:
+    """Rung-wise combinatorial feature generation with validity rules."""
+
+    def __init__(
+        self,
+        primary_values: np.ndarray,  # (P, S)
+        names: Sequence[str],
+        units: Optional[Sequence[Unit]] = None,
+        op_names: Sequence[str] = ops_mod.THERMAL_OPS,
+        max_rung: int = 2,
+        l_bound: float = 1e-5,
+        u_bound: float = 1e8,
+        on_the_fly_last_rung: bool = False,
+        eval_batch: int = 8192,
+        max_pairs_per_op: Optional[int] = None,
+        seed: int = 0,
+        dtype=jnp.float32,
+    ) -> None:
+        primary_values = np.asarray(primary_values, dtype=np.float64)
+        if primary_values.ndim != 2:
+            raise ValueError("primary_values must be (n_features, n_samples)")
+        p, s = primary_values.shape
+        if len(names) != p:
+            raise ValueError("names must match primary feature count")
+        basis = units[0].basis if units else ()
+        units = list(units) if units else [Unit.dimensionless() for _ in range(p)]
+
+        self.dtype = dtype
+        self.n_samples = s
+        self.ops: Tuple[Operator, ...] = ops_mod.op_pool(op_names)
+        self.max_rung = max_rung
+        self.l_bound = float(l_bound)
+        self.u_bound = float(u_bound)
+        self.on_the_fly = bool(on_the_fly_last_rung)
+        self.eval_batch = int(eval_batch)
+        self.max_pairs_per_op = max_pairs_per_op
+        self._rng = np.random.default_rng(seed)
+
+        # Two fixed dedup projection vectors (host side, float64 for stability).
+        proj_rng = np.random.default_rng(1234)
+        self._proj = proj_rng.normal(size=(2, s))
+        self._proj /= np.linalg.norm(self._proj, axis=1, keepdims=True)
+        self._dedup: Dict[Tuple[int, int], int] = {}
+
+        self.features: List[Feature] = []
+        self._rows: List[np.ndarray] = []  # float64 host rows
+        self.candidates: List[CandidateBlock] = []  # last rung, on-the-fly only
+        self.n_rejected = {"unit": 0, "domain": 0, "value": 0, "dup": 0, "redundant": 0}
+
+        for i in range(p):
+            self._add_feature(
+                rung=0, unit=units[i], expr=str(names[i]), complexity=0,
+                values=primary_values[i],
+            )
+
+    # ------------------------------------------------------------------
+    # materialized storage
+    # ------------------------------------------------------------------
+    @property
+    def n_materialized(self) -> int:
+        return len(self._rows)
+
+    def values_matrix(self) -> np.ndarray:
+        """(n_materialized, n_samples) float64 host matrix."""
+        return np.stack(self._rows) if self._rows else np.zeros((0, self.n_samples))
+
+    def values_device(self) -> jnp.ndarray:
+        return jnp.asarray(self.values_matrix(), dtype=self.dtype)
+
+    def _dedup_key(self, values: np.ndarray) -> Optional[Tuple[int, int]]:
+        v = values - values.mean()
+        nrm = np.linalg.norm(v)
+        if nrm < _MIN_STD:
+            return None
+        v = v / nrm
+        p1, p2 = self._proj @ v
+        if p1 < 0 or (p1 == 0 and p2 < 0):
+            p1, p2 = -p1, -p2
+        return (int(round(p1 / _DEDUP_TOL)), int(round(p2 / _DEDUP_TOL)))
+
+    def _add_feature(
+        self, rung: int, unit: Unit, expr: str, complexity: int,
+        values: np.ndarray, op_id: Optional[int] = None,
+        child_a: Optional[int] = None, child_b: Optional[int] = None,
+        check_dup: bool = True,
+    ) -> Optional[Feature]:
+        key = self._dedup_key(values)
+        if key is None:
+            self.n_rejected["value"] += 1
+            return None
+        if check_dup:
+            # check neighbor buckets too: quantization can split equal values
+            # across adjacent buckets at bucket boundaries
+            for d1 in (-1, 0, 1):
+                for d2 in (-1, 0, 1):
+                    if (key[0] + d1, key[1] + d2) in self._dedup:
+                        self.n_rejected["dup"] += 1
+                        return None
+        fid = len(self.features)
+        feat = Feature(
+            fid=fid, rung=rung, unit=unit, expr=expr, complexity=complexity,
+            op_id=op_id, child_a=child_a, child_b=child_b, row=len(self._rows),
+            vmin=float(values.min()), vmax=float(values.max()),
+        )
+        self._dedup[key] = fid
+        self.features.append(feat)
+        self._rows.append(np.asarray(values, dtype=np.float64))
+        return feat
+
+    # ------------------------------------------------------------------
+    # candidate enumeration (host rules only — paper P2 "CPU side")
+    # ------------------------------------------------------------------
+    def _host_valid_children(
+        self, op: Operator, rung: int
+    ) -> Tuple[np.ndarray, np.ndarray, List[Unit]]:
+        """Enumerate child index pairs passing unit/domain/structural rules."""
+        feats = self.features
+        prev = [f for f in feats if f.rung == rung - 1]
+        lower = [f for f in feats if f.rung < rung - 1]
+        ia: List[int] = []
+        ib: List[int] = []
+        units: List[Unit] = []
+        if op.arity == 1:
+            for f in prev:
+                if ops_mod.is_redundant_unary(op.op_id, f.op_id):
+                    self.n_rejected["redundant"] += 1
+                    continue
+                u = op.unit_rule(f.unit)
+                if u is None:
+                    self.n_rejected["unit"] += 1
+                    continue
+                if not op.domain_rule(f.meta):
+                    self.n_rejected["domain"] += 1
+                    continue
+                ia.append(f.fid)
+                ib.append(f.fid)
+                units.append(u)
+        else:
+            # max(rung_a, rung_b) == rung - 1  =>  at least one child in prev.
+            for fa in prev:
+                others = prev + lower
+                for fb in others:
+                    if op.commutative and fb.fid < fa.fid:
+                        continue  # canonical order for commutative ops
+                    if fa.fid == fb.fid and not op.allow_same_child:
+                        continue
+                    u = op.unit_rule(fa.unit, fb.unit)
+                    if u is None:
+                        self.n_rejected["unit"] += 1
+                        continue
+                    if not op.domain_rule(fa.meta, fb.meta):
+                        self.n_rejected["domain"] += 1
+                        continue
+                    ia.append(fa.fid)
+                    ib.append(fb.fid)
+                    units.append(u)
+                    if not op.commutative and fa.fid != fb.fid:
+                        # also the swapped order if it is valid
+                        u2 = op.unit_rule(fb.unit, fa.unit)
+                        if u2 is not None and op.domain_rule(fb.meta, fa.meta):
+                            ia.append(fb.fid)
+                            ib.append(fa.fid)
+                            units.append(u2)
+                        elif u2 is None:
+                            self.n_rejected["unit"] += 1
+                        else:
+                            self.n_rejected["domain"] += 1
+        ia_arr = np.asarray(ia, dtype=np.int32)
+        ib_arr = np.asarray(ib, dtype=np.int32)
+        if self.max_pairs_per_op is not None and len(ia_arr) > self.max_pairs_per_op:
+            sel = self._rng.choice(len(ia_arr), self.max_pairs_per_op, replace=False)
+            sel.sort()
+            ia_arr, ib_arr = ia_arr[sel], ib_arr[sel]
+            units = [units[i] for i in sel]
+        return ia_arr, ib_arr, units
+
+    # ------------------------------------------------------------------
+    # device evaluation + value rules (paper P2 "GPU side")
+    # ------------------------------------------------------------------
+    def eval_candidates(
+        self, op_id: int, rows_a: np.ndarray, rows_b: np.ndarray,
+        values: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Evaluate op over child *rows*; returns (values (B,S), valid (B,))."""
+        x = self.values_matrix() if values is None else values
+        a = x[rows_a]
+        b = x[rows_b]
+        with np.errstate(all="ignore"):
+            v = np.asarray(apply_op(op_id, jnp.asarray(a), jnp.asarray(b)))
+        finite = np.isfinite(v).all(axis=1)
+        vabs = np.abs(np.where(np.isfinite(v), v, 0.0))
+        max_abs = vabs.max(axis=1)
+        std = v.std(axis=1, where=np.isfinite(v))
+        valid = (
+            finite
+            & (max_abs <= self.u_bound)
+            & (max_abs >= self.l_bound)
+            & (std > _MIN_STD)
+        )
+        return v, valid
+
+    # ------------------------------------------------------------------
+    # generation driver
+    # ------------------------------------------------------------------
+    def generate(self) -> "FeatureSpace":
+        for rung in range(1, self.max_rung + 1):
+            last = rung == self.max_rung
+            n_before = len(self.features)
+            for op in self.ops:  # operator outer loop (paper P1)
+                ia, ib, units = self._host_valid_children(op, rung)
+                if len(ia) == 0:
+                    continue
+                rows_a = np.asarray([self.features[i].row for i in ia], np.int32)
+                rows_b = np.asarray([self.features[i].row for i in ib], np.int32)
+                if last and self.on_the_fly:
+                    # paper P3: defer evaluation to SIS; store integer triples.
+                    self.candidates.append(CandidateBlock(op.op_id, rows_a, rows_b))
+                    continue
+                for lo in range(0, len(ia), self.eval_batch):
+                    hi = min(lo + self.eval_batch, len(ia))
+                    vals, valid = self.eval_candidates(
+                        op.op_id, rows_a[lo:hi], rows_b[lo:hi]
+                    )
+                    self.n_rejected["value"] += int((~valid).sum())
+                    for k in np.nonzero(valid)[0]:
+                        fa = self.features[int(ia[lo + k])]
+                        fb = self.features[int(ib[lo + k])]
+                        children = (fa.expr,) if op.arity == 1 else (fa.expr, fb.expr)
+                        self._add_feature(
+                            rung=rung, unit=units[lo + k],
+                            expr=ops_mod.expr_string(op, *children),
+                            complexity=ops_mod.complexity_of(
+                                op, fa.complexity, fb.complexity
+                            ),
+                            values=vals[k], op_id=op.op_id,
+                            child_a=fa.fid, child_b=fb.fid,
+                        )
+            log.info(
+                "rung %d: +%d materialized features (%d candidates deferred)",
+                rung, len(self.features) - n_before, self.n_candidates_deferred,
+            )
+        return self
+
+    # ------------------------------------------------------------------
+    # SIS-facing API
+    # ------------------------------------------------------------------
+    @property
+    def n_candidates_deferred(self) -> int:
+        return sum(len(c) for c in self.candidates)
+
+    @property
+    def n_total(self) -> int:
+        return len(self.features) + self.n_candidates_deferred
+
+    def iter_candidate_batches(self, batch: int) -> Iterator[CandidateBlock]:
+        """Yield deferred candidates in same-operator blocks of <= batch."""
+        for blk in self.candidates:
+            for lo in range(0, len(blk), batch):
+                hi = min(lo + batch, len(blk))
+                yield CandidateBlock(blk.op_id, blk.child_a[lo:hi], blk.child_b[lo:hi])
+
+    def feature_by_row(self, row: int) -> Feature:
+        for f in self.features:
+            if f.row == row:
+                return f
+        raise KeyError(row)
+
+    def materialize_candidate(
+        self, op_id: int, row_a: int, row_b: int
+    ) -> Optional[Feature]:
+        """Turn a SIS-selected deferred candidate into a real Feature."""
+        op = ops_mod.OPS[op_id]
+        fa = self.feature_by_row(int(row_a))
+        fb = self.feature_by_row(int(row_b))
+        vals, valid = self.eval_candidates(
+            op_id, np.asarray([row_a]), np.asarray([row_b])
+        )
+        if not bool(valid[0]):
+            return None
+        u = op.unit_rule(fa.unit) if op.arity == 1 else op.unit_rule(fa.unit, fb.unit)
+        if u is None:
+            return None
+        children = (fa.expr,) if op.arity == 1 else (fa.expr, fb.expr)
+        return self._add_feature(
+            rung=self.max_rung, unit=u,
+            expr=ops_mod.expr_string(op, *children),
+            complexity=ops_mod.complexity_of(op, fa.complexity, fb.complexity),
+            values=vals[0], op_id=op_id, child_a=fa.fid, child_b=fb.fid,
+        )

@@ -1,0 +1,284 @@
+"""ℓ0-regularized descriptor search — the third SISSO phase.
+
+Given the ``m`` SIS-selected features, score **every** n-tuple by its
+least-squares fit to the target and return the best models (paper §II.D:
+"assemble the descriptor matrix → QR factorization → least squares →
+mean squared deviation" for ~10^9–10^10 tuples).
+
+Two engines:
+
+* :func:`score_tuples_qr` — **paper-faithful baseline**: per tuple, assemble
+  the (S × (n+1)) design matrix (per-task intercept column) and solve by QR,
+  batched with ``vmap``.  O(S·n²) work per tuple; this is the GPU algorithm
+  (P4) transcribed.
+* :func:`score_tuples_gram` — **TPU adaptation**: precompute once per task
+  the Gram statistics ``G = X Xᵀ, s = X·1, b = X·y, n, Σy, yᵀy`` (MXU
+  matmuls), then each tuple's least-squares problem is the (n+1)×(n+1) SPD
+  system gathered from them — O(n³) per tuple, zero O(S) work, identical
+  minimizer.  The blocked/tiled form of this engine is the Pallas kernel in
+  ``kernels/l0_tile.py``.
+
+Both engines support multi-task SISSO: one coefficient set *per task*, score
+= total SSE over tasks (paper §III.A: "same descriptor matrix, but different
+coefficient matrices for each task").
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sis import TaskLayout
+
+_JITTER = 1e-10
+
+
+# ---------------------------------------------------------------------------
+# Gram statistics (computed once per ℓ0 sweep)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GramStats:
+    """Per-task sufficient statistics for least squares over feature tuples."""
+
+    gram: jnp.ndarray    # (T, m, m)   X_t X_tᵀ
+    fsum: jnp.ndarray    # (T, m)      X_t · 1
+    b: jnp.ndarray       # (T, m)      X_t y_t
+    n: jnp.ndarray       # (T,)        samples per task
+    ysum: jnp.ndarray    # (T,)
+    yty: jnp.ndarray     # (T,)
+    m: int
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.gram.shape[0])
+
+
+def compute_gram_stats(
+    x: jnp.ndarray,  # (m, S) feature values (standardize upstream for conditioning)
+    y: jnp.ndarray,  # (S,)
+    layout: TaskLayout,
+    dtype=jnp.float64,
+) -> GramStats:
+    x = jnp.asarray(x, dtype)
+    y = jnp.asarray(y, dtype)
+    grams, fsums, bs, ns, ysums, ytys = [], [], [], [], [], []
+    for lo, hi in layout.slices:
+        xt = x[:, lo:hi]
+        yt = y[lo:hi]
+        grams.append(xt @ xt.T)
+        fsums.append(xt.sum(axis=1))
+        bs.append(xt @ yt)
+        ns.append(hi - lo)
+        ysums.append(yt.sum())
+        ytys.append(yt @ yt)
+    return GramStats(
+        gram=jnp.stack(grams), fsum=jnp.stack(fsums), b=jnp.stack(bs),
+        n=jnp.asarray(ns, dtype), ysum=jnp.stack(ysums), yty=jnp.stack(ytys),
+        m=int(x.shape[0]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine 1: Gram-cached scoring (TPU-native)
+# ---------------------------------------------------------------------------
+
+def _solve_tuple_task(g, s_, b, n, ysum, yty, idx):
+    """SSE of the LSQ fit (with intercept) for one tuple in one task."""
+    gs = g[jnp.ix_(idx, idx)]                       # (n, n)
+    ss = s_[idx]                                    # (n,)
+    bs = b[idx]                                     # (n,)
+    k = idx.shape[0]
+    a = jnp.zeros((k + 1, k + 1), g.dtype)
+    a = a.at[:k, :k].set(gs)
+    a = a.at[:k, k].set(ss)
+    a = a.at[k, :k].set(ss)
+    a = a.at[k, k].set(n)
+    rhs = jnp.concatenate([bs, ysum[None]])
+    a = a + _JITTER * jnp.eye(k + 1, dtype=g.dtype)
+    c = jax.scipy.linalg.solve(a, rhs, assume_a="pos")
+    sse = yty - c @ rhs
+    bad = ~jnp.isfinite(sse)
+    return jnp.where(bad, jnp.inf, jnp.maximum(sse, 0.0))
+
+
+def score_tuples_gram(stats: GramStats, tuples: jnp.ndarray) -> jnp.ndarray:
+    """Total SSE over tasks for each tuple.  tuples: (B, n) int32."""
+
+    def per_tuple(idx):
+        per_task = jax.vmap(_solve_tuple_task, in_axes=(0, 0, 0, 0, 0, 0, None))(
+            stats.gram, stats.fsum, stats.b, stats.n, stats.ysum, stats.yty, idx
+        )
+        return per_task.sum()
+
+    return jax.vmap(per_tuple)(jnp.asarray(tuples))
+
+
+def coefficients_for(
+    stats: GramStats, idx: Sequence[int]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(coefs (T,n), intercepts (T,)) of the LSQ fit for one tuple."""
+    idx = jnp.asarray(idx, jnp.int32)
+    coefs, intercepts = [], []
+    for t in range(stats.n_tasks):
+        k = idx.shape[0]
+        gs = stats.gram[t][jnp.ix_(idx, idx)]
+        ss = stats.fsum[t][idx]
+        a = jnp.zeros((k + 1, k + 1), gs.dtype)
+        a = a.at[:k, :k].set(gs).at[:k, k].set(ss).at[k, :k].set(ss)
+        a = a.at[k, k].set(stats.n[t]) + _JITTER * jnp.eye(k + 1, dtype=gs.dtype)
+        rhs = jnp.concatenate([stats.b[t][idx], stats.ysum[t][None]])
+        c = jax.scipy.linalg.solve(a, rhs, assume_a="pos")
+        coefs.append(np.asarray(c[:k]))
+        intercepts.append(float(c[k]))
+    return np.stack(coefs), np.asarray(intercepts)
+
+
+# ---------------------------------------------------------------------------
+# engine 2: paper-faithful batched QR (baseline + oracle)
+# ---------------------------------------------------------------------------
+
+def score_tuples_qr(
+    x: jnp.ndarray,  # (m, S)
+    y: jnp.ndarray,  # (S,)
+    layout: TaskLayout,
+    tuples: jnp.ndarray,  # (B, n)
+    dtype=jnp.float64,
+) -> jnp.ndarray:
+    """Per-tuple SSE via explicit design-matrix QR (paper §II.D steps)."""
+    x = jnp.asarray(x, dtype)
+    y = jnp.asarray(y, dtype)
+    tuples = jnp.asarray(tuples)
+
+    def one_task(lo: int, hi: int):
+        xt = x[:, lo:hi]
+        yt = y[lo:hi]
+
+        def per_tuple(idx):
+            a = xt[idx].T  # (S_t, n)
+            a = jnp.concatenate([a, jnp.ones((a.shape[0], 1), dtype)], axis=1)
+            q, r = jnp.linalg.qr(a)
+            c = jax.scipy.linalg.solve_triangular(r, q.T @ yt, lower=False)
+            resid = yt - a @ c
+            return resid @ resid
+
+        return jax.vmap(per_tuple)(tuples)
+
+    total = jnp.zeros((tuples.shape[0],), dtype)
+    for lo, hi in layout.slices:
+        total = total + one_task(lo, hi)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# tuple-space enumeration (blocked; the unit of distribution & journaling)
+# ---------------------------------------------------------------------------
+
+def n_models(m: int, n_dim: int) -> int:
+    """C(m, n) — paper Fig. 1d."""
+    out = 1
+    for i in range(n_dim):
+        out = out * (m - i) // (i + 1)
+    return out
+
+
+def tuple_blocks(m: int, n_dim: int, block: int) -> Iterator[np.ndarray]:
+    """Yield (≤block, n_dim) int32 arrays covering all C(m, n_dim) tuples.
+
+    Deterministic order => a block index fully identifies its tuples, which is
+    what the fault-tolerance work journal records (runtime/journal.py).
+    """
+    if n_dim == 1:
+        idx = np.arange(m, dtype=np.int32)[:, None]
+        for lo in range(0, m, block):
+            yield idx[lo : lo + block]
+        return
+    if n_dim == 2:
+        iu = np.triu_indices(m, k=1)
+        pairs = np.stack(iu, axis=1).astype(np.int32)
+        for lo in range(0, len(pairs), block):
+            yield pairs[lo : lo + block]
+        return
+    # generic n: chunked combinations (host generator; n>=3 paths)
+    buf: List[Tuple[int, ...]] = []
+    for combo in itertools.combinations(range(m), n_dim):
+        buf.append(combo)
+        if len(buf) == block:
+            yield np.asarray(buf, np.int32)
+            buf = []
+    if buf:
+        yield np.asarray(buf, np.int32)
+
+
+@dataclasses.dataclass
+class L0Result:
+    tuples: np.ndarray   # (k, n) best tuples, ascending SSE
+    sses: np.ndarray     # (k,)
+    n_evaluated: int
+
+
+def l0_search(
+    x: np.ndarray,  # (m, S) subspace feature values
+    y: np.ndarray,  # (S,)
+    layout: TaskLayout,
+    n_dim: int,
+    n_keep: int = 10,
+    block: int = 65536,  # paper: "batch sizes should exceed 65536"
+    engine: str = "gram",
+    use_kernel: bool = False,
+    journal=None,
+    dtype=jnp.float64,
+) -> L0Result:
+    """Exhaustive n_dim-tuple search over the SIS subspace.
+
+    ``engine``: 'gram' (TPU-native) or 'qr' (paper-faithful baseline).
+    ``use_kernel`` routes n_dim==2 blocks through the Pallas tile kernel.
+    ``journal``: optional runtime.journal.WorkJournal for restartable sweeps.
+    """
+    x = jnp.asarray(x, dtype)
+    y = jnp.asarray(y, dtype)
+    m = int(x.shape[0])
+    stats = compute_gram_stats(x, y, layout, dtype) if engine == "gram" else None
+
+    if use_kernel:
+        from ..kernels import ops as kops
+
+    best_sse = np.full((n_keep,), np.inf)
+    best_tuples = np.zeros((n_keep, n_dim), np.int64)
+    n_eval = 0
+
+    if journal is not None and journal.has_state():
+        best_sse, best_tuples, start_block = journal.restore()
+    else:
+        start_block = 0
+
+    score_fn = None
+    if engine == "gram":
+        score_fn = jax.jit(lambda tt: score_tuples_gram(stats, tt))
+    else:
+        score_fn = jax.jit(lambda tt: score_tuples_qr(x, y, layout, tt, dtype))
+
+    for bi, tuples in enumerate(tuple_blocks(m, n_dim, block)):
+        if bi < start_block:
+            n_eval += len(tuples)
+            continue
+        if use_kernel and n_dim == 2 and engine == "gram":
+            sses = np.asarray(kops.l0_score_pairs(stats, jnp.asarray(tuples)))
+        else:
+            sses = np.asarray(score_fn(jnp.asarray(tuples)))
+        n_eval += len(tuples)
+        # merge block top-k into running top-k (host)
+        k = min(n_keep, len(sses))
+        part = np.argpartition(sses, k - 1)[:k]
+        cat_sse = np.concatenate([best_sse, sses[part]])
+        cat_tup = np.concatenate([best_tuples, tuples[part].astype(np.int64)])
+        order = np.argsort(cat_sse, kind="stable")[:n_keep]
+        best_sse, best_tuples = cat_sse[order], cat_tup[order]
+        if journal is not None:
+            journal.record(bi + 1, best_sse, best_tuples)
+
+    return L0Result(tuples=best_tuples, sses=best_sse, n_evaluated=n_eval)

@@ -1,0 +1,61 @@
+"""SISSO model container: an n-dimensional analytical descriptor + fit."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from .feature_space import Feature
+from .sis import TaskLayout
+
+
+@dataclasses.dataclass
+class SissoModel:
+    """y ≈ c0_t + Σ_i c_{t,i} · f_i(x)   (per-task coefficients c_t)."""
+
+    features: List[Feature]
+    coefs: np.ndarray       # (T, n)
+    intercepts: np.ndarray  # (T,)
+    layout: TaskLayout
+    sse: float
+
+    @property
+    def dim(self) -> int:
+        return len(self.features)
+
+    def predict(self, feature_values: np.ndarray) -> np.ndarray:
+        """feature_values: (n, S) rows aligned with self.features."""
+        s = feature_values.shape[1]
+        out = np.zeros(s)
+        for t, (lo, hi) in enumerate(self.layout.slices):
+            out[lo:hi] = (
+                self.coefs[t] @ feature_values[:, lo:hi] + self.intercepts[t]
+            )
+        return out
+
+    def residual(self, y: np.ndarray, feature_values: np.ndarray) -> np.ndarray:
+        return np.asarray(y) - self.predict(feature_values)
+
+    def rmse(self, y: np.ndarray, feature_values: np.ndarray) -> float:
+        r = self.residual(y, feature_values)
+        return float(np.sqrt(np.mean(r * r)))
+
+    def r2(self, y: np.ndarray, feature_values: np.ndarray) -> float:
+        y = np.asarray(y)
+        r = self.residual(y, feature_values)
+        ss_tot = float(((y - y.mean()) ** 2).sum())
+        return 1.0 - float((r * r).sum()) / max(ss_tot, 1e-300)
+
+    def equation(self) -> str:
+        terms = []
+        for t in range(len(self.intercepts)):
+            parts = [f"{self.intercepts[t]:+.6g}"]
+            for c, f in zip(self.coefs[t], self.features):
+                parts.append(f"{c:+.6g}*{f.expr}")
+            label = f"task{t}: " if len(self.intercepts) > 1 else ""
+            terms.append(label + " ".join(parts))
+        return "\n".join(terms)
+
+    def __str__(self) -> str:
+        return f"SissoModel(dim={self.dim}, sse={self.sse:.6g})\n{self.equation()}"

@@ -1,0 +1,240 @@
+"""SISSO operator set.
+
+The paper's operator pool (§III.A, Table II): ``+, -, *, /, |x-y|, sqrt,
+cbrt, x^2, x^3, x^-1, log, exp, exp(-x), |x|, sin, cos, x^6``.
+
+Each operator carries three *rule* layers, mirroring the paper's CPU/GPU rule
+split (§II.C):
+
+* ``unit_rule``   — dimensional analysis on child units (host, cheap).
+* ``domain_rule`` — host-side check on child value metadata (min/max), e.g.
+  "no zeros in the divisor child".  These prevent ever evaluating invalid
+  candidates (paper: "rules based on child features can prevent unnecessary
+  calculations").
+* value rules     — bounds/NaN/variance checks on the *evaluated* values;
+  these are fused into the device kernels (see kernels/fused_sis.py and
+  core/feature_space.py) exactly like the paper's GPU-side validity list.
+
+``apply_op`` is the single source of truth for the math, shared by the pure
+JAX path, the Pallas kernels, and the expression re-evaluator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .units import Unit
+
+# Safe ranges for transcendental arguments (fp32-safe).
+_EXP_MAX = 80.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ChildMeta:
+    """Host-side per-feature value metadata used by domain rules."""
+
+    vmin: float
+    vmax: float
+
+    @property
+    def straddles_zero(self) -> bool:
+        return self.vmin <= 0.0 <= self.vmax
+
+
+@dataclasses.dataclass(frozen=True)
+class Operator:
+    op_id: int
+    name: str
+    arity: int
+    fmt: str  # e.g. "({0} + {1})"
+    commutative: bool
+    unit_rule: Callable[..., Optional[Unit]]
+    domain_rule: Callable[..., bool]
+    allow_same_child: bool = False  # for binary ops: allow i == j
+
+
+# ---------------------------------------------------------------------------
+# unit rules
+# ---------------------------------------------------------------------------
+
+def _u_same(a: Unit, b: Unit) -> Optional[Unit]:
+    return a if a == b else None
+
+
+def _u_mul(a: Unit, b: Unit) -> Optional[Unit]:
+    return a * b
+
+
+def _u_div(a: Unit, b: Unit) -> Optional[Unit]:
+    return a / b
+
+
+def _u_dimensionless(a: Unit) -> Optional[Unit]:
+    return a if a.is_dimensionless else None
+
+
+def _u_pow(p) -> Callable[[Unit], Optional[Unit]]:
+    def rule(a: Unit) -> Optional[Unit]:
+        return a ** p
+
+    return rule
+
+
+def _u_identity(a: Unit) -> Optional[Unit]:
+    return a
+
+
+# ---------------------------------------------------------------------------
+# domain rules (host, on child min/max metadata)
+# ---------------------------------------------------------------------------
+
+def _d_any(*metas: ChildMeta) -> bool:
+    return True
+
+
+def _d_div(a: ChildMeta, b: ChildMeta) -> bool:
+    # paper: "we avoid constructing features that contain zeros in its second
+    # child for the divisor operator"
+    return not b.straddles_zero
+
+
+def _d_inv(a: ChildMeta) -> bool:
+    return not a.straddles_zero
+
+
+def _d_log(a: ChildMeta) -> bool:
+    return a.vmin > 0.0
+
+
+def _d_sqrt(a: ChildMeta) -> bool:
+    return a.vmin >= 0.0
+
+
+def _d_exp(a: ChildMeta) -> bool:
+    return a.vmax < _EXP_MAX and a.vmin > -_EXP_MAX
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+ADD, SUB, MUL, DIV, ABS_DIFF = 0, 1, 2, 3, 4
+EXP, NEG_EXP, LOG, ABS, SQRT = 5, 6, 7, 8, 9
+CBRT, SQ, CB, INV, SIN, COS, SIX_POW = 10, 11, 12, 13, 14, 15, 16
+
+OPS: Dict[int, Operator] = {}
+
+
+def _register(op: Operator) -> Operator:
+    OPS[op.op_id] = op
+    return op
+
+
+_register(Operator(ADD, "add", 2, "({0} + {1})", True, _u_same, _d_any))
+_register(Operator(SUB, "sub", 2, "({0} - {1})", False, _u_same, _d_any))
+_register(Operator(MUL, "mul", 2, "({0} * {1})", True, _u_mul, _d_any))
+_register(Operator(DIV, "div", 2, "({0} / {1})", False, _u_div, _d_div))
+_register(Operator(ABS_DIFF, "abs_diff", 2, "|{0} - {1}|", True, _u_same, _d_any))
+_register(Operator(EXP, "exp", 1, "exp({0})", False, _u_dimensionless, _d_exp))
+_register(Operator(NEG_EXP, "neg_exp", 1, "exp(-{0})", False, _u_dimensionless, _d_exp))
+_register(Operator(LOG, "log", 1, "ln({0})", False, _u_dimensionless, _d_log))
+_register(Operator(ABS, "abs", 1, "|{0}|", False, _u_identity, _d_any))
+_register(Operator(SQRT, "sqrt", 1, "sqrt({0})", False, _u_pow("1/2"), _d_sqrt))
+_register(Operator(CBRT, "cbrt", 1, "cbrt({0})", False, _u_pow("1/3"), _d_any))
+_register(Operator(SQ, "sq", 1, "({0})^2", False, _u_pow(2), _d_any))
+_register(Operator(CB, "cb", 1, "({0})^3", False, _u_pow(3), _d_any))
+_register(Operator(INV, "inv", 1, "({0})^-1", False, _u_pow(-1), _d_inv))
+_register(Operator(SIN, "sin", 1, "sin({0})", False, _u_dimensionless, _d_any))
+_register(Operator(COS, "cos", 1, "cos({0})", False, _u_dimensionless, _d_any))
+_register(Operator(SIX_POW, "six_pow", 1, "({0})^6", False, _u_pow(6), _d_any))
+
+OP_BY_NAME: Dict[str, Operator] = {op.name: op for op in OPS.values()}
+
+# Default pools matching the paper's two test cases (Table II).
+THERMAL_OPS: Tuple[str, ...] = (
+    "add", "sub", "mul", "div", "abs_diff", "sqrt", "cbrt", "sq", "cb",
+    "inv", "log", "exp", "neg_exp", "abs",
+)
+KAGGLE_OPS: Tuple[str, ...] = (
+    "add", "sub", "mul", "div", "abs_diff", "sqrt", "cbrt", "sq", "cb",
+    "inv", "exp",
+)
+
+# Unary chains that simplify to existing expressions (light version of the
+# SISSO++ simplification rules): applying `outer` on a feature whose root
+# operator is `inner` is skipped.
+_INVERSE_PAIRS = {
+    (EXP, LOG), (LOG, EXP), (NEG_EXP, LOG),
+    (SQ, SQRT), (SQRT, SQ), (CB, CBRT), (CBRT, CB),
+    (INV, INV), (ABS, ABS), (ABS, ABS_DIFF), (EXP, NEG_EXP), (NEG_EXP, EXP),
+}
+
+
+def is_redundant_unary(outer_op_id: int, child_root_op_id: Optional[int]) -> bool:
+    if child_root_op_id is None:
+        return False
+    return (outer_op_id, child_root_op_id) in _INVERSE_PAIRS
+
+
+# ---------------------------------------------------------------------------
+# math (shared by jnp path, Pallas kernels, and re-evaluation)
+# ---------------------------------------------------------------------------
+
+def apply_op(op_id: int, a, b=None):
+    """Apply operator ``op_id`` (static python int) elementwise."""
+    if op_id == ADD:
+        return a + b
+    if op_id == SUB:
+        return a - b
+    if op_id == MUL:
+        return a * b
+    if op_id == DIV:
+        return a / b
+    if op_id == ABS_DIFF:
+        return jnp.abs(a - b)
+    if op_id == EXP:
+        return jnp.exp(a)
+    if op_id == NEG_EXP:
+        return jnp.exp(-a)
+    if op_id == LOG:
+        return jnp.log(a)
+    if op_id == ABS:
+        return jnp.abs(a)
+    if op_id == SQRT:
+        return jnp.sqrt(a)
+    if op_id == CBRT:
+        return jnp.cbrt(a)
+    if op_id == SQ:
+        return a * a
+    if op_id == CB:
+        return a * a * a
+    if op_id == INV:
+        return 1.0 / a
+    if op_id == SIN:
+        return jnp.sin(a)
+    if op_id == COS:
+        return jnp.cos(a)
+    if op_id == SIX_POW:
+        a2 = a * a
+        return a2 * a2 * a2
+    raise ValueError(f"unknown op_id {op_id}")
+
+
+def op_pool(names) -> Tuple[Operator, ...]:
+    return tuple(OP_BY_NAME[n] for n in names)
+
+
+def complexity_of(op: Operator, *child_complexities: int) -> int:
+    return 1 + sum(child_complexities)
+
+
+def expr_string(op: Operator, *child_exprs: str) -> str:
+    return op.fmt.format(*child_exprs)
+
+
+def nan_to_big(x):
+    """Map non-finite values to a large sentinel so max-reductions flag them."""
+    return jnp.where(jnp.isfinite(x), x, jnp.asarray(math.inf, x.dtype))

@@ -1,0 +1,247 @@
+"""Sure-independence screening (SIS) — the second SISSO phase.
+
+Scores every candidate feature by its Pearson correlation (paper Eq. 1)
+against the target (dimension 1) or the residuals of the best previous-
+dimension models, and selects the top ``n_sis`` features per dimension.
+
+Multi-task SISSO: samples are partitioned into tasks; correlations are
+computed *within* each task and combined as the mean of |r| over tasks; a
+feature's score is the max over the supplied residuals (paper §III.A.1 uses
+"ten residuals per SIS iteration").
+
+Scalable formulation (the whole screen is three matmuls + an epilogue):
+let ``M (T,S)`` be the 0/1 task-membership matrix and ``Ytilde (R*T, S)`` the
+residuals centered and L2-normalized within each task and zero elsewhere.
+For a block of candidate values ``V (B,S)``::
+
+    sums  = V @ M.T          # (B,T)   per-task sums
+    sumsq = (V*V) @ M.T      # (B,T)
+    dots  = V @ Ytilde.T     # (B,R*T) numerators (residuals are centered)
+    r[b,r,t] = dots[b,r,t] / sqrt(sumsq[b,t] - sums[b,t]^2 / n_t)
+
+The same contraction is what kernels/fused_sis.py fuses with on-the-fly
+feature generation (paper P3) so last-rung values never touch HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .feature_space import CandidateBlock, Feature, FeatureSpace
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskLayout:
+    """Static description of the task partition (samples grouped by task)."""
+
+    slices: Tuple[Tuple[int, int], ...]  # [(start, stop)] per task
+
+    @staticmethod
+    def single(n_samples: int) -> "TaskLayout":
+        return TaskLayout(((0, n_samples),))
+
+    @staticmethod
+    def from_task_ids(task_ids: np.ndarray) -> "TaskLayout":
+        task_ids = np.asarray(task_ids)
+        if not (np.diff(task_ids) >= 0).all():
+            raise ValueError("samples must be grouped (sorted) by task id")
+        slices = []
+        for t in np.unique(task_ids):
+            idx = np.nonzero(task_ids == t)[0]
+            slices.append((int(idx[0]), int(idx[-1]) + 1))
+        return TaskLayout(tuple(slices))
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.slices)
+
+    def membership(self, n_cols: int, dtype=np.float32) -> np.ndarray:
+        m = np.zeros((self.n_tasks, n_cols), dtype)
+        for t, (lo, hi) in enumerate(self.slices):
+            m[t, lo:hi] = 1.0
+        return m
+
+    def counts(self) -> np.ndarray:
+        return np.asarray([hi - lo for lo, hi in self.slices], np.float32)
+
+
+@dataclasses.dataclass
+class ScoreContext:
+    """Precomputed screening operands, padded to ``s_pad`` columns."""
+
+    membership: np.ndarray  # (T, s_pad)
+    y_tilde: np.ndarray     # (R*T, s_pad) per-task centered+normalized residuals
+    counts: np.ndarray      # (T,)
+    n_residuals: int
+    s: int                  # true sample count
+    s_pad: int
+
+
+def build_score_context(
+    residuals: np.ndarray,  # (R, S)
+    layout: TaskLayout,
+    s_pad: Optional[int] = None,
+    dtype=np.float32,
+) -> ScoreContext:
+    residuals = np.atleast_2d(np.asarray(residuals, np.float64))
+    r, s = residuals.shape
+    s_pad = s_pad or s
+    t = layout.n_tasks
+    m = np.zeros((t, s_pad), dtype)
+    m[:, :s] = layout.membership(s)
+    y_tilde = np.zeros((r * t, s_pad), np.float64)
+    for ri in range(r):
+        for ti, (lo, hi) in enumerate(layout.slices):
+            seg = residuals[ri, lo:hi]
+            seg = seg - seg.mean()
+            nrm = np.linalg.norm(seg)
+            if nrm > _EPS:
+                y_tilde[ri * t + ti, lo:hi] = seg / nrm
+    return ScoreContext(
+        membership=m, y_tilde=y_tilde.astype(dtype), counts=layout.counts(),
+        n_residuals=r, s=s, s_pad=s_pad,
+    )
+
+
+def scores_from_reductions(
+    sums: jnp.ndarray,   # (B, T)
+    sumsq: jnp.ndarray,  # (B, T)
+    dots: jnp.ndarray,   # (B, R*T)
+    counts: jnp.ndarray,  # (T,)
+    n_residuals: int,
+) -> jnp.ndarray:
+    """Epilogue: per-task Pearson r -> mean_t |r| -> max over residuals."""
+    b, t = sums.shape
+    var = sumsq - sums * sums / counts[None, :]
+    inv_norm = jax.lax.rsqrt(jnp.maximum(var, _EPS))
+    r = dots.reshape(b, n_residuals, t) * inv_norm[:, None, :]
+    score = jnp.abs(r).mean(axis=2).max(axis=1)
+    return jnp.where(jnp.isfinite(score), score, -jnp.inf)
+
+
+def score_block(values: jnp.ndarray, ctx: ScoreContext) -> jnp.ndarray:
+    """Pure-jnp scoring of a (B, s_pad) value block (oracle path)."""
+    m = jnp.asarray(ctx.membership, values.dtype)
+    yt = jnp.asarray(ctx.y_tilde, values.dtype)
+    sums = values @ m.T
+    sumsq = (values * values) @ m.T
+    dots = values @ yt.T
+    return scores_from_reductions(
+        sums, sumsq, dots, jnp.asarray(ctx.counts, values.dtype), ctx.n_residuals
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side top-k merge (paper: coefficients "transferred back to CPU, ...
+# used to rank the features and select the top candidates")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TopK:
+    k: int
+    scores: np.ndarray = dataclasses.field(default_factory=lambda: np.zeros(0))
+    tags: list = dataclasses.field(default_factory=list)
+
+    def push(self, scores: np.ndarray, tags: List[tuple]) -> None:
+        scores = np.asarray(scores, np.float64)
+        keep = np.isfinite(scores) & (scores > -np.inf)
+        scores, tags = scores[keep], [t for t, k in zip(tags, keep) if k]
+        if len(scores) == 0:
+            return
+        all_scores = np.concatenate([self.scores, scores])
+        all_tags = self.tags + tags
+        if len(all_scores) > self.k:
+            idx = np.argpartition(-all_scores, self.k - 1)[: self.k]
+            idx = idx[np.argsort(-all_scores[idx])]
+        else:
+            idx = np.argsort(-all_scores)
+        self.scores = all_scores[idx]
+        self.tags = [all_tags[i] for i in idx]
+
+
+# ---------------------------------------------------------------------------
+# full screen over a FeatureSpace
+# ---------------------------------------------------------------------------
+
+def sis_screen(
+    fspace: FeatureSpace,
+    residuals: np.ndarray,  # (R, S)
+    layout: TaskLayout,
+    n_sis: int,
+    exclude: Set[int],
+    batch: int = 1 << 16,
+    use_kernel: bool = False,
+    overselect: int = 2,
+) -> Tuple[List[Feature], np.ndarray]:
+    """Select the top-``n_sis`` unselected features; returns (features, scores).
+
+    Screens both materialized features and deferred last-rung candidates
+    (paper P3 on-the-fly path).  ``use_kernel`` routes deferred blocks through
+    the fused Pallas kernel (interpret mode on CPU).
+    """
+    ctx = build_score_context(residuals, layout)
+    x = fspace.values_matrix().astype(np.float64)
+
+    top = TopK(k=n_sis * overselect)
+
+    # 1) materialized features (all rungs kept in memory)
+    if len(x):
+        for lo in range(0, len(x), batch):
+            hi = min(lo + batch, len(x))
+            s = np.array(score_block(jnp.asarray(x[lo:hi], jnp.float64), ctx))
+            tags = [("feat", fid) for fid in range(lo, hi)]
+            # mask out already-selected features
+            for i, fid in enumerate(range(lo, hi)):
+                if fid in exclude:
+                    s[i] = -np.inf
+            top.push(s, tags)
+
+    # 2) deferred last-rung candidates: generate -> score -> discard
+    if fspace.n_candidates_deferred:
+        if use_kernel:
+            from ..kernels import ops as kops
+        for blk in fspace.iter_candidate_batches(batch):
+            if use_kernel:
+                s = np.asarray(
+                    kops.fused_gen_sis(
+                        blk.op_id,
+                        jnp.asarray(x[blk.child_a], jnp.float32),
+                        jnp.asarray(x[blk.child_b], jnp.float32),
+                        ctx,
+                        l_bound=fspace.l_bound,
+                        u_bound=fspace.u_bound,
+                    )
+                )
+            else:
+                vals, valid = fspace.eval_candidates(blk.op_id, blk.child_a, blk.child_b)
+                s = np.asarray(score_block(jnp.asarray(vals, jnp.float64), ctx))
+                s = np.where(valid, s, -np.inf)
+            tags = [
+                ("cand", blk.op_id, int(a), int(b))
+                for a, b in zip(blk.child_a, blk.child_b)
+            ]
+            top.push(s, tags)
+
+    # 3) materialize winners, skipping dups, until n_sis collected
+    selected: List[Feature] = []
+    sel_scores: List[float] = []
+    for score, tag in zip(top.scores, top.tags):
+        if len(selected) >= n_sis:
+            break
+        if tag[0] == "feat":
+            feat = fspace.features[tag[1]]
+            if feat.fid in exclude:
+                continue
+        else:
+            feat = fspace.materialize_candidate(tag[1], tag[2], tag[3])
+            if feat is None:  # value-duplicate of an existing feature
+                continue
+        selected.append(feat)
+        sel_scores.append(float(score))
+    return selected, np.asarray(sel_scores)

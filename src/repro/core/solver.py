@@ -1,0 +1,170 @@
+"""SISSO driver: feature creation → (SIS → ℓ0)* over dimensions.
+
+Mirrors the descriptor-identification flowchart of paper Fig. 1b:
+
+    S = ∅;  Δ_0 = P (the target property)
+    for dim d = 1..D:
+        S += top-n_sis features by projection score against Δ_{d-1}
+        model_d = argmin over all d-tuples of S of the LSQ error  (ℓ0)
+        Δ_d = residuals of the best n_residual models of dim d
+
+The 1-dimensional model is the exact ℓ0 solution over the full space; higher
+dims search the accumulated SIS subspace (paper §II).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..precision import set_precision
+from .feature_space import FeatureSpace
+from .l0 import coefficients_for, compute_gram_stats, l0_search
+from .model import SissoModel
+from .sis import TaskLayout, sis_screen
+from .units import Unit
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class SissoConfig:
+    max_rung: int = 2
+    n_dim: int = 2
+    n_sis: int = 50
+    n_residual: int = 10  # paper: "ten residuals per SIS iteration"
+    l_bound: float = 1e-5
+    u_bound: float = 1e8
+    op_names: Sequence[str] = ("add", "sub", "mul", "div", "sq", "sqrt", "inv")
+    on_the_fly_last_rung: bool = False  # paper P3
+    l0_block: int = 65536               # paper: ℓ0 batches ≥ 65536
+    sis_batch: int = 1 << 16
+    l0_engine: str = "gram"             # 'gram' (TPU-native) | 'qr' (paper-faithful)
+    use_kernels: bool = False           # route hot loops through Pallas
+    precision: str = "fp64"
+    max_pairs_per_op: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SissoFit:
+    models_by_dim: Dict[int, List[SissoModel]]
+    fspace: FeatureSpace
+    timings: Dict[str, float]
+
+    def best(self, dim: Optional[int] = None) -> SissoModel:
+        if dim is None:
+            dim = max(self.models_by_dim)
+        return self.models_by_dim[dim][0]
+
+
+class SissoRegressor:
+    """End-to-end SISSO (single- and multi-task)."""
+
+    def __init__(self, config: SissoConfig):
+        self.cfg = config
+        self.dtype = set_precision(config.precision)
+
+    def fit(
+        self,
+        primary_values: np.ndarray,   # (P, S)
+        y: np.ndarray,                # (S,)
+        names: Sequence[str],
+        units: Optional[Sequence[Unit]] = None,
+        task_ids: Optional[np.ndarray] = None,
+        journal=None,
+    ) -> SissoFit:
+        cfg = self.cfg
+        y = np.asarray(y, np.float64)
+        s = y.shape[0]
+        layout = (
+            TaskLayout.from_task_ids(task_ids)
+            if task_ids is not None
+            else TaskLayout.single(s)
+        )
+        timings: Dict[str, float] = {}
+
+        # ---- phase 1: feature creation -------------------------------
+        t0 = time.perf_counter()
+        fspace = FeatureSpace(
+            primary_values, names, units,
+            op_names=cfg.op_names, max_rung=cfg.max_rung,
+            l_bound=cfg.l_bound, u_bound=cfg.u_bound,
+            on_the_fly_last_rung=cfg.on_the_fly_last_rung,
+            max_pairs_per_op=cfg.max_pairs_per_op, seed=cfg.seed,
+        ).generate()
+        timings["fc"] = time.perf_counter() - t0
+        log.info(
+            "FC: %d materialized + %d deferred candidates (%.3fs)",
+            len(fspace.features), fspace.n_candidates_deferred, timings["fc"],
+        )
+
+        # ---- phases 2+3: SIS / ℓ0 over dimensions ---------------------
+        subspace: List[int] = []  # fids, in selection order
+        selected: set = set()
+        models_by_dim: Dict[int, List[SissoModel]] = {}
+        residuals = y[None, :]  # Δ_0 = P
+        timings["sis"] = 0.0
+        timings["l0"] = 0.0
+
+        for dim in range(1, cfg.n_dim + 1):
+            t0 = time.perf_counter()
+            feats, scores = sis_screen(
+                fspace, residuals, layout, cfg.n_sis, selected,
+                batch=cfg.sis_batch, use_kernel=cfg.use_kernels,
+            )
+            timings["sis"] += time.perf_counter() - t0
+            for f in feats:
+                subspace.append(f.fid)
+                selected.add(f.fid)
+            log.info(
+                "dim %d SIS: +%d features (best score %.4f), subspace=%d",
+                dim, len(feats), scores[0] if len(scores) else float("nan"),
+                len(subspace),
+            )
+
+            # ℓ0 over the accumulated subspace
+            t0 = time.perf_counter()
+            xmat = fspace.values_matrix()
+            xs = xmat[[fspace.features[fid].row for fid in subspace]]
+            # standardize for conditioning (coefficients recovered below from
+            # raw-value Gram stats, so this is internal only)
+            res = l0_search(
+                xs, y, layout, n_dim=dim, n_keep=cfg.n_residual,
+                block=cfg.l0_block, engine=cfg.l0_engine,
+                use_kernel=cfg.use_kernels, journal=journal,
+                dtype=self.dtype,
+            )
+            timings["l0"] += time.perf_counter() - t0
+
+            stats = compute_gram_stats(xs, y, layout, self.dtype)
+            models = []
+            for k in range(min(cfg.n_residual, len(res.sses))):
+                if not np.isfinite(res.sses[k]):
+                    continue
+                tup = res.tuples[k]
+                coefs, intercepts = coefficients_for(stats, tup)
+                models.append(
+                    SissoModel(
+                        features=[fspace.features[subspace[j]] for j in tup],
+                        coefs=coefs, intercepts=intercepts, layout=layout,
+                        sse=float(res.sses[k]),
+                    )
+                )
+            models_by_dim[dim] = models
+            log.info(
+                "dim %d ℓ0: %d models evaluated, best SSE %.6g",
+                dim, res.n_evaluated, res.sses[0],
+            )
+
+            # residuals of the best n_residual models feed the next SIS
+            resids = []
+            for mdl in models[: cfg.n_residual]:
+                rows = [fspace.features[f.fid].row for f in mdl.features]
+                resids.append(mdl.residual(y, xmat[rows]))
+            residuals = np.stack(resids) if resids else y[None, :]
+
+        return SissoFit(models_by_dim=models_by_dim, fspace=fspace, timings=timings)

@@ -1,0 +1,87 @@
+"""Unit algebra for SISSO feature validity.
+
+A :class:`Unit` is a vector of rational exponents over an ordered basis of
+physical dimensions (e.g. ``m^1 s^-2``).  Operator application must preserve
+dimensional consistency (paper §II.C: features are built "while preserving
+unit consistency"); the rules live in :mod:`repro.core.operators`.
+
+Units are immutable and hashable so they can key host-side dedup tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+from typing import Iterable, Mapping, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """Exponent vector over named base dimensions."""
+
+    exponents: Tuple[Fraction, ...] = ()
+    basis: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        if len(self.exponents) != len(self.basis):
+            raise ValueError(
+                f"unit exponents {self.exponents} do not match basis {self.basis}"
+            )
+        object.__setattr__(
+            self, "exponents", tuple(Fraction(e) for e in self.exponents)
+        )
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def dimensionless(basis: Tuple[str, ...] = ()) -> "Unit":
+        return Unit(tuple(Fraction(0) for _ in basis), basis)
+
+    @staticmethod
+    def from_mapping(mapping: Mapping[str, object], basis: Iterable[str]) -> "Unit":
+        basis = tuple(basis)
+        return Unit(tuple(Fraction(mapping.get(b, 0)) for b in basis), basis)
+
+    # -- predicates --------------------------------------------------------
+    @property
+    def is_dimensionless(self) -> bool:
+        return all(e == 0 for e in self.exponents)
+
+    def _check_basis(self, other: "Unit") -> None:
+        if self.basis != other.basis:
+            raise ValueError(f"unit basis mismatch: {self.basis} vs {other.basis}")
+
+    # -- algebra -----------------------------------------------------------
+    def __mul__(self, other: "Unit") -> "Unit":
+        self._check_basis(other)
+        return Unit(
+            tuple(a + b for a, b in zip(self.exponents, other.exponents)), self.basis
+        )
+
+    def __truediv__(self, other: "Unit") -> "Unit":
+        self._check_basis(other)
+        return Unit(
+            tuple(a - b for a, b in zip(self.exponents, other.exponents)), self.basis
+        )
+
+    def __pow__(self, p: object) -> "Unit":
+        p = Fraction(p)
+        return Unit(tuple(e * p for e in self.exponents), self.basis)
+
+    def __eq__(self, other: object) -> bool:
+        return (
+            isinstance(other, Unit)
+            and self.basis == other.basis
+            and self.exponents == other.exponents
+        )
+
+    def __hash__(self) -> int:
+        return hash((self.basis, self.exponents))
+
+    def __str__(self) -> str:
+        if self.is_dimensionless:
+            return "1"
+        parts = [
+            f"{b}^{e}" if e != 1 else b
+            for b, e in zip(self.basis, self.exponents)
+            if e != 0
+        ]
+        return "*".join(parts)

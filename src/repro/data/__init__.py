@@ -1,0 +1,3 @@
+from .synthetic import TokenStream, tabular_dataset
+
+__all__ = ["TokenStream", "tabular_dataset"]

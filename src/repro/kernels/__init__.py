@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the SISSO hot spots (validated in interpret mode).
+
+fused_sis.py — P1+P2+P3: generate candidate values, validate, project against
+              residuals entirely in VMEM (never materializes the last rung).
+l0_tile.py   — P4: blocked Gram-tile pair scorer (MXU matmul + VPU closed-form
+              solve + tile argmin), scalar-prefetched upper-triangle tiles.
+autotune.py  — P6: block-shape auto-tuning.
+ops.py       — jit'd wrappers, padding/layout policy, two-phase exact top-k.
+ref.py       — pure-jnp oracles for every kernel.
+"""
+from . import ops, ref, autotune  # noqa: F401

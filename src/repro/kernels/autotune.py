@@ -1,0 +1,50 @@
+"""Launch-configuration auto-tuning (paper P6, TPU parameters).
+
+The paper times a predefined set of Kokkos team sizes on the first batch and
+reuses the winner (warp 32 vs 64 across vendors).  The TPU analogue tunes
+Pallas *block shapes*: candidate feature-block sizes for the fused SIS kernel
+and tile sizes for the ℓ0 kernel.  Cost is one extra evaluation of the first
+batch per candidate — "a few seconds ... negligible compared to the total
+runtime" (paper §II.D), and the choice is cached per (kernel, padded shape).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+
+_CACHE: Dict[Tuple, int] = {}
+
+FUSED_SIS_BLOCKS: Sequence[int] = (128, 256, 512, 1024)
+L0_TILE_BLOCKS: Sequence[int] = (128, 256, 512)
+
+
+def pick_block(
+    key: Tuple,
+    candidates: Sequence[int],
+    run: Callable[[int], None],
+    repeats: int = 2,
+) -> int:
+    """Time ``run(block)`` per candidate on the first batch; cache winner."""
+    if key in _CACHE:
+        return _CACHE[key]
+    best_block, best_t = candidates[0], float("inf")
+    for blk in candidates:
+        try:
+            run(blk)  # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                run(blk)
+            jax.effects_barrier()
+            dt = (time.perf_counter() - t0) / repeats
+        except Exception:  # shape not supported for this input -> skip
+            continue
+        if dt < best_t:
+            best_block, best_t = blk, dt
+    _CACHE[key] = best_block
+    return best_block
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

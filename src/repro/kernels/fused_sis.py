@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused on-the-fly feature generation + SIS projection.
+
+Paper mapping: P1 (operator-outer-loop batched evaluation) + P2 (value-rule
+validity fused with evaluation) + P3 (on-the-fly last rung) — deepened: the
+candidate block's values live only in VMEM; they are generated, validated,
+correlated against the residuals and *discarded*, never touching HBM.  The
+paper's GPU version still round-trips global memory between the evaluation
+and the Pearson pass ("re-evaluation and the subsequent Pearson correlation
+calculation are performed consecutively on the GPU").
+
+Layout (one grid step = one block of `block_b` candidates):
+
+    HBM -> VMEM streams:  A, B        (block_b, s_pad)   child values
+    VMEM-resident:        M (T,s_pad) task membership, Yt (R*T,s_pad)
+    compute:              V = op(A,B)                     VPU
+                          sums/sumsq/dots = V @ {M,Yt}ᵀ   MXU
+                          epilogue: r, |r| mean/max, validity -> score
+    VMEM -> HBM:          scores (1, block_b)
+
+Tiles are (8·k, 128·k)-aligned; the sample axis is padded to a multiple of
+128 with neutral values (1.0 for children — safe for every operator domain —
+and 0 rows in M/Yt so padding never contributes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.operators import apply_op
+
+_EPS = 1e-12
+_VAR_MIN = 1e-10
+
+
+def _kernel(
+    a_ref, b_ref, m_ref, yt_ref, cnt_ref, out_ref,
+    *, op_id: int, n_tasks: int, n_residuals: int,
+    l_bound: float, u_bound: float,
+):
+    a = a_ref[...]
+    b = b_ref[...]
+    m = m_ref[...]            # (T, s_pad)
+    yt = yt_ref[...]          # (R*T, s_pad)
+    cnt = cnt_ref[...]        # (1, T)
+
+    v = apply_op(op_id, a, b)                       # (B, s_pad)
+    col_mask = m.sum(axis=0) > 0                    # (s_pad,)
+    finite = jnp.where(col_mask[None, :], jnp.isfinite(v), True).all(axis=1)
+    vm = jnp.where(col_mask[None, :] & jnp.isfinite(v), v, 0.0)
+    max_abs = jnp.abs(vm).max(axis=1)               # (B,)
+
+    f32 = jnp.float32
+    sums = jnp.dot(vm, m.T, preferred_element_type=f32)          # (B, T)
+    sumsq = jnp.dot(vm * vm, m.T, preferred_element_type=f32)    # (B, T)
+    dots = jnp.dot(vm, yt.T, preferred_element_type=f32)         # (B, R*T)
+
+    var = jnp.maximum(sumsq - sums * sums / cnt, 0.0)            # (B, T)
+    inv_norm = jax.lax.rsqrt(var + _EPS)
+    bsz = sums.shape[0]
+    r = dots.reshape(bsz, n_residuals, n_tasks) * inv_norm[:, None, :]
+    score = jnp.abs(r).sum(axis=2).max(axis=1) / n_tasks
+
+    valid = (
+        finite
+        & (max_abs <= u_bound)
+        & (max_abs >= l_bound)
+        & (var.max(axis=1) > _VAR_MIN)
+        & jnp.isfinite(score)
+    )
+    out_ref[...] = jnp.where(valid, score, -jnp.inf)[None, :]
+
+
+def fused_gen_sis_pallas(
+    op_id: int,
+    a: jnp.ndarray,          # (B_pad, s_pad) fp32, B_pad % block_b == 0
+    b: jnp.ndarray,
+    membership: jnp.ndarray,  # (T, s_pad)
+    y_tilde: jnp.ndarray,     # (R*T, s_pad)
+    counts: jnp.ndarray,      # (1, T)
+    n_residuals: int,
+    l_bound: float,
+    u_bound: float,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bp, s_pad = a.shape
+    t = membership.shape[0]
+    assert bp % block_b == 0 and s_pad % 128 == 0, (bp, block_b, s_pad)
+    nb = bp // block_b
+    kern = functools.partial(
+        _kernel, op_id=op_id, n_tasks=t, n_residuals=n_residuals,
+        l_bound=float(l_bound), u_bound=float(u_bound),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((t, s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((y_tilde.shape[0], s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block_b), jnp.float32),
+        interpret=interpret,
+    )(a, b, membership, y_tilde, counts)
+    return out.reshape(-1)

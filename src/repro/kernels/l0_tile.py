@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: blocked ℓ0 pair-descriptor scoring (paper P4, adapted).
+
+The paper scores each descriptor with a per-GPU-thread Householder QR in
+shared memory.  The TPU-native replacement (DESIGN.md §2/P4):
+
+* the per-tuple least-squares problem is reduced to the 3×3 SPD system built
+  from Gram statistics (exact same minimizer, O(1) per pair instead of
+  O(S·n²)),
+* Gram *tiles* ``G_IJ = X_I @ X_Jᵀ`` are computed on the MXU inside the
+  kernel — the m×m Gram matrix never exists in HBM,
+* the closed-form solve + SSE + tile-argmin run on the VPU over the
+  (block_i × block_j) tile,
+* the upper-triangle tile list is driven by **scalar prefetch**
+  (PrefetchScalarGridSpec), so no lower-triangle work is launched at all.
+
+Per grid step: stream X_I, X_J (block, s_pad) from HBM, emit one (sse_min,
+argmin) pair.  HBM traffic is O(m·s) per tile row instead of O(m²) Gram
+reads — the kernel is compute-bound by design.
+
+Outputs are per-tile minima; `ops.l0_search_tiled` does a two-phase exact
+top-k (rescore the best tiles with the jnp oracle) so results match the
+reference bit-for-bit on ranking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import solve3_sse
+
+_BIG_I32 = 2**30  # python int: jnp constants may not be closed over in kernels
+
+
+def _kernel(
+    ti_ref, tj_ref,  # scalar-prefetch: tile coordinates (ntiles,)
+    xi_ref, xj_ref,  # (bi, s_pad), (bj, s_pad)
+    gii_i_ref, gii_j_ref,  # (T, bi), (T, bj) diagonal Gram entries
+    fs_i_ref, fs_j_ref,    # (T, bi), (T, bj) feature sums
+    b_i_ref, b_j_ref,      # (T, bi), (T, bj) X·y projections
+    scal_ref,              # (T, 8): [n, ysum, yty, 0, ...]
+    sse_out, idx_out,      # (1, 1) each
+    *, task_slices: Tuple[Tuple[int, int], ...], bi: int, bj: int, m_true: int,
+):
+    n = pl.program_id(0)
+    i0 = ti_ref[n] * bi
+    j0 = tj_ref[n] * bj
+    xi = xi_ref[...]
+    xj = xj_ref[...]
+
+    acc = jnp.zeros((bi, bj), jnp.float32)
+    for t, (lo, hi) in enumerate(task_slices):  # static unroll over tasks
+        gij = jnp.dot(
+            xi[:, lo:hi], xj[:, lo:hi].T, preferred_element_type=jnp.float32
+        )
+        acc = acc + solve3_sse(
+            gii_i_ref[t, :][:, None], gii_j_ref[t, :][None, :],
+            scal_ref[t, 0], gij,
+            fs_i_ref[t, :][:, None], fs_j_ref[t, :][None, :],
+            b_i_ref[t, :][:, None], b_j_ref[t, :][None, :],
+            scal_ref[t, 1], scal_ref[t, 2],
+        )
+
+    rows = i0 + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 0)
+    cols = j0 + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1)
+    valid = (rows < cols) & (cols < m_true)
+    sse = jnp.where(valid, acc, jnp.inf)
+
+    min_val = jnp.min(sse)
+    local = jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 0) * bj + \
+        jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1)
+    min_idx = jnp.min(jnp.where(sse == min_val, local, _BIG_I32))
+    sse_out[0, 0] = min_val
+    idx_out[0, 0] = min_idx
+
+
+def l0_pairs_tiled_pallas(
+    x_pad: jnp.ndarray,      # (m_pad, s_pad) fp32, zero-padded
+    gii: jnp.ndarray,        # (T, m_pad)
+    fsum: jnp.ndarray,       # (T, m_pad)
+    bvec: jnp.ndarray,       # (T, m_pad)
+    scal: jnp.ndarray,       # (T, 8)
+    tile_i: jnp.ndarray,     # (ntiles,) int32 upper-triangle tile coords
+    tile_j: jnp.ndarray,
+    task_slices: Sequence[Tuple[int, int]],
+    m_true: int,
+    block: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (per-tile min SSE (ntiles,), per-tile local argmin (ntiles,))."""
+    m_pad, s_pad = x_pad.shape
+    t = gii.shape[0]
+    assert m_pad % block == 0 and s_pad % 128 == 0
+    ntiles = int(tile_i.shape[0])
+    kern = functools.partial(
+        _kernel, task_slices=tuple(task_slices), bi=block, bj=block,
+        m_true=m_true,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((block, s_pad), lambda n, ti, tj: (ti[n], 0)),
+            pl.BlockSpec((block, s_pad), lambda n, ti, tj: (tj[n], 0)),
+            pl.BlockSpec((t, block), lambda n, ti, tj: (0, ti[n])),
+            pl.BlockSpec((t, block), lambda n, ti, tj: (0, tj[n])),
+            pl.BlockSpec((t, block), lambda n, ti, tj: (0, ti[n])),
+            pl.BlockSpec((t, block), lambda n, ti, tj: (0, tj[n])),
+            pl.BlockSpec((t, block), lambda n, ti, tj: (0, ti[n])),
+            pl.BlockSpec((t, block), lambda n, ti, tj: (0, tj[n])),
+            pl.BlockSpec((t, 8), lambda n, ti, tj: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda n, ti, tj: (n, 0)),
+            pl.BlockSpec((1, 1), lambda n, ti, tj: (n, 0)),
+        ],
+    )
+    sse, idx = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((ntiles, 1), jnp.float32),
+            jax.ShapeDtypeStruct((ntiles, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_i, tile_j, x_pad, x_pad, gii, gii, fsum, fsum, bvec, bvec, scal)
+    return sse.reshape(-1), idx.reshape(-1)

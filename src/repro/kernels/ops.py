@@ -1,0 +1,215 @@
+"""jit'd wrappers around the Pallas kernels (+ padding & layout policy).
+
+On CPU containers the kernels execute with ``interpret=True`` (Pallas runs
+the kernel body in Python/XLA) — same code path, same numerics; on TPU the
+same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.l0 import GramStats
+from ..core.sis import ScoreContext, TaskLayout
+from .fused_sis import fused_gen_sis_pallas
+from .l0_tile import l0_pairs_tiled_pallas
+from .ref import solve3_sse
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# fused generation + SIS
+# ---------------------------------------------------------------------------
+
+def fused_gen_sis(
+    op_id: int,
+    a: jnp.ndarray,   # (B, S) child-1 values
+    b: jnp.ndarray,   # (B, S) child-2 values (any values for unary ops)
+    ctx: ScoreContext,
+    l_bound: float,
+    u_bound: float,
+    block_b: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Scores (B,) for a same-operator candidate block; invalid -> -inf."""
+    interpret = _interpret_default() if interpret is None else interpret
+    bsz, s = a.shape
+    s_pad = _pad_to(max(s, 128), 128)
+    b_pad = _pad_to(max(bsz, block_b), block_b)
+
+    def pad2(x, rows, cols, fill):
+        out = jnp.full((rows, cols), fill, jnp.float32)
+        return out.at[: x.shape[0], : x.shape[1]].set(x.astype(jnp.float32))
+
+    a_p = pad2(a, b_pad, s_pad, 1.0)   # 1.0 is domain-safe for all operators
+    b_p = pad2(b, b_pad, s_pad, 1.0)
+    m_p = pad2(jnp.asarray(ctx.membership), ctx.membership.shape[0], s_pad, 0.0)
+    yt_p = pad2(jnp.asarray(ctx.y_tilde), ctx.y_tilde.shape[0], s_pad, 0.0)
+    cnt = jnp.asarray(ctx.counts, jnp.float32)[None, :]
+
+    scores = fused_gen_sis_pallas(
+        op_id, a_p, b_p, m_p, yt_p, cnt,
+        n_residuals=ctx.n_residuals, l_bound=l_bound, u_bound=u_bound,
+        block_b=block_b, interpret=interpret,
+    )
+    return scores[:bsz]
+
+
+# ---------------------------------------------------------------------------
+# ℓ0 pair scoring
+# ---------------------------------------------------------------------------
+
+def l0_score_pairs(stats: GramStats, pairs: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form total SSE for explicit (B, 2) pairs from Gram stats.
+
+    Same math as the tile kernel, expressed as XLA gathers — used by the
+    block-loop integration path (core/l0.py) and as the rescoring step of
+    the two-phase tiled search.
+    """
+    i = pairs[:, 0]
+    j = pairs[:, 1]
+    total = jnp.zeros((pairs.shape[0],), stats.gram.dtype)
+    for t in range(stats.n_tasks):
+        g = stats.gram[t]
+        total = total + solve3_sse(
+            g[i, i], g[j, j], stats.n[t], g[i, j],
+            stats.fsum[t][i], stats.fsum[t][j],
+            stats.b[t][i], stats.b[t][j], stats.ysum[t], stats.yty[t],
+        )
+    return total
+
+
+def _task_padded_layout(
+    x: np.ndarray, y: np.ndarray, layout: TaskLayout, block: int
+) -> Tuple[np.ndarray, np.ndarray, Tuple[Tuple[int, int], ...], np.ndarray]:
+    """Repack samples so every task segment is 128-aligned (zero gaps).
+
+    Zero padding contributes nothing to Gram sums; true counts are carried
+    separately in the scalar array.
+    """
+    m, _ = x.shape
+    m_pad = _pad_to(max(m, block), block)
+    seg_pads = [_pad_to(max(hi - lo, 128), 128) for lo, hi in layout.slices]
+    s_pp = sum(seg_pads)
+    x_pp = np.zeros((m_pad, s_pp), np.float32)
+    y_pp = np.zeros((s_pp,), np.float32)
+    slices_pp = []
+    off = 0
+    for (lo, hi), sp in zip(layout.slices, seg_pads):
+        n = hi - lo
+        x_pp[:m, off : off + n] = x[:, lo:hi]
+        y_pp[off : off + n] = y[lo:hi]
+        slices_pp.append((off, off + sp))
+        off += sp
+    scal = np.zeros((layout.n_tasks, 8), np.float32)
+    for t, (lo, hi) in enumerate(layout.slices):
+        yt = y[lo:hi]
+        scal[t, 0] = hi - lo
+        scal[t, 1] = yt.sum()
+        scal[t, 2] = (yt * yt).sum()
+    return x_pp, y_pp, tuple(slices_pp), scal
+
+
+def l0_search_tiled(
+    x: np.ndarray,   # (m, S) subspace feature values (samples grouped by task)
+    y: np.ndarray,   # (S,)
+    layout: TaskLayout,
+    n_keep: int = 10,
+    block: int = 256,
+    tiles_per_call: int = 2048,
+    interpret: Optional[bool] = None,
+    journal=None,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Kernel-accelerated exhaustive pair search; exact top-``n_keep``.
+
+    Phase 1: tile sweep (Pallas) -> per-tile (min SSE, argmin).
+    Phase 2: rescore the ≤ n_keep best tiles exactly (tile-min containment
+    argument: every global top-k element lives in a tile whose min ≤ the
+    global k-th value, and at most k tiles can satisfy that).
+    Returns (tuples (k,2), sses (k,), n_evaluated).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    m = x.shape[0]
+    x_pp, y_pp, slices_pp, scal = _task_padded_layout(x, y, layout, block)
+    m_pad = x_pp.shape[0]
+    nb = m_pad // block
+
+    # per-task per-feature vectors
+    t_count = layout.n_tasks
+    gii = np.zeros((t_count, m_pad), np.float32)
+    fsum = np.zeros((t_count, m_pad), np.float32)
+    bvec = np.zeros((t_count, m_pad), np.float32)
+    for t, (lo, hi) in enumerate(slices_pp):
+        seg = x_pp[:, lo:hi]
+        gii[t] = (seg * seg).sum(axis=1)
+        fsum[t] = seg.sum(axis=1)
+        bvec[t] = seg @ y_pp[lo:hi]
+
+    tiles = [(i, j) for i in range(nb) for j in range(i, nb)]
+    x_dev = jnp.asarray(x_pp)
+    gii_d, fs_d, b_d = jnp.asarray(gii), jnp.asarray(fsum), jnp.asarray(bvec)
+    scal_d = jnp.asarray(scal)
+
+    # running top tiles: (min_sse, tile_i, tile_j, local_idx)
+    best: list = []
+    start_chunk = 0
+    if journal is not None and journal.has_state():
+        best, start_chunk = journal.restore_tiles()
+
+    chunks = [
+        tiles[lo : lo + tiles_per_call]
+        for lo in range(0, len(tiles), tiles_per_call)
+    ]
+    for ci, chunk in enumerate(chunks):
+        if ci < start_chunk:
+            continue
+        ti = jnp.asarray([c[0] for c in chunk], jnp.int32)
+        tj = jnp.asarray([c[1] for c in chunk], jnp.int32)
+        sse, idx = l0_pairs_tiled_pallas(
+            x_dev, gii_d, fs_d, b_d, scal_d, ti, tj,
+            task_slices=slices_pp, m_true=m, block=block,
+            interpret=interpret,
+        )
+        sse, idx = np.array(sse), np.array(idx)
+        for k in range(len(chunk)):
+            if np.isfinite(sse[k]):
+                best.append((float(sse[k]), chunk[k][0], chunk[k][1], int(idx[k])))
+        best.sort(key=lambda r: r[0])
+        best = best[: n_keep + 1]
+        if journal is not None:
+            journal.record_tiles(ci + 1, best)
+
+    # phase 2: exact rescoring of the winning tiles
+    from ..core.l0 import compute_gram_stats
+
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout, jnp.float64)
+    cand_pairs = []
+    for _, ti_, tj_, _ in best[:n_keep]:
+        i0, j0 = ti_ * block, tj_ * block
+        ii, jj = np.meshgrid(
+            np.arange(i0, min(i0 + block, m)),
+            np.arange(j0, min(j0 + block, m)),
+            indexing="ij",
+        )
+        keep = ii < jj
+        cand_pairs.append(np.stack([ii[keep], jj[keep]], axis=1))
+    if not cand_pairs:
+        return np.zeros((0, 2), np.int64), np.zeros((0,)), len(tiles)
+    cand = np.unique(np.concatenate(cand_pairs), axis=0)
+    sses = np.array(l0_score_pairs(stats, jnp.asarray(cand, jnp.int32)))
+    order = np.argsort(sses, kind="stable")[:n_keep]
+    n_eval = m * (m - 1) // 2
+    return cand[order].astype(np.int64), sses[order], n_eval

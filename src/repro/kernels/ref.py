@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference here; tests sweep shapes and
+dtypes and assert_allclose kernel-vs-oracle (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.operators import apply_op
+
+_EPS = 1e-12
+_DET_EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# fused feature-generation + SIS projection (kernel: fused_sis.py)
+# ---------------------------------------------------------------------------
+
+def fused_gen_sis_ref(
+    op_id: int,
+    a: jnp.ndarray,          # (B, S_pad) child-1 values (padding cols = 1.0)
+    b: jnp.ndarray,          # (B, S_pad) child-2 values (== a for unary ops)
+    membership: jnp.ndarray,  # (T, S_pad) 0/1 task mask (0 on padding)
+    y_tilde: jnp.ndarray,     # (R*T, S_pad) per-task centered+normalized resid
+    counts: jnp.ndarray,      # (T,)
+    n_residuals: int,
+    l_bound: float,
+    u_bound: float,
+) -> jnp.ndarray:
+    """Scores (B,): max over residuals of mean-over-tasks |pearson r|.
+
+    Invalid features (NaN/Inf, out-of-bounds max |value|, ~zero variance)
+    score -inf.  This is the paper's P3 on-the-fly SIS with the value-rule
+    check (P2 GPU side) fused in.
+    """
+    v = apply_op(op_id, a, b)                      # (B, S_pad)
+    col_mask = (membership.sum(axis=0) > 0)        # (S_pad,) real samples
+    vm = jnp.where(col_mask[None, :], v, 0.0)
+    finite = jnp.where(col_mask[None, :], jnp.isfinite(v), True).all(axis=1)
+    vm = jnp.where(jnp.isfinite(vm), vm, 0.0)
+    max_abs = jnp.abs(vm).max(axis=1)
+
+    sums = vm @ membership.T                       # (B, T)
+    sumsq = (vm * vm) @ membership.T               # (B, T)
+    dots = vm @ y_tilde.T                          # (B, R*T)
+
+    var = sumsq - sums * sums / counts[None, :]
+    var = jnp.maximum(var, 0.0)
+    inv_norm = jax.lax.rsqrt(var + _EPS)
+    bsz, t = sums.shape
+    r = dots.reshape(bsz, n_residuals, t) * inv_norm[:, None, :]
+    score = jnp.abs(r).mean(axis=2).max(axis=1)
+
+    valid = (
+        finite
+        & (max_abs <= u_bound)
+        & (max_abs >= l_bound)
+        & (var.max(axis=1) > 1e-10)
+    )
+    return jnp.where(valid & jnp.isfinite(score), score, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# ℓ0 pair scoring, closed form (kernel: l0_tile.py)
+# ---------------------------------------------------------------------------
+
+def solve3_sse(a, b, c, d, e, f, r1, r2, r3, yty):
+    """SSE after solving the symmetric 3×3 system  M [c1 c2 c0]ᵀ = r.
+
+        M = [[a, d, e],          r = [r1, r2, r3]
+             [d, b, f],
+             [e, f, c]]
+
+    a=G_ii, b=G_jj, d=G_ij, e=Σx_i, f=Σx_j, c=n_samples, r1=x_i·y, r2=x_j·y,
+    r3=Σy.  All broadcastable; used elementwise over (Bi, Bj) tiles on the
+    VPU — the TPU replacement for the paper's per-thread QR (P4).
+    """
+    adj11 = b * c - f * f
+    adj12 = e * f - d * c
+    adj13 = d * f - b * e
+    adj22 = a * c - e * e
+    adj23 = d * e - a * f
+    adj33 = a * b - d * d
+    det = a * adj11 + d * adj12 + e * adj13
+    safe = jnp.abs(det) > _DET_EPS
+    inv_det = jnp.where(safe, 1.0 / jnp.where(safe, det, 1.0), 0.0)
+    c1 = (adj11 * r1 + adj12 * r2 + adj13 * r3) * inv_det
+    c2 = (adj12 * r1 + adj22 * r2 + adj23 * r3) * inv_det
+    c3 = (adj13 * r1 + adj23 * r2 + adj33 * r3) * inv_det
+    sse = yty - (c1 * r1 + c2 * r2 + c3 * r3)
+    sse = jnp.where(safe & jnp.isfinite(sse), jnp.maximum(sse, 0.0), jnp.inf)
+    return sse
+
+
+def l0_pair_sse_ref(
+    x: jnp.ndarray,        # (m, S) feature values, samples grouped by task
+    y: jnp.ndarray,        # (S,)
+    task_slices,           # ((lo, hi), ...)
+    pairs: jnp.ndarray,    # (B, 2) int
+) -> jnp.ndarray:
+    """Total-SSE oracle for pair descriptors (per-task intercept fits)."""
+    total = jnp.zeros((pairs.shape[0],), x.dtype)
+    i, j = pairs[:, 0], pairs[:, 1]
+    for lo, hi in task_slices:
+        xt = x[:, lo:hi]
+        yt = y[lo:hi]
+        gii = (xt * xt).sum(axis=1)
+        fsum = xt.sum(axis=1)
+        b_ = xt @ yt
+        n = float(hi - lo)
+        ysum = yt.sum()
+        yty = yt @ yt
+        gij = (xt[i] * xt[j]).sum(axis=1)
+        total = total + solve3_sse(
+            gii[i], gii[j], n, gij, fsum[i], fsum[j], b_[i], b_[j], ysum, yty
+        )
+    return total

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+    with mesh: jax.jit(step, in_shardings=..., out_shardings=...)
+                  .lower(**input_specs(arch, shape)).compile()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # raw XLA numbers (loop-unaware)
+plus the loop-aware HLO analysis (launch/hlo_analysis.py) that feeds the
+roofline table (EXPERIMENTS.md §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--all] [--out results.json]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch_config, list_archs
+from ..models import SHAPE_CASES, cell_applicable, shape_case
+from ..models.base import LMConfig, ShapeCase
+from ..train.steps import (
+    TrainStepConfig, make_decode_step, make_prefill_step, make_train_step)
+from ..optim import adamw_init
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .specs import effective_config, input_specs, max_dec_positions, params_spec
+
+# v5e hardware constants (per chip) for the roofline terms
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+
+
+def _opt_spec(params_tpl):
+    return jax.eval_shape(adamw_init, params_tpl)
+
+
+def default_accum(cfg: LMConfig, case: ShapeCase, mesh) -> int:
+    """§Perf iteration 1b policy: microbatch down to ~1–2 sequences per
+    device for the big-activation training cells."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    per_dev = max(case.global_batch // dp, 1)
+    want = per_dev  # one sequence per device per microbatch
+    while case.global_batch % (want * dp) != 0 and want > 1:
+        want -= 1
+    return max(want, 1)
+
+
+def lower_cell(cfg: LMConfig, case: ShapeCase, mesh,
+               accum: Optional[int] = None) -> Any:
+    """Build the step for this cell and return the Lowered object."""
+    ecfg = effective_config(cfg, case)
+    ptpl = params_spec(cfg, case)
+    ins = input_specs(cfg, case)
+
+    if case.kind == "train":
+        otpl = _opt_spec(ptpl)
+        accum = default_accum(cfg, case, mesh) if accum is None else accum
+        step = make_train_step(ecfg, TrainStepConfig(accum_steps=accum),
+                               mesh=mesh, params_tpl=ptpl, batch_tpl=ins)
+        return step.lower(ptpl, otpl, ins)
+    if case.kind == "prefill":
+        step = make_prefill_step(ecfg, mesh=mesh, params_tpl=ptpl,
+                                 inputs_tpl=ins)
+        return step.lower(ptpl, ins)
+    step = make_decode_step(ecfg, mesh=mesh, params_tpl=ptpl,
+                            cache_tpl=ins["cache"])
+    return step.lower(ptpl, ins["token"], ins["cache"], ins["pos"])
+
+
+def roofline_terms(costs: hlo_analysis.HloCosts, n_chips: int) -> Dict[str, float]:
+    return {
+        "t_compute_s": costs.flops / PEAK_FLOPS,
+        "t_memory_s": costs.bytes_accessed / HBM_BW,
+        "t_collective_s": costs.collective_bytes / ICI_BW,
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_arch_config(arch)
+    case = shape_case(shape)
+    ok, why = cell_applicable(cfg, case)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape,
+                           "multi_pod": multi_pod}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        if verbose:
+            print(f"[dryrun] {arch} × {shape}: SKIP ({why})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered = lower_cell(cfg, case, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    costs = hlo_analysis.analyze(txt)
+    terms = roofline_terms(costs, n_chips)
+    dom = max(terms, key=terms.get)
+
+    model_flops = model_flops_for(cfg, case)
+    hlo_flops_global = costs.flops * n_chips
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        memory={
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        xla_cost={"flops": cost.get("flops", 0.0),
+                  "bytes_accessed": cost.get("bytes accessed", 0.0)},
+        hlo={"flops_per_device": costs.flops,
+             "bytes_per_device": costs.bytes_accessed,
+             "collective_bytes_per_device": costs.collective_bytes,
+             "collective_by_kind": costs.collective_bytes_by_kind,
+             "collective_count": costs.collective_count,
+             "warnings": costs.warnings[:5]},
+        roofline={**terms, "dominant": dom},
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / hlo_flops_global
+                            if hlo_flops_global else 0.0),
+    )
+    if verbose:
+        peak_gb = rec["memory"]["peak_bytes_per_device"] / 2**30
+        print(f"[dryrun] {arch} × {shape} × {n_chips}chips: OK "
+              f"compile={rec['compile_s']}s peak={peak_gb:.2f}GiB/dev "
+              f"dominant={dom} "
+              f"t=({terms['t_compute_s']:.3e},{terms['t_memory_s']:.3e},"
+              f"{terms['t_collective_s']:.3e})s "
+              f"useful={rec['useful_flops_ratio']:.2f}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e} (loop-unaware)")
+    return rec
+
+
+def model_flops_for(cfg: LMConfig, case: ShapeCase) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D=batch.
+
+    audio (enc-dec): encoder params see seq_len frames, decoder params see
+    max_target_len tokens — counted separately.
+    """
+    n = cfg.active_param_count
+    mult = 6.0 if case.kind == "train" else 2.0
+    if cfg.family == "audio":
+        total_layers = cfg.n_enc_layers + cfg.n_layers
+        n_enc = n * cfg.n_enc_layers / total_layers
+        n_dec = n - n_enc
+        toks_dec = (cfg.max_target_len if case.kind != "decode" else 1)
+        return mult * case.global_batch * (
+            n_enc * case.seq_len + n_dec * toks_dec) if case.kind != "decode" \
+            else mult * n_dec * case.global_batch
+    if case.kind == "train":
+        return mult * n * case.global_batch * case.seq_len
+    if case.kind == "prefill":
+        return mult * n * case.global_batch * case.seq_len
+    return mult * n * case.global_batch  # decode: one token per sequence
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = ([c.name for c in SHAPE_CASES]
+              if (args.all or args.shape is None) else [args.shape])
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp))
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "multi_pod": mp, "status": "error",
+                                    "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} cell records to {args.out}")
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    print(f"[dryrun] {n_ok} ok, {n_skip} skipped, {failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

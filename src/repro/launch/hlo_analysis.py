@@ -1,0 +1,273 @@
+"""Loop-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+Why this exists: `compiled.cost_analysis()` reports while-loop *bodies once*
+— a 64-layer scanned transformer shows ~1 layer of FLOPs.  The roofline
+needs true totals, so we parse `compiled.as_text()` ourselves:
+
+* build a per-computation symbol table of op output shapes,
+* recover each while loop's trip count (scan/map loops carry the bound as an
+  s32 scalar constant in the init tuple; fallback: a `constant(N)` in the
+  condition computation; fallback: hint/1 with a warning),
+* propagate multipliers down the call graph (while bodies × trip count),
+* FLOPs: 2·|out|·K per dot/convolution (matmul-dominated models; elementwise
+  flops are counted at 1 flop per fusion output element),
+* bytes: Σ (operand + output) bytes over materializing ops (dot, fusion,
+  copy, slice ops, reduce, collectives) — an HBM-traffic proxy, documented
+  as such in EXPERIMENTS.md,
+* collectives: per-kind operand bytes × multiplier (the §Roofline
+  `collective_bytes`).
+
+All quantities are PER-DEVICE (the partitioned module is a per-device
+program), which is exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith(("//", "HloModule")):
+            continue
+        if not line.startswith(" ") and "{" in line:
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, kind = m.groups()
+            cur.ops.append(Op(name, type_str, kind, stripped))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _operand_names(line: str) -> List[str]:
+    """Operand %refs inside the op's argument parens."""
+    lp = line.index("(")
+    depth, j = 0, lp
+    for j in range(lp, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = line[lp + 1 : j]
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%([\w\.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _trip_count(comps, parent: Computation, wop: Op, hints) -> Tuple[int, bool]:
+    """Trip count of a while op; returns (count, confident)."""
+    # 1) init tuple: scan/map loops put (iv=0, ..., bound) constants there
+    operands = _operand_names(wop.line)
+    cands: List[int] = []
+    if operands:
+        init = operands[0]
+        for op in parent.ops:
+            if op.name == init and op.kind == "tuple":
+                for ref in _operand_names(op.line):
+                    for d in parent.ops:
+                        if d.name == ref and d.kind == "constant" \
+                                and d.type_str == "s32[]":
+                            m = re.search(r"constant\((-?\d+)\)", d.line)
+                            if m:
+                                cands.append(int(m.group(1)))
+    cands = [c for c in cands if c > 0]
+    if cands:
+        return max(cands), True
+    # 2) condition computation constant
+    cond_name = _attr(wop.line, "condition")
+    if cond_name and cond_name in comps:
+        for op in comps[cond_name].ops:
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m and int(m.group(1)) > 0:
+                return int(m.group(1)), True
+    # 3) hints by metadata op_name substring
+    for key, mult in (hints or {}).items():
+        if key in wop.line:
+            return mult, True
+    return 1, False
+
+
+def _multipliers(comps: Dict[str, Computation], hints) -> Tuple[Dict[str, float], List[str]]:
+    # ENTRY computations: the ones not referenced by any other computation
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops:
+            for key in ("condition", "body", "calls", "to_apply"):
+                r = _attr(op.line, key)
+                if r:
+                    referenced.add(r)
+            for m in re.finditer(r"(?:branch_computations|called_computations)=\{([^}]*)\}", op.line):
+                referenced.update(re.findall(r"%([\w\.\-]+)", m.group(1)))
+    roots = [n for n in comps if n not in referenced]
+    mult: Dict[str, float] = {n: 1.0 for n in roots}
+    warnings: List[str] = []
+    # BFS propagate
+    frontier = list(roots)
+    seen = set(roots)
+    while frontier:
+        name = frontier.pop()
+        comp = comps[name]
+        m = mult.get(name, 1.0)
+        for op in comp.ops:
+            if op.kind == "while":
+                trip, conf = _trip_count(comps, comp, op, hints)
+                if not conf:
+                    warnings.append(f"unresolved trip count for {op.name}")
+                for key in ("condition", "body"):
+                    child = _attr(op.line, key)
+                    if child and child in comps:
+                        mult[child] = mult.get(child, 0.0) + m * trip
+                        if child not in seen:
+                            seen.add(child)
+                            frontier.append(child)
+            else:
+                children = []
+                for key in ("calls", "to_apply"):
+                    r = _attr(op.line, key)
+                    if r:
+                        children.append(r)
+                for mm in re.finditer(
+                        r"(?:branch_computations|called_computations)=\{([^}]*)\}",
+                        op.line):
+                    children.extend(re.findall(r"%([\w\.\-]+)", mm.group(1)))
+                for child in children:
+                    if child in comps:
+                        mult[child] = max(mult.get(child, 0.0), m)
+                        if child not in seen:
+                            seen.add(child)
+                            frontier.append(child)
+    return mult, warnings
+
+
+# Ops that imply real memory traffic.  Layout/view ops (reshape, transpose,
+# broadcast, iota, convert) are excluded — XLA folds them into fusions.
+_BYTE_KINDS = ("dot", "fusion", "copy", "dynamic-slice", "dynamic-update-slice",
+               "reduce", "convolution", "gather", "scatter",
+               ) + COLLECTIVE_KINDS
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_count: int = 0
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+
+def analyze(text: str, hints: Optional[Dict[str, int]] = None) -> HloCosts:
+    comps = parse_module(text)
+    mult, warnings = _multipliers(comps, hints)
+    out = HloCosts(warnings=warnings)
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue  # unreachable (e.g. fusion internals handled via op)
+        # fusion-internal computations: counted at the fusion op site; skip
+        # their interior dots ONLY if the computation is a fusion callee —
+        # but XLA:CPU moves real dots out of fusions, so interior dot lines
+        # are rare; we keep them with the parent multiplier via `calls=`.
+        for op in comp.ops:
+            ob = _shape_bytes(op.type_str)
+            if op.kind == "dot":
+                dims = _shape_dims(op.type_str)
+                prod_out = 1
+                for d in dims:
+                    prod_out *= d
+                # contraction size from lhs operand shape + contracting dims
+                opnds = _operand_names(op.line)
+                k = 1
+                mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+                if opnds and mdims and opnds[0] in comp.shapes:
+                    lhs_dims = _shape_dims(comp.shapes[opnds[0]])
+                    for ci in mdims.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                out.flops += m * 2.0 * prod_out * k
+            elif op.kind == "fusion":
+                out.flops += m * ob / max(_DTYPE_BYTES.get(
+                    op.type_str.split("[")[0], 4), 1)  # ~1 flop per output elt
+            if op.kind in _BYTE_KINDS:
+                opb = sum(
+                    _shape_bytes(comp.shapes[o]) for o in _operand_names(op.line)
+                    if o in comp.shapes)
+                out.bytes_accessed += m * (ob + opb)
+            if op.kind in COLLECTIVE_KINDS:
+                opb = sum(
+                    _shape_bytes(comp.shapes[o]) for o in _operand_names(op.line)
+                    if o in comp.shapes)
+                if opb == 0:
+                    opb = ob  # fall back to output size (all-reduce: equal)
+                out.collective_bytes += m * opb
+                out.collective_bytes_by_kind[op.kind] = (
+                    out.collective_bytes_by_kind.get(op.kind, 0.0) + m * opb)
+                out.collective_count += 1
+    return out

@@ -1,0 +1,51 @@
+"""SISSO launcher: run a test case end-to-end with a restartable journal.
+
+    PYTHONPATH=src python -m repro.launch.sisso --case thermal [--full] \
+        [--journal /tmp/l0.json] [--engine gram|qr] [--kernels]
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs.sisso_kaggle import kaggle_bandgap_case
+from ..configs.sisso_thermal import thermal_conductivity_case
+from ..core import SissoRegressor
+from ..runtime import WorkJournal
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", default="thermal", choices=("thermal", "kaggle"))
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="gram", choices=("gram", "qr"))
+    ap.add_argument("--kernels", action="store_true",
+                    help="route hot loops through the Pallas kernels")
+    ap.add_argument("--journal", default=None,
+                    help="work-journal path (restartable ℓ0 sweeps)")
+    args = ap.parse_args()
+
+    case = (thermal_conductivity_case if args.case == "thermal"
+            else kaggle_bandgap_case)(reduced=not args.full)
+    import dataclasses
+
+    cfg = case.config
+    cfg = dataclasses.replace(cfg, l0_engine=args.engine,
+                              use_kernels=args.kernels)
+
+    journal = WorkJournal(args.journal) if args.journal else None
+    fit = SissoRegressor(cfg).fit(
+        case.x, case.y, case.names, units=case.units,
+        task_ids=case.task_ids, journal=journal)
+    best = fit.best()
+    rows = [f.row for f in best.features]
+    fv = fit.fspace.values_matrix()[rows]
+    print(best)
+    print(f"[sisso] {case.name}: r2={best.r2(case.y, fv):.6f} "
+          f"rmse={best.rmse(case.y, fv):.4g}")
+    print(f"[sisso] phases: {fit.timings}")
+    if journal is not None:
+        journal.clear()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation happens here: params come from jax.eval_shape over the
+real initializer, inputs are ShapeDtypeStructs, caches are eval_shape'd
+too.  The same specs drive `.lower().compile()` in dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.base import LMConfig, ShapeCase
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def effective_config(cfg: LMConfig, case: ShapeCase) -> LMConfig:
+    """Per-cell config tweaks (documented in DESIGN.md):
+
+    * whisper decode cells: the task defines the cell as "one new token with
+      a KV cache of seq_len", so the decoder position table / self cache are
+      sized to the case's seq_len instead of 448.
+    """
+    if cfg.family == "audio" and case.kind in ("decode",):
+        return dataclasses.replace(cfg, max_target_len=case.seq_len)
+    return cfg
+
+
+def max_dec_positions(cfg: LMConfig, case: ShapeCase) -> int:
+    if cfg.family != "audio":
+        return 448
+    return max(cfg.max_target_len, 448)
+
+
+def params_spec(cfg: LMConfig, case: ShapeCase):
+    cfg = effective_config(cfg, case)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: lm.init_params(cfg, k, max_dec_positions(cfg, case)), key)
+
+
+def input_specs(cfg: LMConfig, case: ShapeCase) -> Dict[str, Any]:
+    """Step inputs (minus params/opt-state) for one cell."""
+    cfg = effective_config(cfg, case)
+    b, s = case.global_batch, case.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if case.kind == "train":
+        if cfg.family == "audio":
+            # seq_len = encoder frames; decoder trains on max_target_len
+            return {"frames": _sds((b, s, cfg.d_model), dt),
+                    "tokens": _sds((b, cfg.max_target_len + 1), jnp.int32)}
+        if cfg.family == "vlm":
+            p = cfg.n_frontend_tokens
+            return {"patches": _sds((b, p, cfg.d_model), dt),
+                    "tokens": _sds((b, s - p + 1), jnp.int32)}
+        return {"tokens": _sds((b, s + 1), jnp.int32)}
+
+    if case.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": _sds((b, s, cfg.d_model), dt),
+                    "tokens": _sds((b, cfg.max_target_len), jnp.int32)}
+        if cfg.family == "vlm":
+            p = cfg.n_frontend_tokens
+            return {"patches": _sds((b, p, cfg.d_model), dt),
+                    "tokens": _sds((b, s - p), jnp.int32)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(lambda: lm.make_cache(cfg, b, s))
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "cache": cache,
+        "pos": s - 1,
+    }

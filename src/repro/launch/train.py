@@ -1,0 +1,63 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --steps 100 [--reduced] [--compress-grads] [--accum 4] \
+        [--ckpt-dir /tmp/run1]
+
+Full (unreduced) configs are for real accelerator fleets; on this CPU
+container use --reduced (the default) or examples/train_lm.py.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+
+from ..optim import AdamWConfig
+from ..runtime import Trainer, TrainerConfig
+
+_REDUCED = {
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "qwen2.5-32b": "repro.configs.qwen2p5_32b",
+    "nemotron-4-15b": "repro.configs.nemotron4_15b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3p5_moe",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=sorted(_REDUCED))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    args = ap.parse_args()
+
+    mod = importlib.import_module(_REDUCED[args.arch])
+    cfg = mod.reduced() if args.reduced else getattr(
+        __import__("repro.configs", fromlist=["get_arch_config"]),
+        "get_arch_config")(args.arch)
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, checkpoint_every=max(args.steps // 5, 1),
+        batch=args.batch, seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+        compress_grads=args.compress_grads,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps))
+    out = Trainer(cfg, tcfg).run()
+    print(f"[train] {args.arch}: loss {out['first_loss']:.3f} -> "
+          f"{out['final_loss']:.3f} over {out['steps_run']} steps; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

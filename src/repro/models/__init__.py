@@ -1,0 +1,5 @@
+"""LM model zoo substrate for the assigned architecture pool."""
+from .base import LMConfig, ShapeCase, SHAPE_CASES, shape_case, cell_applicable
+
+__all__ = ["LMConfig", "ShapeCase", "SHAPE_CASES", "shape_case",
+           "cell_applicable"]

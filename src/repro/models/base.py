@@ -1,0 +1,141 @@
+"""Unified architecture config for the assigned model pool."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention flavor
+    attn_type: str = "full"      # full | swa | local_global
+    window: int = 0              # sliding-window size (swa / local layers)
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0    # gemma2: tanh softcap on attention logits
+    logit_softcap: float = 0.0   # gemma2: tanh softcap on final logits
+    rope_theta: float = 10_000.0
+
+    # mlp flavor
+    mlp: str = "swiglu"          # swiglu | geglu | relu2 | gelu
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    d_inner: int = 0
+    ssm_head_dim: int = 64
+    conv_kernel: int = 4
+    ssm_chunk: int = 128   # SSD intra-chunk length (perf knob)
+
+    # hybrid (zamba2): one *shared* attention+MLP block applied every
+    # `attn_every` mamba layers
+    attn_every: int = 0
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    max_target_len: int = 448
+
+    # modality frontend stubs (task spec: frontend embeddings are inputs)
+    frontend: str = "none"       # none | audio_stub | vision_stub
+    n_frontend_tokens: int = 0   # vision: patch tokens prepended to the text
+
+    norm_eps: float = 1e-6
+    gemma_norms: bool = False    # pre+post norms, (1+w) RMSNorm scale
+    tie_embeddings: bool = False
+    sub_quadratic: bool = False  # eligible for the long_500k shape
+    dtype: str = "bfloat16"
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over the mesh."""
+        return math.ceil(self.vocab_size / 256) * 256
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.d_inner else 0
+
+    @property
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f = self.d_model, self.d_ff
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim \
+            + self.n_heads * self.head_dim * d
+        if self.mlp in ("swiglu", "geglu"):
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.n_experts:
+            mlp = mlp * self.n_experts + d * self.n_experts
+        ssm = 0
+        if self.d_inner:
+            ssm = d * 2 * self.d_inner \
+                + self.d_inner * (2 * self.ssm_state + self.conv_kernel + 1) \
+                + self.d_inner * d
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            per_layer = ssm
+        elif self.family == "hybrid":
+            n_shared = 1
+            per_layer = ssm
+            emb += n_shared * (attn + mlp)
+        else:
+            per_layer = attn + mlp
+        n_lay = self.n_layers + (self.n_enc_layers if self.is_encoder_decoder else 0)
+        return emb + n_lay * per_layer
+
+    @property
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: only top_k experts count)."""
+        if not self.n_experts:
+            return self.param_count
+        d, f = self.d_model, self.d_ff
+        mlp_all = (3 if self.mlp in ("swiglu", "geglu") else 2) * d * f
+        dense_equiv = dataclasses.replace(self, n_experts=0, top_k=0)
+        return dense_equiv.param_count - self.n_layers * mlp_all \
+            + self.n_layers * mlp_all * self.top_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    """One (arch x input-shape) dry-run cell."""
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPE_CASES: Tuple[ShapeCase, ...] = (
+    ShapeCase("train_4k", 4096, 256, "train"),
+    ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCase("decode_32k", 32_768, 128, "decode"),
+    ShapeCase("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_case(name: str) -> ShapeCase:
+    for c in SHAPE_CASES:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+def cell_applicable(cfg: LMConfig, case: ShapeCase) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (task spec)."""
+    if case.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: long_500k skipped (see DESIGN.md)"
+    return True, ""

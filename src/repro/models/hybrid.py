@@ -1,0 +1,109 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+arXiv:2411.15242: a stack of Mamba2 layers with a single shared
+attention+MLP transformer block applied periodically (every `attn_every`
+mamba layers).  The shared block reuses the same weights at every
+application point (parameter-efficient global mixing); each application
+keeps its own KV cache.  (The original also concatenates the first-layer
+embedding into the shared block input and uses per-application LoRA deltas
+— omitted here and noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm, rmsnorm_init
+from .mamba2 import (
+    mamba2_decode_step, mamba2_forward, mamba2_init, mamba2_init_state)
+from .transformer import block_apply, block_decode, block_init
+
+
+def hybrid_init(key, cfg, dtype) -> dict:
+    assert cfg.n_layers % cfg.attn_every == 0
+    ks = jax.random.split(key, 2)
+    n = cfg.n_layers
+    keys = jax.random.split(ks[0], n)
+    mamba = jax.vmap(lambda k: mamba2_init(k, cfg, dtype))(keys)
+    shared = block_init(ks[1], cfg, dtype, moe=False)
+    shared["ln_in"] = rmsnorm_init(cfg.d_model, dtype)
+    return {"mamba": mamba, "shared": shared}
+
+
+def _group(tree, n_groups: int):
+    return jax.tree.map(
+        lambda a: a.reshape(n_groups, a.shape[0] // n_groups, *a.shape[1:]),
+        tree)
+
+
+def hybrid_forward(params, x, cfg, collect: bool = False):
+    """Returns (x, aux, (mamba_states, shared_kv) if collect else None)."""
+    n_groups = cfg.n_layers // cfg.attn_every
+    grouped = _group(params["mamba"], n_groups)
+    shared = params["shared"]
+
+    def group_body(carry, gp):
+        h = carry
+
+        def mamba_body(hh, lp):
+            y, state = mamba2_forward(lp, rmsnorm(lp["norm_in"], hh,
+                                                  cfg.norm_eps), cfg)
+            return hh + y, state
+
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+        h, states = jax.lax.scan(mamba_body, h, gp)
+        h, aux, kvpair = block_apply(shared, h, cfg, 0)
+        return h, (states, kvpair if collect else None)
+
+    x, (states, kvs) = jax.lax.scan(group_body, x, grouped)
+    return x, 0.0, (states, kvs)
+
+
+def hybrid_decode(params, x, cfg, cache, pos):
+    n_groups = cfg.n_layers // cfg.attn_every
+    grouped = _group(params["mamba"], n_groups)
+    shared = params["shared"]
+    ssm, conv = cache["ssm"], cache["conv"]
+    ssm_g = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.attn_every, *a.shape[1:]), ssm)
+    conv_g = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.attn_every, *a.shape[1:]), conv)
+
+    def group_body(h, xs):
+        gp, ssm_i, conv_i, kc, vc = xs
+
+        def mamba_body(hh, inner):
+            lp, s, c = inner
+            y, (s2, c2) = mamba2_decode_step(
+                lp, rmsnorm(lp["norm_in"], hh, cfg.norm_eps), (s, c), cfg)
+            return hh + y, (s2, c2)
+
+        h, (ssm_o, conv_o) = jax.lax.scan(mamba_body, h, (gp, ssm_i, conv_i))
+        h, kc, vc = block_decode(shared, h, cfg, kc, vc, pos, False)
+        return h, (ssm_o, conv_o, kc, vc)
+
+    h, (ssm2, conv2, k2, v2) = jax.lax.scan(
+        group_body, x, (grouped, ssm_g, conv_g, cache["k"], cache["v"]))
+    merge = lambda a: a.reshape(cfg.n_layers, *a.shape[2:])
+    new_cache = {
+        "ssm": merge(ssm2),
+        "conv": jax.tree.map(merge, conv2),
+        "k": k2, "v": v2,
+    }
+    return h, new_cache
+
+
+def hybrid_init_cache(cfg, batch: int, seq: int, dtype) -> Dict:
+    n_groups = cfg.n_layers // cfg.attn_every
+    ssm, conv = mamba2_init_state(cfg, batch, dtype)
+    stack = lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype)
+    return {
+        "ssm": stack(ssm),
+        "conv": jax.tree.map(stack, conv),
+        "k": jnp.zeros((n_groups, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((n_groups, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+    }

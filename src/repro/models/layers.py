@@ -1,0 +1,103 @@
+"""Shared neural layers (functional, pytree params)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, gemma: bool = False):
+    """RMSNorm; scale is stored zero-centered ((1+w)·x̂ convention)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xh = xf * jax.lax.rsqrt(var + eps)
+    w = params["scale"].astype(jnp.float32) + 1.0
+    return (xh * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": _he(ks[0], (d, f), dtype),
+            "w_up": _he(ks[1], (d, f), dtype),
+            "w_down": _he(ks[2], (f, d), dtype, fan_in=f),
+        }
+    return {
+        "w_up": _he(ks[0], (d, f), dtype),
+        "w_down": _he(ks[1], (f, d), dtype, fan_in=f),
+    }
+
+
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * (x @ params["w_up"])
+    elif kind == "relu2":  # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    elif kind == "gelu":   # whisper
+        h = jax.nn.gelu(x @ params["w_up"], approximate=True)
+    else:
+        raise ValueError(kind)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab_pad: int, d: int, dtype) -> dict:
+    return {"table": _he(key, (vocab_pad, d), dtype, fan_in=d)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x, head=None):
+    table = head if head is not None else params["table"]
+    return x @ table.T if head is None else x @ head
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

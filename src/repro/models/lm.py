@@ -1,0 +1,303 @@
+"""Unified causal-LM API over the 10 assigned architecture families.
+
+    init_params(cfg, key, ...)        -> params pytree (eval_shape-safe)
+    loss_fn(cfg, params, batch)       -> (scalar loss, metrics)
+    prefill(cfg, params, inputs)      -> (last-token logits, cache)
+    decode_step(cfg, params, token, cache, pos) -> (logits, cache)
+    make_cache(cfg, batch, seq, dtype)-> cache pytree
+
+Batch contracts per family:
+  dense/moe/ssm/hybrid : {"tokens": (B, S+1) int32}
+  vlm                  : {"patches": (B, P, d) float, "tokens": (B, S+1)}
+  audio (whisper)      : {"frames": (B, T, d) float, "tokens": (B, Td+1)}
+"""
+from __future__ import annotations
+
+import functools
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hybrid as hy
+from . import mamba2 as m2
+from . import transformer as tr
+from . import whisper as wh
+from .base import LMConfig
+from .layers import embedding_init, rmsnorm, rmsnorm_init, softcap
+from .sharding import constrain
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key, max_dec_positions: int = 448) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    params: Dict = {"embed": embedding_init(ks[0], cfg.padded_vocab,
+                                            cfg.d_model, dt),
+                    "ln_f": rmsnorm_init(cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(ks[1], (cfg.d_model,
+                                                    cfg.padded_vocab))
+                          / np.sqrt(cfg.d_model)).astype(dt)
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["stack"] = tr.stack_init(ks[2], cfg, dt)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(ks[2], cfg.n_layers)
+        params["stack"] = jax.vmap(lambda k: m2.mamba2_init(k, cfg, dt))(keys)
+    elif cfg.family == "hybrid":
+        params["stack"] = hy.hybrid_init(ks[2], cfg, dt)
+    elif cfg.family == "audio":
+        params["stack"] = wh.whisper_init(ks[2], cfg, dt, max_dec_positions)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def _embed(cfg, params, tokens):
+    x = params["embed"]["table"][tokens]
+    if cfg.gemma_norms:  # gemma scales embeddings by sqrt(d)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        out = x @ params["embed"]["table"].T
+    else:
+        out = x @ params["head"]
+    out = softcap(out.astype(jnp.float32), cfg.logit_softcap)
+    return constrain(out, "batch", None, "vocab")
+
+
+def _backbone_forward(cfg, params, x, collect_kv=False):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return tr.stack_forward(params["stack"], x, cfg, collect_kv)
+    if cfg.family == "ssm":
+        def body(h, lp):
+            y, state = m2.mamba2_forward(
+                lp, rmsnorm(lp["norm_in"], h, cfg.norm_eps), cfg)
+            return h + y, (state if collect_kv else None)
+        body = jax.checkpoint(body, prevent_cse=False)
+        x, states = jax.lax.scan(body, x, params["stack"])
+        return x, 0.0, states
+    if cfg.family == "hybrid":
+        return hy.hybrid_forward(params["stack"], x, cfg, collect_kv)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# training loss
+# ---------------------------------------------------------------------------
+
+def _ce(logits, targets, vocab_size):
+    """Cross-entropy in fp32; ignores padded-vocab tail via target clamp."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - picked).mean()
+
+
+_CE_CHUNK = 512
+
+
+def _ce_from_hidden(cfg, params, x, targets):
+    """CE computed in sequence chunks with rematerialized logits.
+
+    §Perf iteration 1a: the fp32 (B, S, V/tp) logits tensor (+ its gradient)
+    dominated train-cell temp memory for the 152k–256k-vocab archs.  Chunking
+    the unembed+CE over the sequence (and rematerializing logits in the
+    backward pass) caps that buffer at (B, 512, V/tp).
+    """
+    b, s, _ = x.shape
+    chunk = min(_CE_CHUNK, s)
+    if s % chunk != 0:
+        return _ce(_logits(cfg, params, x), targets, cfg.vocab_size)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def one(args):
+        xs, ts = args
+        return _ce(_logits(cfg, params, xs), ts, cfg.vocab_size)
+
+    losses = jax.lax.map(one, (xc, tc))
+    return losses.mean()
+
+
+def loss_fn(cfg: LMConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    if cfg.family == "audio":
+        frames = constrain(batch["frames"], "batch", None, None)
+        enc_out = wh.encode(params["stack"], frames.astype(_dtype(cfg)), cfg)
+        toks = batch["tokens"]
+        inp, tgt = toks[:, :-1], toks[:, 1:]
+        x = wh.decode_teacher_forced(
+            params["stack"], enc_out, _embed(cfg, params, inp), cfg)
+        loss = _ce_from_hidden(cfg, params, x, tgt)
+        return loss, {"loss": loss}
+
+    toks = batch["tokens"]
+    inp, tgt = toks[:, :-1], toks[:, 1:]
+    x = _embed(cfg, params, inp)
+    n_text = x.shape[1]
+    if cfg.family == "vlm":
+        patches = constrain(batch["patches"], "batch", None, None)
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    x, aux, _ = _backbone_forward(cfg, params, x)
+    if cfg.family == "vlm":
+        x = x[:, -n_text:]
+    loss = _ce_from_hidden(cfg, params, x, tgt)
+    total = loss + 0.01 * aux if cfg.n_experts else loss
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: LMConfig, batch: int, seq: int, dtype=None):
+    dt = dtype or _dtype(cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return tr.init_cache(cfg, batch, seq, dt)
+    if cfg.family == "ssm":
+        ssm, conv = m2.mamba2_init_state(cfg, batch, dt)
+        stack = lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype)
+        return {"ssm": stack(ssm), "conv": jax.tree.map(stack, conv)}
+    if cfg.family == "hybrid":
+        return hy.hybrid_init_cache(cfg, batch, seq, dt)
+    if cfg.family == "audio":
+        h, hd = cfg.n_heads, cfg.head_dim
+        t_enc = seq  # encoder frames sized by the shape case
+        return {
+            "self_k": jnp.zeros((cfg.n_layers, batch, cfg.max_target_len, h, hd), dt),
+            "self_v": jnp.zeros((cfg.n_layers, batch, cfg.max_target_len, h, hd), dt),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, t_enc, h, hd), dt),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, t_enc, h, hd), dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: LMConfig, params, inputs,
+            max_seq: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Process the full prompt; returns (last-position logits, cache).
+
+    max_seq: KV-cache capacity (decode horizon); defaults to prompt length.
+    """
+    if cfg.family == "audio":
+        enc_out = wh.encode(params["stack"],
+                            inputs["frames"].astype(_dtype(cfg)), cfg)
+        ck, cv = wh.build_cross_cache(params["stack"], enc_out, cfg)
+        toks = inputs["tokens"]
+        x, (sk, sv) = wh.decode_teacher_forced(
+            params["stack"], enc_out, _embed(cfg, params, toks), cfg,
+            collect_kv=True)
+        logits = _logits(cfg, params, x[:, -1:])
+        b = toks.shape[0]
+        cache = make_cache(cfg, b, enc_out.shape[1])
+        cache = dict(cache, cross_k=ck.astype(cache["cross_k"].dtype),
+                     cross_v=cv.astype(cache["cross_v"].dtype))
+        cache["self_k"] = jax.lax.dynamic_update_slice(
+            cache["self_k"], sk.astype(cache["self_k"].dtype), (0, 0, 0, 0, 0))
+        cache["self_v"] = jax.lax.dynamic_update_slice(
+            cache["self_v"], sv.astype(cache["self_v"].dtype), (0, 0, 0, 0, 0))
+        return logits[:, 0], cache
+
+    toks = inputs["tokens"]
+    x = _embed(cfg, params, toks)
+    n_text = x.shape[1]
+    if cfg.family == "vlm":
+        x = jnp.concatenate([inputs["patches"].astype(x.dtype), x], axis=1)
+    x, _, collected = _backbone_forward(cfg, params, x, collect_kv=True)
+    logits = _logits(cfg, params, x[:, -1:])
+    cache = _cache_from_prefill(cfg, collected, x.shape[0], x.shape[1],
+                                max_seq or x.shape[1])
+    return logits[:, 0], cache
+
+
+def _write_head(cache_arr, kv, seq):
+    """Write prompt K/V (L,B,seq,...) into slots [0:seq] of the cache."""
+    return jax.lax.dynamic_update_slice(
+        cache_arr, kv.astype(cache_arr.dtype), (0,) * cache_arr.ndim)
+
+
+def _cache_from_prefill(cfg, collected, batch, seq, max_seq):
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = tr.init_cache(cfg, batch, max_seq, _dtype(cfg))
+        if cfg.attn_type == "local_global":
+            (kl, vl), (kg, vg) = collected
+            w = cache["k_local"].shape[2]
+            # ring layout for the local cache: last w positions, slot = pos%w
+            cache["k_local"] = _ring(kl, w, seq, cache["k_local"].dtype)
+            cache["v_local"] = _ring(vl, w, seq, cache["v_local"].dtype)
+            cache["k_global"] = _write_head(cache["k_global"], kg, seq)
+            cache["v_global"] = _write_head(cache["v_global"], vg, seq)
+        elif cfg.attn_type == "swa":
+            k, v = collected
+            w = cache["k"].shape[2]
+            cache["k"] = _ring(k, w, seq, cache["k"].dtype)
+            cache["v"] = _ring(v, w, seq, cache["v"].dtype)
+        else:
+            k, v = collected
+            cache["k"] = _write_head(cache["k"], k, seq)
+            cache["v"] = _write_head(cache["v"], v, seq)
+        return cache
+    if cfg.family == "ssm":
+        ssm, conv = collected
+        return {"ssm": ssm, "conv": conv}
+    if cfg.family == "hybrid":
+        states, (k, v) = collected
+        merge = lambda a: a.reshape(cfg.n_layers, *a.shape[2:])
+        ssm = merge(states[0])
+        conv = jax.tree.map(merge, states[1])
+        cache = hy.hybrid_init_cache(cfg, batch, max_seq, _dtype(cfg))
+        return {"ssm": ssm, "conv": conv,
+                "k": _write_head(cache["k"], k, seq),
+                "v": _write_head(cache["v"], v, seq)}
+    raise ValueError(cfg.family)
+
+
+def _ring(kv, w, seq, dtype):
+    """Map full-seq (L,B,S,KV,hd) K/V onto a ring buffer of width w."""
+    last = kv[:, :, -w:].astype(dtype) if seq >= w else kv.astype(dtype)
+    if seq < w:
+        pad = jnp.zeros((*kv.shape[:2], w - seq, *kv.shape[3:]), dtype)
+        return jnp.concatenate([last, pad], axis=2)
+    shift = seq % w
+    return jnp.roll(last, shift, axis=2)
+
+
+def decode_step(cfg: LMConfig, params, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar absolute position of this token."""
+    if cfg.family == "audio":
+        x = _embed(cfg, params, token)
+        x, cache = wh.decode_step(params["stack"], x, cache, pos, cfg)
+        return _logits(cfg, params, x)[:, 0], cache
+
+    x = _embed(cfg, params, token)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, cache = tr.stack_decode(params["stack"], x, cfg, cache, pos)
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, s, c = xs
+            y, (s2, c2) = m2.mamba2_decode_step(
+                lp, rmsnorm(lp["norm_in"], h, cfg.norm_eps), (s, c), cfg)
+            return h + y, (s2, c2)
+        x, (ssm, conv) = jax.lax.scan(
+            body, x, (params["stack"], cache["ssm"], cache["conv"]))
+        cache = {"ssm": ssm, "conv": conv}
+    elif cfg.family == "hybrid":
+        x, cache = hy.hybrid_decode(params["stack"], x, cfg, cache, pos)
+    else:
+        raise ValueError(cfg.family)
+    return _logits(cfg, params, x)[:, 0], cache

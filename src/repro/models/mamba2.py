@@ -1,0 +1,212 @@
+"""Mamba-2 (SSD, state-space duality) mixer — arXiv:2405.21060.
+
+Chunked-parallel training form (matmul-heavy => MXU-friendly) and O(1)-state
+recurrent decode form.  The equivalence of the two is asserted in tests
+(parallel scan == step-by-step recurrence), which is the SSD duality itself.
+
+Per head h with scalar decay A_h:   (P = head dim, N = state dim)
+    s_t = exp(A_h Δ_t) s_{t-1} + Δ_t x_t ⊗ B_t
+    y_t = C_t · s_t + D_h x_t
+
+Sharding note (§Perf iteration 4): the reference implementation fuses
+[z|x|B|C|Δ] into one in_proj and slices the output.  Slicing a tensor-
+parallel-sharded axis at non-shard-aligned offsets (5120/10240/10496 vs a
+/16 shard grid) forces GSPMD to materialize the full activation on every
+device (measured: a replicated fp32 (32, 32768, 10656) all-reduce per layer
+on prefill_32k).  We keep SEPARATE projections per stream — z, x, B, C, Δ —
+each cleanly shardable on its own output axis; the math is identical.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rmsnorm, rmsnorm_init
+
+
+def mamba2_init(key, cfg, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    k = cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    sd = 1.0 / np.sqrt(d)
+    return {
+        "norm_in": rmsnorm_init(d, dtype),  # pre-norm for the residual block
+        "w_z": (jax.random.normal(ks[0], (d, di)) * sd).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * sd).astype(dtype),
+        "w_b": (jax.random.normal(ks[2], (d, n)) * sd).astype(dtype),
+        "w_c": (jax.random.normal(ks[3], (d, n)) * sd).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, nh)) * sd).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (k, di)) / np.sqrt(k)).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_b": (jax.random.normal(jax.random.fold_in(key, 7), (k, n))
+                   / np.sqrt(k)).astype(dtype),
+        "conv_bb": jnp.zeros((n,), dtype),
+        "conv_c": (jax.random.normal(jax.random.fold_in(key, 8), (k, n))
+                   / np.sqrt(k)).astype(dtype),
+        "conv_bc": jnp.zeros((n,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": (jax.random.normal(jax.random.fold_in(key, 9), (di, d))
+                     / np.sqrt(di)).astype(dtype),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b):
+    """Depthwise causal conv1d over the sequence. u: (B, L, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + conv_b)
+
+
+def _conv_step(window, conv_w, conv_b):
+    """One causal-conv step from a (B, K, C) window."""
+    return jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b)
+
+
+def _ssd_chunked(x, b_mat, c_mat, dt, a, chunk: int):
+    """SSD parallel form.
+
+    x: (B, L, H, P); b_mat/c_mat: (B, L, N); dt: (B, L, H); a: (H,) negative.
+    Returns y: (B, L, H, P) and the final state (B, H, P, N).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+    f32 = jnp.float32
+
+    xc = (x * dt[..., None]).astype(f32).reshape(bsz, nc, q, h, p)
+    bc = b_mat.astype(f32).reshape(bsz, nc, q, n)
+    cc = c_mat.astype(f32).reshape(bsz, nc, q, n)
+    ad = (dt.astype(f32) * a).reshape(bsz, nc, q, h)     # log-decay per step
+    cum = jnp.cumsum(ad, axis=2)                          # (B,nc,Q,H)
+
+    # intra-chunk: ((C Bᵀ) ⊙ L) (Δx).  The (B,nc,Q,K,H) decay tensor is the
+    # big intermediate — for bf16 models it is held in bf16 with fp32
+    # accumulation (decay ∈ (0,1]; paper-P7-style precision selection);
+    # fp32 models keep the exact path.
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)            # (B,nc,Q,Q)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    iota = jnp.arange(q)
+    causal = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    lowp = jnp.bfloat16 if x.dtype == jnp.bfloat16 else f32
+    decay = jnp.where(causal, jnp.exp(rel), 0.0).astype(lowp)
+    y_intra = jnp.einsum(
+        "bcqk,bcqkh,bckhp->bcqhp", cb.astype(lowp), decay,
+        xc.astype(lowp), preferred_element_type=f32)
+
+    # chunk boundary states: S_c = Σ_j exp(cum_Q - cum_j) (Δx)_j ⊗ B_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", tail, xc, bc)
+
+    # inter-chunk recurrence (scan over chunks)
+    seg = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H) chunk decay
+
+    def step(carry, inp):
+        s_prev = carry
+        s_c, g = inp
+        s_new = s_prev * g[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, p, n), f32)
+    s_final, s_prevs = jax.lax.scan(
+        step,
+        s0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), seg.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def mamba2_forward(params, x, cfg, chunk: int = 0):
+    """Training/prefill form. x: (B, L, D) -> (B, L, D), (ssm, conv) state."""
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    chunk = chunk or getattr(cfg, "ssm_chunk", 128)
+    z = x @ params["w_z"]
+    xs_raw = x @ params["w_x"]
+    b_raw = x @ params["w_b"]
+    c_raw = x @ params["w_c"]
+    dt_raw = x @ params["w_dt"]
+
+    xs = _causal_conv(xs_raw, params["conv_x"], params["conv_bx"])
+    b_mat = _causal_conv(b_raw, params["conv_b"], params["conv_bb"])
+    c_mat = _causal_conv(c_raw, params["conv_c"], params["conv_bc"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(*xs.shape[:2], nh, p)
+    y, s_final = _ssd_chunked(xh, b_mat, c_mat, dt, a, chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    k = cfg.conv_kernel
+    conv_cache = {
+        "x": _tail(xs_raw, k - 1), "b": _tail(b_raw, k - 1),
+        "c": _tail(c_raw, k - 1),
+    }
+    return out, (s_final, conv_cache)
+
+
+def _tail(u, k):
+    pad = jnp.pad(u, ((0, 0), (k, 0), (0, 0)))
+    return pad[:, -k:, :] if k else u[:, :0, :]
+
+
+def mamba2_decode_step(params, x, state, cfg):
+    """x: (B, 1, D); state = (ssm (B,H,P,N) f32, conv dict of (B,K-1,·))."""
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    ssm, conv = state
+    z = x @ params["w_z"]
+    xs_raw = x @ params["w_x"]
+    b_raw = x @ params["w_b"]
+    c_raw = x @ params["w_c"]
+    dt_raw = x @ params["w_dt"]
+
+    win_x = jnp.concatenate([conv["x"], xs_raw], axis=1)
+    win_b = jnp.concatenate([conv["b"], b_raw], axis=1)
+    win_c = jnp.concatenate([conv["c"], c_raw], axis=1)
+    xs = _conv_step(win_x, params["conv_x"], params["conv_bx"])[:, None, :]
+    b_mat = _conv_step(win_b, params["conv_b"], params["conv_bb"])[:, None, :]
+    c_mat = _conv_step(win_c, params["conv_c"], params["conv_bc"])[:, None, :]
+    conv_next = {"x": win_x[:, 1:], "b": win_b[:, 1:], "c": win_c[:, 1:]}
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])  # (B,1,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(-1, nh, p).astype(jnp.float32)            # (B,H,P)
+    g = jnp.exp(dt[:, 0, :] * a)                              # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[:, 0, :, None], b_mat[:, 0])
+    ssm_next = ssm * g[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), ssm_next)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], (ssm_next, conv_next)
+
+
+def mamba2_init_state(cfg, batch: int, dtype):
+    nh, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    k = cfg.conv_kernel - 1
+    return (
+        jnp.zeros((batch, nh, p, n), jnp.float32),
+        {"x": jnp.zeros((batch, k, cfg.d_inner), dtype),
+         "b": jnp.zeros((batch, k, cfg.ssm_state), dtype),
+         "c": jnp.zeros((batch, k, cfg.ssm_state), dtype)},
+    )

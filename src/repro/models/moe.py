@@ -1,0 +1,145 @@
+"""Token-choice top-k mixture of experts (Mixtral / Phi-3.5-MoE style).
+
+Dispatch is sort-based with a capacity limit (GShard-style, no giant one-hot
+matmuls): tokens are argsorted by expert id, ranked within their expert
+segment, and scattered into a dense (E, C, D) buffer; the expert FFNs run as
+one batched einsum (MXU-friendly); outputs are gathered back and combined
+with the (renormalized) router weights.  Over-capacity tokens are dropped
+(standard on TPUs — static shapes are required).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale_d = 1.0 / np.sqrt(d)
+    scale_f = 1.0 / np.sqrt(f)
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * scale_d).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * scale_d).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * scale_d).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * scale_f).astype(dtype),
+    }
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, L, D) -> (B, L, D), aux load-balance loss (scalar).
+
+    Dispatch is vmapped PER BATCH ROW (GShard-style groups): the sort /
+    rank / scatter for a row's tokens never crosses the row, so with the
+    batch axis sharded over data parallel the entire dispatch stays
+    device-local.  (§Perf iteration 3: a token-global dispatch made GSPMD
+    all-reduce the (E, C, d_ff) expert buffers across the mesh — ~2.2 TB of
+    per-step collective traffic on mixtral train_4k.  Per-row capacity is
+    the standard TPU trade: C = ceil(cf·L·k/E) per row.)
+    """
+    b, l, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(np.ceil(cfg.capacity_factor * l * k / e)), k)
+
+    def one_row(xr):  # (L, D)
+        logits = xr.astype(jnp.float32) @ params["router"]        # (L, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, sel = jax.lax.top_k(probs, k)                    # (L, k)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+        # load-balance aux loss (Switch): E * sum_e f_e * p_e
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((e,), jnp.float32).at[sel.reshape(-1)].add(1.0) / (l * k)
+        aux = e * jnp.sum(me * ce)
+
+        flat_sel = sel.reshape(-1)                                # (L*k,)
+        flat_tok = jnp.repeat(jnp.arange(l), k)
+        flat_w = weights.reshape(-1)
+        order = jnp.argsort(flat_sel, stable=True)
+        sorted_sel = flat_sel[order]
+        sorted_tok = flat_tok[order]
+        sorted_w = flat_w[order]
+        counts = jnp.zeros((e,), jnp.int32).at[flat_sel].add(1)
+        seg_start = jnp.cumsum(counts) - counts                   # (E,)
+        rank = jnp.arange(l * k) - seg_start[sorted_sel]
+        keep = rank < cap
+        dest = jnp.where(keep, sorted_sel * cap + rank, e * cap)  # overflow
+
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(xr[sorted_tok])
+        return buf[: e * cap].reshape(e, cap, d), (dest, sorted_tok, sorted_w,
+                                                   keep, aux)
+
+    hidden, (dest, sorted_tok, sorted_w, keep, aux) = jax.vmap(one_row)(x)
+    # (B, E, C, D) x (E, D, F): experts batched on the MXU; TP on F
+    gate = jax.nn.silu(jnp.einsum("becd,edf->becf", hidden, params["w_gate"]))
+    up = jnp.einsum("becd,edf->becf", hidden, params["w_up"])
+    out_e = jnp.einsum("becf,efd->becd", gate * up, params["w_down"])
+
+    def combine_row(out_r, dest_r, tok_r, w_r, keep_r):
+        out_flat = jnp.concatenate(
+            [out_r.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
+        return jnp.zeros((l, d), jnp.float32).at[tok_r].add(
+            out_flat[dest_r].astype(jnp.float32)
+            * (w_r * keep_r.astype(jnp.float32))[:, None])
+
+    y = jax.vmap(combine_row)(out_e, dest, sorted_tok, sorted_w, keep)
+    return y.astype(x.dtype), aux.mean()
+
+
+def moe_apply_dispatch(params, x, cfg):
+    """Mesh-aware entry point: explicit shard_map when a mesh is installed.
+
+    §Perf iteration 3d: GSPMD left alone partitions the sort/scatter/expert
+    einsums with activation-sized partial-sum all-reduces (measured 2.0–5.7
+    TB/step on mixtral train_4k).  Under shard_map the schedule is explicit
+    and optimal: tokens stay local to their data shard; expert weights are
+    FSDP-sharded on the contraction dim and all-gathered (weight-sized,
+    ~176 MB/layer) right before use — the transpose reduce-scatters the
+    gradients back into the ZeRO shard; the only activation collective is
+    the inherent TP psum of the block output.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None:
+        return moe_apply(params, x, cfg)
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nd = 1
+    for a in dp:
+        nd *= mesh.shape[a]
+    if x.shape[0] % nd != 0:
+        return moe_apply(params, x, cfg)  # tiny batches: replicate
+
+    has_data = "data" in mesh.axis_names and mesh.shape["data"] > 1
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(None, "data", "model") if has_data else P(None, None, "model"),
+        "w_up": P(None, "data", "model") if has_data else P(None, None, "model"),
+        "w_down": P(None, "model", "data") if has_data else P(None, "model", None),
+    }
+
+    def local_moe(xb, router, wg, wu, wd):
+        if has_data:
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        y, aux = moe_apply(
+            {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd},
+            xb, cfg)
+        y = jax.lax.psum(y, "model")  # TP contraction of w_down output
+        aux = jax.lax.pmean(aux, dp) if dp else aux
+        return y, aux
+
+    y, aux = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(dp, None, None), w_specs["router"], w_specs["w_gate"],
+                  w_specs["w_up"], w_specs["w_down"]),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return y, aux

@@ -1,0 +1,251 @@
+"""Decoder-only transformer stack: dense, MoE, and local/global variants.
+
+One scanned block implementation serves qwen2/qwen2.5/nemotron/internvl2
+(dense), mixtral/phi3.5 (MoE), and gemma2 (local/global alternation with
+pre+post norms and softcaps).  Layers are stacked into leading-axis pytrees
+and driven by jax.lax.scan with rematerialization — compile time stays
+O(1 layer) and activation memory O(sqrt)-style for the 64-layer configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import decode_attention, flash_attention
+from .layers import mlp_init, mlp_apply, rmsnorm, rmsnorm_init, rope
+from .moe import moe_apply_dispatch, moe_init
+from .sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sd = 1.0 / np.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * sd).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * sd).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * sd).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d))
+               / np.sqrt(h * hd)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def block_init(key, cfg, dtype, moe: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if moe:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    if cfg.gemma_norms:
+        p["ln1_post"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ln2_post"] = rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def stack_init(key, cfg, dtype) -> dict:
+    """Stacked per-layer params with leading layer axis (scan-ready)."""
+    n = cfg.n_layers
+    moe = cfg.n_experts > 0
+    if cfg.attn_type == "local_global":
+        n_groups = n // 2
+        keys = jax.random.split(key, n_groups)
+        local = jax.vmap(lambda k: block_init(k, cfg, dtype, moe))(keys)
+        keys2 = jax.random.split(jax.random.fold_in(key, 1), n_groups)
+        glob = jax.vmap(lambda k: block_init(k, cfg, dtype, moe))(keys2)
+        return {"local": local, "global": glob}
+    keys = jax.random.split(key, n)
+    return {"layers": jax.vmap(lambda k: block_init(k, cfg, dtype, moe))(keys)}
+
+
+# ---------------------------------------------------------------------------
+# attention application
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x, cfg):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    return (q.reshape(b, s, h, hd), k.reshape(b, s, kv, hd),
+            v.reshape(b, s, kv, hd))
+
+
+def attn_full(p, x, cfg, window: int, causal: bool = True,
+              q_block: int = 512, kv_block: int = 1024):
+    """Full-sequence attention (train / prefill). Returns y, (k, v)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.arange(s)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    o = flash_attention(q, k, v, causal, window, cfg.attn_softcap, 0,
+                        q_block, kv_block)
+    y = o.reshape(b, s, -1) @ p["wo"]
+    return y, (k, v)
+
+
+def attn_decode(p, x, cfg, kc, vc, pos, window_cache: bool):
+    """One-token attention over a cache. kc/vc: (B, S_cache, KV, hd).
+
+    window_cache: cache is a rolling buffer of size `cfg.window`
+    (keys stored with absolute-position RoPE; slot order is irrelevant
+    because RoPE scores depend only on relative positions).
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    q = rope(q, jnp.full((1,), pos), cfg.rope_theta)
+    k = rope(k, jnp.full((1,), pos), cfg.rope_theta)
+    s_cache = kc.shape[1]
+    slot = (pos % s_cache) if window_cache else pos
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+    if window_cache:
+        cur = jnp.minimum(pos + 1, s_cache)
+        o = decode_attention(q, kc, vc, cur, 0, cfg.attn_softcap)
+    else:
+        o = decode_attention(q, kc, vc, pos + 1, 0, cfg.attn_softcap)
+    y = o.reshape(b, 1, -1) @ p["wo"]
+    return y, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _ffn(p, x, cfg):
+    if "moe" in p:
+        y, aux = moe_apply_dispatch(p["moe"], x, cfg)
+        return y, aux
+    return mlp_apply(p["mlp"], x, cfg.mlp), 0.0
+
+
+def block_apply(p, x, cfg, window: int):
+    """Full-seq block. Returns (x, aux, (k, v))."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kvpair = attn_full(p["attn"], h, cfg, window)
+    if cfg.gemma_norms:
+        a = rmsnorm(p["ln1_post"], a, cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    f, aux = _ffn(p, h, cfg)
+    if cfg.gemma_norms:
+        f = rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+    x = x + f
+    x = constrain(x, "batch", None, None)
+    return x, aux, kvpair
+
+
+def block_decode(p, x, cfg, kc, vc, pos, window_cache: bool):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kc, vc = attn_decode(p["attn"], h, cfg, kc, vc, pos, window_cache)
+    if cfg.gemma_norms:
+        a = rmsnorm(p["ln1_post"], a, cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    f, _ = _ffn(p, h, cfg)
+    if cfg.gemma_norms:
+        f = rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+    return x + f, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _layer_window(cfg, local: bool) -> int:
+    if cfg.attn_type == "swa":
+        return cfg.window
+    if cfg.attn_type == "local_global":
+        return cfg.window if local else 0
+    return 0
+
+
+def stack_forward(params, x, cfg, collect_kv: bool = False):
+    """Full-seq pass over all layers. Returns (x, aux_total, caches|None)."""
+
+    if cfg.attn_type == "local_global":
+        def body(carry, lp):
+            h, aux = carry
+            h, a1, kv_l = block_apply(lp["l"], h, cfg, _layer_window(cfg, True))
+            h, a2, kv_g = block_apply(lp["g"], h, cfg, _layer_window(cfg, False))
+            out = (kv_l, kv_g) if collect_kv else None
+            return (h, aux + a1 + a2), out
+
+        pairs = {"l": params["local"], "g": params["global"]}
+        body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), kvs = jax.lax.scan(body, (x, 0.0), pairs)
+        return x, aux, kvs
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a, kvpair = block_apply(lp, h, cfg, _layer_window(cfg, True))
+        return (h, aux + a), (kvpair if collect_kv else None)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), kvs = jax.lax.scan(body, (x, 0.0), params["layers"])
+    return x, aux, kvs
+
+
+def stack_decode(params, x, cfg, cache, pos):
+    """One-token pass. cache: dict of stacked (L, B, S, KV, hd) k/v arrays."""
+    if cfg.attn_type == "local_global":
+        def body(h, xs):
+            lp_pair, kl, vl, kg, vg = xs
+            h, kl, vl = block_decode(lp_pair["l"], h, cfg, kl, vl, pos, True)
+            h, kg, vg = block_decode(lp_pair["g"], h, cfg, kg, vg, pos, False)
+            return h, (kl, vl, kg, vg)
+
+        pairs = {"l": params["local"], "g": params["global"]}
+        h, (kl, vl, kg, vg) = jax.lax.scan(
+            body, x, (pairs, cache["k_local"], cache["v_local"],
+                      cache["k_global"], cache["v_global"]))
+        return h, {"k_local": kl, "v_local": vl, "k_global": kg, "v_global": vg}
+
+    window_cache = cfg.attn_type == "swa"
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, kc, vc = block_decode(lp, h, cfg, kc, vc, pos, window_cache)
+        return h, (kc, vc)
+
+    h, (k, v) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    return h, {"k": k, "v": v}
+
+
+def init_cache(cfg, batch: int, seq: int, dtype) -> Dict[str, jnp.ndarray]:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.attn_type == "local_global":
+        n = cfg.n_layers // 2
+        w = min(cfg.window, seq)
+        return {
+            "k_local": jnp.zeros((n, batch, w, kv, hd), dtype),
+            "v_local": jnp.zeros((n, batch, w, kv, hd), dtype),
+            "k_global": jnp.zeros((n, batch, seq, kv, hd), dtype),
+            "v_global": jnp.zeros((n, batch, seq, kv, hd), dtype),
+        }
+    s_cache = min(cfg.window, seq) if cfg.attn_type == "swa" else seq
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, s_cache, kv, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, s_cache, kv, hd), dtype),
+    }

@@ -1,0 +1,160 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the task spec the conv/mel frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings (B, T_frames, d_model).  The encoder is a
+bidirectional transformer with sinusoidal positions (as in Whisper); the
+decoder uses a learned position table, causal self-attention and cross
+attention into the encoder output.  MHA (kv_heads == n_heads), GELU MLPs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import decode_attention, flash_attention
+from .layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from .transformer import attn_init
+
+
+def _sinusoidal(length: int, d: int, dtype):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10_000 ** (2 * dim / d))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(emb, dtype)
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": attn_init(ks[0], cfg, dtype),
+        "ln_x": rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": attn_init(ks[1], cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def whisper_init(key, cfg, dtype, max_dec_positions: int = 448) -> dict:
+    ks = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "pos_dec": (jax.random.normal(ks[2], (max_dec_positions, cfg.d_model))
+                    * 0.01).astype(dtype),
+        "ln_enc": rmsnorm_init(cfg.d_model, dtype),
+        "ln_dec": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, -1, cfg.head_dim)
+
+
+def _mha_full(p, xq, xkv, cfg, causal):
+    b, s, _ = xq.shape
+    q = _heads(xq @ p["wq"], cfg)
+    k = _heads(xkv @ p["wk"], cfg)
+    v = _heads(xkv @ p["wv"], cfg)
+    o = flash_attention(q, k, v, causal, 0, 0.0, 0, 512, 1024)
+    return o.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
+def encode(params, frames, cfg):
+    """frames: (B, T, d_model) stub embeddings -> encoder states."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)[None]
+
+    def body(h, lp):
+        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        a, _ = _mha_full(lp["attn"], hn, hn, cfg, causal=False)
+        h = h + a
+        h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps), "gelu")
+        return h, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def decode_teacher_forced(params, enc_out, tok_emb, cfg, collect_kv=False):
+    """tok_emb: (B, Td, d) embedded target tokens (shifted right).
+
+    collect_kv: also return per-layer self-attention K/V (prefill cache).
+    """
+    td = tok_emb.shape[1]
+    x = tok_emb + params["pos_dec"][None, :td, :]
+
+    def body(h, lp):
+        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        a, kv = _mha_full(lp["self_attn"], hn, hn, cfg, causal=True)
+        h = h + a
+        hq = rmsnorm(lp["ln_x"], h, cfg.norm_eps)
+        c, _ = _mha_full(lp["cross_attn"], hq, enc_out, cfg, causal=False)
+        h = h + c
+        h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps), "gelu")
+        return h, (kv if collect_kv else None)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, kvs = jax.lax.scan(body, x, params["dec"])
+    out = rmsnorm(params["ln_dec"], x, cfg.norm_eps)
+    return (out, kvs) if collect_kv else out
+
+
+def build_cross_cache(params, enc_out, cfg):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    def body(_, lp):
+        k = _heads(enc_out @ lp["cross_attn"]["wk"], cfg)
+        v = _heads(enc_out @ lp["cross_attn"]["wv"], cfg)
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec"])
+    return ck, cv  # (L, B, T_enc, H, hd)
+
+
+def decode_step(params, tok_emb, cache, pos, cfg):
+    """One decoder token. cache: self_k/self_v (L,B,S,H,hd), cross_k/cross_v."""
+    x = tok_emb + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], pos % params["pos_dec"].shape[0], 1)[None]
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        b = h.shape[0]
+        hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        q = _heads(hn @ lp["self_attn"]["wq"], cfg)
+        k = _heads(hn @ lp["self_attn"]["wk"], cfg)
+        v = _heads(hn @ lp["self_attn"]["wv"], cfg)
+        sk = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, pos, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, pos, 0, 0))
+        a = decode_attention(q, sk, sv, pos + 1)
+        h = h + a.reshape(b, 1, -1) @ lp["self_attn"]["wo"]
+
+        hq = rmsnorm(lp["ln_x"], h, cfg.norm_eps)
+        qx = _heads(hq @ lp["cross_attn"]["wq"], cfg)
+        c = decode_attention(qx, ck, cv, ck.shape[1])
+        h = h + c.reshape(b, 1, -1) @ lp["cross_attn"]["wo"]
+        h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps), "gelu")
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rmsnorm(params["ln_dec"], x, cfg.norm_eps)
+    new_cache = dict(cache, self_k=sk, self_v=sv)
+    return x, new_cache

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .compression import compress_int8, decompress_int8
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "compress_int8", "decompress_int8"]

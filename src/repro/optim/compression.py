@@ -1,0 +1,27 @@
+"""Gradient compression for the data-parallel all-reduce (int8 + error
+feedback).
+
+At 1000+-node scale the DP gradient all-reduce dominates the step's
+collective bytes.  Optional int8 quantization with per-tensor scales cuts it
+4× vs fp32 (2× vs bf16); the quantization error is carried in an error-
+feedback buffer so the compression is unbiased over time (Seide et al.;
+1-bit Adam lineage).  Used by train.steps.make_train_step(compress_grads=True)
+around the shard_map psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray):
+    """Returns (q int8, scale f32, new_err)."""
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_err = g - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,31 @@
+"""Floating-point precision policy (paper P7: FP64/FP32 selection).
+
+The paper added an FP32 mode to SISSO++ because datacenter GPUs run FP32 at
+≥2× FP64 peak.  On TPU the interesting axis is bf16-matmul/fp32-accumulate vs
+fp32 vs fp64 (fp64 is CPU-validation only — TPUs have no fast fp64).  The
+SISSO phases take a ``dtype`` everywhere; this module owns the global x64
+switch and the dtype registry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "fp32": jnp.float32,
+    "fp64": jnp.float64,
+}
+
+
+def set_precision(name: str):
+    """Enable the requested precision; returns the jnp dtype."""
+    if name not in _DTYPES:
+        raise ValueError(f"precision must be one of {sorted(_DTYPES)}, got {name}")
+    if name == "fp64":
+        jax.config.update("jax_enable_x64", True)
+    return _DTYPES[name]
+
+
+def dtype_of(name: str):
+    return _DTYPES[name]

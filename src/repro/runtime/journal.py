@@ -1,0 +1,78 @@
+"""Work journal: restartable sweeps over huge embarrassingly-parallel spaces.
+
+The SISSO ℓ0 stage evaluates 10^9–10^13 tuples in deterministic blocks
+(core/l0.py `tuple_blocks` / kernels/ops.py tile chunks).  The journal
+records, atomically, the index of the next unfinished block plus the running
+top-k state, so:
+
+* **preemption** loses at most one block of work;
+* **stragglers**: because block results merge idempotently (max/min/top-k),
+  a coordinator may *reissue* an unacked block to another worker and accept
+  whichever finishes first — duplicate completions are harmless
+  (`mark_reissued` tracks them for accounting);
+* **restart** resumes from `has_state()`/`restore()` without recomputation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class WorkJournal:
+    def __init__(self, path: str):
+        self.path = path
+        self.reissues = 0
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    # -- generic block-sweep state (core/l0.py) -------------------------
+    def has_state(self) -> bool:
+        return os.path.exists(self.path)
+
+    def record(self, next_block: int, best_sse: np.ndarray,
+               best_tuples: np.ndarray) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({
+                "kind": "blocks",
+                "next_block": int(next_block),
+                "best_sse": np.asarray(best_sse).tolist(),
+                "best_tuples": np.asarray(best_tuples).tolist(),
+                "reissues": self.reissues,
+            }, f)
+        os.replace(tmp, self.path)
+
+    def restore(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        with open(self.path) as f:
+            st = json.load(f)
+        assert st["kind"] == "blocks", st["kind"]
+        self.reissues = st.get("reissues", 0)
+        return (np.asarray(st["best_sse"], np.float64),
+                np.asarray(st["best_tuples"], np.int64),
+                int(st["next_block"]))
+
+    # -- tiled-kernel sweep state (kernels/ops.py) ----------------------
+    def record_tiles(self, next_chunk: int, best: List[tuple]) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"kind": "tiles", "next_chunk": int(next_chunk),
+                       "best": [list(b) for b in best],
+                       "reissues": self.reissues}, f)
+        os.replace(tmp, self.path)
+
+    def restore_tiles(self) -> Tuple[List[tuple], int]:
+        with open(self.path) as f:
+            st = json.load(f)
+        assert st["kind"] == "tiles", st["kind"]
+        self.reissues = st.get("reissues", 0)
+        best = [tuple(b) for b in st["best"]]
+        return best, int(st["next_chunk"])
+
+    def mark_reissued(self, n: int = 1) -> None:
+        self.reissues += n
+
+    def clear(self) -> None:
+        if os.path.exists(self.path):
+            os.remove(self.path)

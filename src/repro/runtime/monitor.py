@@ -1,0 +1,55 @@
+"""Step-time monitoring & straggler detection.
+
+On a pod, a straggling host shows up as a slow step for *everyone* (SPMD
+barrier).  The monitor keeps a rolling median of step times and flags steps
+exceeding `straggler_factor ×` median; the runtime response is (a) for
+journaled sweeps: reissue the unit (runtime/journal.py), (b) for training:
+emit a flag so the launcher can swap in a hot-spare host at the next
+checkpoint boundary.  A heartbeat file doubles as an external liveness probe.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+
+class StepMonitor:
+    def __init__(self, window: int = 50, straggler_factor: float = 3.0,
+                 heartbeat_path: Optional[str] = None):
+        self.window: Deque[float] = deque(maxlen=window)
+        self.factor = straggler_factor
+        self.heartbeat_path = heartbeat_path
+        self.straggler_steps: List[int] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record one step; returns True if it was a straggler step."""
+        dt = time.perf_counter() - self._t0
+        self._step += 1
+        is_straggler = False
+        if len(self.window) >= 5:
+            med = sorted(self.window)[len(self.window) // 2]
+            is_straggler = dt > self.factor * med
+        if is_straggler:
+            self.straggler_steps.append(self._step)
+        self.window.append(dt)
+        if self.heartbeat_path:
+            tmp = self.heartbeat_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": self._step, "t": time.time(),
+                           "last_step_s": dt}, f)
+            os.replace(tmp, self.heartbeat_path)
+        return is_straggler
+
+    @property
+    def median_step_s(self) -> float:
+        if not self.window:
+            return 0.0
+        return sorted(self.window)[len(self.window) // 2]

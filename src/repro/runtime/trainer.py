@@ -1,0 +1,104 @@
+"""Fault-tolerant training loop: checkpoint/restart, preemption, stragglers.
+
+The loop is a pure function of (config, checkpoint dir, data seed), so a
+restarted run — same dir — resumes bit-exactly: the data stream is
+step-indexed (data/synthetic.py), the optimizer state rides in the
+checkpoint, and saves are atomic (checkpoint/checkpointer.py).  Preemption
+is modeled by `PreemptionError` raised from a hook (tests) or SIGTERM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..data import TokenStream
+from ..models import lm
+from ..models.base import LMConfig
+from ..optim import AdamWConfig
+from ..train.steps import TrainStepConfig, init_train_state, make_train_step
+from .monitor import StepMonitor
+
+
+class PreemptionError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    batch: int = 4
+    seq_len: int = 64
+    seed: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    compress_grads: bool = False
+    opt: AdamWConfig = dataclasses.field(
+        default_factory=lambda: AdamWConfig(lr=1e-3, warmup_steps=10,
+                                            total_steps=100))
+
+
+class Trainer:
+    def __init__(self, cfg: LMConfig, tcfg: TrainerConfig, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.stream = TokenStream(cfg.vocab_size, tcfg.batch, tcfg.seq_len,
+                                  tcfg.seed)
+        import os
+        os.makedirs(tcfg.ckpt_dir, exist_ok=True)
+        self.ckpt = Checkpointer(tcfg.ckpt_dir)
+        self.monitor = StepMonitor(
+            heartbeat_path=tcfg.ckpt_dir + "/heartbeat.json")
+        scfg = TrainStepConfig(opt=tcfg.opt, compress_grads=tcfg.compress_grads)
+        self._step_cfg = scfg
+        self._train_step = make_train_step(cfg, scfg, mesh=mesh)
+        self.losses: List[float] = []
+
+    def _init_or_restore(self):
+        params, opt_state = init_train_state(
+            self.cfg, self._step_cfg, jax.random.PRNGKey(self.tcfg.seed))
+        start = 0
+        latest = self.ckpt.latest()
+        if latest is not None:
+            from ..checkpoint import restore_pytree
+            (params, opt_state), step, _ = restore_pytree(
+                self.tcfg.ckpt_dir, latest, template=(params, opt_state))
+            start = step
+        return params, opt_state, start
+
+    def run(self, preempt_hook: Optional[Callable[[int], None]] = None
+            ) -> Dict[str, float]:
+        params, opt_state, start = self._init_or_restore()
+        signal.signal(signal.SIGTERM,
+                      lambda *_: (_ for _ in ()).throw(PreemptionError()))
+        step = start
+        try:
+            for step in range(start, self.tcfg.total_steps):
+                if preempt_hook is not None:
+                    preempt_hook(step)  # may raise PreemptionError
+                self.monitor.start()
+                batch = self.stream.batch_at(step)
+                params, opt_state, metrics = self._train_step(
+                    params, opt_state, batch)
+                self.monitor.stop()
+                self.losses.append(float(metrics["loss"]))
+                if (step + 1) % self.tcfg.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, (params, opt_state),
+                                   extra={"loss": self.losses[-1]})
+        except PreemptionError:
+            # emergency checkpoint at the preemption boundary
+            self.ckpt.save(step, (params, opt_state), blocking=True)
+            raise
+        finally:
+            self.ckpt.wait()
+        return {
+            "final_loss": self.losses[-1] if self.losses else float("nan"),
+            "first_loss": self.losses[0] if self.losses else float("nan"),
+            "steps_run": len(self.losses),
+            "straggler_steps": len(self.monitor.straggler_steps),
+        }

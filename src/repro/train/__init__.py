@@ -1,0 +1,6 @@
+from .steps import (
+    make_train_step, make_prefill_step, make_decode_step, TrainStepConfig,
+)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "TrainStepConfig"]

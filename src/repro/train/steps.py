@@ -1,0 +1,224 @@
+"""jit-compiled train / serve step builders with mesh shardings.
+
+These are the functions the multi-pod dry-run lowers: `train_step` for
+train_4k, `prefill_step` for prefill_32k, `decode_step` for decode_32k /
+long_500k.  Sharding policy lives in models/sharding.py; steps only wire
+in/out shardings and the precision/donation plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import lm
+from ..models.base import LMConfig
+from ..models.sharding import (
+    constrain, tree_param_shardings, tree_replicated, use_mesh)
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..optim.compression import compress_int8, decompress_int8
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    compress_grads: bool = False  # int8 + error feedback on the DP all-reduce
+    accum_steps: int = 1          # §Perf iteration 1b: gradient accumulation
+                                  # (microbatching): activation temp memory
+                                  # scales ~1/accum_steps at fixed global batch
+
+
+def _batch_sharding(mesh: Optional[Mesh], batch_tpl) -> Any:
+    if mesh is None:
+        return None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nd = _nd(mesh, dp)
+
+    def one(x):
+        # batch dim shards over DP only when divisible (long_500k has B=1)
+        first = dp if (len(x.shape) and x.shape[0] % nd == 0) else None
+        spec = [first] + [None] * (len(x.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tpl)
+
+
+def _opt_shardings(mesh: Mesh, params_tpl, fsdp: bool = True):
+    ps = tree_param_shardings(mesh, params_tpl, fsdp=fsdp)
+    return {
+        "master": ps, "m": ps, "v": ps,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def make_train_step(
+    cfg: LMConfig,
+    step_cfg: TrainStepConfig = TrainStepConfig(),
+    mesh: Optional[Mesh] = None,
+    params_tpl=None,
+    batch_tpl=None,
+    fsdp: bool = True,
+    donate: bool = True,
+):
+    """Returns a jit'd (params, opt_state, batch) -> (params, opt, metrics)."""
+
+    accum = max(int(step_cfg.accum_steps), 1)
+
+    def train_step(params, opt_state, batch):
+        with use_mesh(mesh):
+            def loss_of(p, b):
+                loss, metrics = lm.loss_fn(cfg, p, b)
+                return loss, metrics
+
+            if accum == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, batch)
+            else:
+                # microbatch over the leading batch dim; accumulate fp32 grads
+                def split(x):
+                    mb = x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+                    return constrain(mb, None, "batch",
+                                     *([None] * (mb.ndim - 2)))
+
+                micro = jax.tree.map(split, batch)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def mb_step(carry, b):
+                    g_acc, loss_acc = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, b)
+                    g_acc = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                    return (g_acc, loss_acc + l), None
+
+                (grads, loss_sum), _ = jax.lax.scan(
+                    mb_step, (g0, jnp.zeros((), jnp.float32)),
+                    micro)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss_sum / accum
+                metrics = {"loss": loss}
+            if step_cfg.compress_grads:
+                # int8 + error feedback applied at the DP-reduction boundary
+                # (error buffers ride in opt_state["err"])
+                def cg(g, e):
+                    q, s, e2 = compress_int8(g, e)
+                    return decompress_int8(q, s), e2
+                flat_g, tdef = jax.tree.flatten(grads)
+                flat_e = jax.tree.leaves(opt_state["err"])
+                pairs = [cg(g, e) for g, e in zip(flat_g, flat_e)]
+                grads = tdef.unflatten([p[0] for p in pairs])
+                opt_state = dict(
+                    opt_state, err=tdef.unflatten([p[1] for p in pairs]))
+            err = opt_state.get("err") if step_cfg.compress_grads else None
+            core_state = {k: v for k, v in opt_state.items() if k != "err"}
+            new_params, new_state, om = adamw_update(
+                step_cfg.opt, grads, core_state, params)
+            if err is not None:
+                new_state["err"] = err
+            metrics = dict(metrics, **om, loss=loss)
+            return new_params, new_state, metrics
+
+    if mesh is None:
+        return jax.jit(train_step)
+    pshard = tree_param_shardings(mesh, params_tpl, fsdp=fsdp)
+    oshard = _opt_shardings(mesh, params_tpl, fsdp=fsdp)
+    if step_cfg.compress_grads:
+        oshard = dict(oshard, err=oshard["m"])
+    bshard = _batch_sharding(mesh, batch_tpl)
+    # NOTE: donation is correct for production (TPU) but deadlocks XLA:CPU
+    # in-process collectives — execution tests pass donate=False.
+    return jax.jit(
+        train_step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def init_train_state(cfg: LMConfig, step_cfg: TrainStepConfig, key,
+                     max_dec_positions: int = 448):
+    params = lm.init_params(cfg, key, max_dec_positions)
+    opt_state = adamw_init(params)
+    if step_cfg.compress_grads:
+        opt_state["err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _cache_shardings(mesh: Mesh, cfg: LMConfig, cache_tpl):
+    """KV caches: batch-sharded over DP; heads over 'model' when divisible.
+
+    Leading axis is the stacked-layer/group axis -> never sharded.
+    SSM states (B, H, P, N) shard H over model.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    msize = mesh.shape["model"]
+
+    def one(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        spec: list = [None] * len(x.shape)
+        if len(x.shape) >= 2:
+            spec[1] = dp if x.shape[1] % _nd(mesh, dp) == 0 else None
+        if name.startswith(("k", "v", "self", "cross")) and len(x.shape) == 5:
+            # (L, B, S, KV, hd): shard kv-heads if divisible, else seq
+            if x.shape[3] % msize == 0:
+                spec[3] = "model"
+            elif x.shape[2] % msize == 0:
+                spec[2] = "model"
+        if name == "ssm" and len(x.shape) == 5:
+            if x.shape[2] % msize == 0:
+                spec[2] = "model"   # (L, B, H, P, N): heads
+        if name == "conv" and len(x.shape) == 4:
+            if x.shape[3] % msize == 0:
+                spec[3] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tpl)
+
+
+def _nd(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def make_prefill_step(cfg: LMConfig, mesh: Optional[Mesh] = None,
+                      params_tpl=None, inputs_tpl=None):
+    def prefill_step(params, inputs):
+        with use_mesh(mesh):
+            return lm.prefill(cfg, params, inputs)
+
+    if mesh is None:
+        return jax.jit(prefill_step)
+    pshard = tree_param_shardings(mesh, params_tpl)
+    ishard = _batch_sharding(mesh, inputs_tpl)
+    return jax.jit(prefill_step, in_shardings=(pshard, ishard))
+
+
+def make_decode_step(cfg: LMConfig, mesh: Optional[Mesh] = None,
+                     params_tpl=None, cache_tpl=None, donate: bool = True):
+    def decode_step(params, token, cache, pos):
+        with use_mesh(mesh):
+            return lm.decode_step(cfg, params, token, cache, pos)
+
+    if mesh is None:
+        return jax.jit(decode_step)
+    pshard = tree_param_shardings(mesh, params_tpl)
+    cshard = _cache_shardings(mesh, cfg, cache_tpl)
+    tshard = _batch_sharding(mesh, jax.ShapeDtypeStruct((1, 1), jnp.int32))
+    return jax.jit(
+        decode_step,
+        in_shardings=(pshard, tshard, cshard, None),
+        out_shardings=(None, cshard),
+        donate_argnums=(2,) if donate else (),
+    )

@@ -1,0 +1,124 @@
+"""Per-arch smoke tests: reduced configs, one forward/train step on CPU,
+shape + no-NaN assertions, and prefill/decode == teacher-forced consistency.
+"""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.models.base import LMConfig
+
+ARCH_MODULES = {
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "qwen2.5-32b": "repro.configs.qwen2p5_32b",
+    "nemotron-4-15b": "repro.configs.nemotron4_15b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3p5_moe",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+}
+ARCHS = sorted(ARCH_MODULES)
+
+
+def reduced_cfg(arch: str) -> LMConfig:
+    return importlib.import_module(ARCH_MODULES[arch]).reduced()
+
+
+def make_batch(cfg: LMConfig, rng, b=2, s=12):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s + 1)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, 16, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_registry(arch):
+    from repro.configs import get_arch_config
+    cfg = get_arch_config(arch)
+    assert cfg.name == arch
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.param_count > 1e8  # full configs are real model sizes
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad_step(arch, rng):
+    cfg = reduced_cfg(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0),
+                            max_dec_positions=cfg.max_target_len)
+    batch = make_batch(cfg, rng)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    # a gradient step keeps everything finite
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf)).all(), f"{arch}: non-finite grad"
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                              params, grads)
+    loss2, _ = lm.loss_fn(cfg, new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_teacher_forced(arch, rng):
+    cfg = reduced_cfg(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0),
+                            max_dec_positions=cfg.max_target_len)
+    b, total = 2, 10
+    batch = make_batch(cfg, rng, b=b, s=total)
+    toks = batch["tokens"][:, :total]
+
+    def prefill_inputs(upto):
+        inp = {"tokens": toks[:, :upto]}
+        if cfg.family == "vlm":
+            inp["patches"] = batch["patches"]
+        if cfg.family == "audio":
+            inp["frames"] = batch["frames"]
+        return inp
+
+    n_prompt = 4
+    n_ctx = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+    logits, cache = lm.prefill(cfg, params, prefill_inputs(n_prompt),
+                               max_seq=n_ctx + total)
+    for t in range(n_prompt, total):
+        want, _ = lm.prefill(cfg, params, prefill_inputs(t + 1))
+        pos = t if cfg.family in ("audio",) else n_ctx + t
+        got, cache = lm.decode_step(cfg, params, toks[:, t : t + 1], cache, pos)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=5e-2, atol=5e-3,
+            err_msg=f"{arch}: decode diverges from teacher-forced at t={t}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_logit_shapes_and_cache_structure(arch, rng):
+    cfg = reduced_cfg(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(1),
+                            max_dec_positions=cfg.max_target_len)
+    batch = make_batch(cfg, rng, b=2, s=8)
+    logits, cache = lm.prefill(cfg, params, {
+        k: (v[:, :8] if k == "tokens" else v) for k, v in batch.items()})
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    for leaf in jax.tree.leaves(cache):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_param_count_sanity():
+    # spot-check approximate sizes of the full configs (within 25%)
+    from repro.configs import get_arch_config
+    expect = {"qwen2.5-32b": 32e9, "mixtral-8x7b": 47e9, "gemma2-2b": 2.6e9,
+              "qwen2-1.5b": 1.5e9, "mamba2-2.7b": 2.7e9}
+    for name, target in expect.items():
+        got = get_arch_config(name).param_count
+        assert 0.7 * target < got < 1.45 * target, (name, got, target)

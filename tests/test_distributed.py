@@ -1,0 +1,38 @@
+"""Multi-device tests (subprocess: jax device count is locked at init,
+so each mesh scenario runs in its own interpreter with forced host devices).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_DIR = os.path.join(os.path.dirname(__file__), "distributed_progs")
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(prog, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(_SRC)
+    out = subprocess.run(
+        [sys.executable, os.path.join(_DIR, prog), *args],
+        capture_output=True, text=True, timeout=520, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_sis_l0_2d_mesh():
+    out = _run("check_sis_l0.py", "2d")
+    assert "SIS distributed == serial: OK" in out
+    assert "L0 distributed == serial: OK" in out
+
+
+def test_distributed_sis_l0_3d_pod_mesh():
+    out = _run("check_sis_l0.py", "3d")
+    assert "L0 distributed == serial: OK" in out
+
+
+def test_sharded_step_and_elastic_checkpoint():
+    out = _run("check_elastic_ckpt.py")
+    assert "sharded step == single-device step: OK" in out
+    assert "elastic checkpoint reshard (4x1 -> 2x1): OK" in out

@@ -1,0 +1,171 @@
+"""Kernel-vs-oracle validation (Pallas interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes per kernel and assert_allclose against
+the ref.py pure-jnp oracle.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import operators as om
+from repro.core.l0 import compute_gram_stats, score_tuples_qr
+from repro.core.sis import TaskLayout, build_score_context
+from repro.kernels import ops as kops
+from repro.kernels.ref import fused_gen_sis_ref, l0_pair_sse_ref, solve3_sse
+
+
+def _ctx_pair(resid, layout, s, s_pad):
+    ctx = build_score_context(resid, layout)
+    ctx_pad = build_score_context(resid, layout, s_pad=s_pad)
+    return ctx, ctx_pad
+
+
+def _oracle_scores(op_id, xa, xb, ctx_pad, s, l_b=1e-5, u_b=1e8):
+    s_pad = ctx_pad.s_pad
+    ap = jnp.full((xa.shape[0], s_pad), 1.0, jnp.float64).at[:, :s].set(xa)
+    bp = jnp.full((xb.shape[0], s_pad), 1.0, jnp.float64).at[:, :s].set(xb)
+    return np.array(fused_gen_sis_ref(
+        op_id, ap, bp,
+        jnp.asarray(ctx_pad.membership, jnp.float64),
+        jnp.asarray(ctx_pad.y_tilde, jnp.float64),
+        jnp.asarray(ctx_pad.counts, jnp.float64),
+        ctx_pad.n_residuals, l_b, u_b,
+    ))
+
+
+OPS_SWEEP = [om.ADD, om.SUB, om.MUL, om.DIV, om.ABS_DIFF, om.LOG, om.SQRT,
+             om.SQ, om.CB, om.INV, om.EXP, om.NEG_EXP, om.SIX_POW]
+
+
+@pytest.mark.parametrize("op_id", OPS_SWEEP)
+def test_fused_sis_all_ops(rng, op_id):
+    b, s, nf = 100, 156, 30
+    x = rng.uniform(0.5, 3.0, (nf, s))
+    ia, ib = rng.integers(0, nf, b), rng.integers(0, nf, b)
+    layout = TaskLayout.from_task_ids(np.repeat([0, 1], [75, 81]))
+    resid = rng.normal(size=(2, s))
+    ctx, ctx_pad = _ctx_pair(resid, layout, s, ((s + 127) // 128) * 128)
+    got = np.array(kops.fused_gen_sis(
+        op_id, jnp.asarray(x[ia], jnp.float32), jnp.asarray(x[ib], jnp.float32),
+        ctx, 1e-5, 1e8))
+    want = _oracle_scores(op_id, x[ia], x[ib], ctx_pad, s)
+    assert np.array_equal(np.isfinite(got), np.isfinite(want))
+    f = np.isfinite(want)
+    np.testing.assert_allclose(got[f], want[f], atol=5e-6)
+
+
+@pytest.mark.parametrize("b,s,tasks,n_res,block", [
+    (1, 8, 1, 1, 128),       # minimal
+    (37, 100, 1, 3, 128),    # unaligned batch
+    (256, 129, 2, 1, 128),   # s just over one lane tile
+    (300, 400, 3, 2, 256),   # multi-task, multi-residual
+    (512, 2400, 1, 10, 512), # kaggle-sized samples, 10 residuals (paper)
+])
+def test_fused_sis_shape_sweep(rng, b, s, tasks, n_res, block):
+    nf = 20
+    x = rng.uniform(0.5, 3.0, (nf, s))
+    ia, ib = rng.integers(0, nf, b), rng.integers(0, nf, b)
+    ids = np.sort(rng.integers(0, tasks, s))
+    layout = TaskLayout.from_task_ids(ids) if tasks > 1 else TaskLayout.single(s)
+    resid = rng.normal(size=(n_res, s))
+    ctx, ctx_pad = _ctx_pair(resid, layout, s, ((s + 127) // 128) * 128)
+    got = np.array(kops.fused_gen_sis(
+        om.MUL, jnp.asarray(x[ia], jnp.float32), jnp.asarray(x[ib], jnp.float32),
+        ctx, 1e-5, 1e8, block_b=block))
+    want = _oracle_scores(om.MUL, x[ia], x[ib], ctx_pad, s)
+    assert got.shape == (b,)
+    f = np.isfinite(want)
+    np.testing.assert_allclose(got[f], want[f], atol=5e-6)
+
+
+def test_fused_sis_flags_invalid(rng):
+    s = 65  # odd point count => linspace contains an exact zero
+    x = np.stack([np.linspace(-1, 1, s),            # zero divisor value
+                  rng.uniform(0.5, 1.0, s),
+                  np.full(s, 2.0)])                 # constant -> zero variance
+    layout = TaskLayout.single(s)
+    ctx = build_score_context(rng.normal(size=(1, s)), layout)
+    got = np.array(kops.fused_gen_sis(
+        om.DIV, jnp.asarray(x[[1, 2]], jnp.float32), jnp.asarray(x[[0, 1]], jnp.float32),
+        ctx, 1e-5, 1e8))
+    assert got[0] == -np.inf       # b/a has inf at the zero crossing
+    assert np.isfinite(got[1])
+    got2 = np.array(kops.fused_gen_sis(
+        om.MUL, jnp.asarray(x[[2]], jnp.float32), jnp.asarray(x[[2]], jnp.float32),
+        ctx, 1e-5, 1e8))
+    assert got2[0] == -np.inf      # constant*constant -> zero variance
+
+
+# ---------------------------------------------------------------------------
+# ℓ0 tile kernel
+# ---------------------------------------------------------------------------
+
+def test_solve3_closed_form_matches_linalg(rng):
+    for _ in range(50):
+        m3 = rng.normal(size=(3, 3))
+        m3 = m3 @ m3.T + 3 * np.eye(3)
+        r = rng.normal(size=3)
+        yty = float(rng.uniform(10, 20))
+        c = np.linalg.solve(m3, r)
+        want = yty - c @ r
+        got = float(solve3_sse(
+            m3[0, 0], m3[1, 1], m3[2, 2], m3[0, 1], m3[0, 2], m3[1, 2],
+            r[0], r[1], r[2], yty))
+        np.testing.assert_allclose(got, max(want, 0.0), rtol=1e-9)
+
+
+def test_l0_pair_sse_ref_matches_qr(rng):
+    m, s = 20, 90
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    layout = TaskLayout.from_task_ids(np.repeat([0, 1], 45))
+    pairs = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
+    got = np.array(l0_pair_sse_ref(jnp.asarray(x), jnp.asarray(y),
+                                   layout.slices, jnp.asarray(pairs)))
+    want = np.array(score_tuples_qr(jnp.asarray(x), jnp.asarray(y), layout,
+                                    jnp.asarray(pairs)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_l0_score_pairs_gram_gather(rng):
+    m, s = 25, 80
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    pairs = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
+    got = np.array(kops.l0_score_pairs(stats, jnp.asarray(pairs)))
+    want = np.array(score_tuples_qr(jnp.asarray(x), jnp.asarray(y), layout,
+                                    jnp.asarray(pairs)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,s,tasks,block", [
+    (50, 60, 1, 128),
+    (130, 156, 2, 128),    # unaligned m, multi-task (thermal-like)
+    (300, 156, 2, 128),
+    (200, 333, 3, 256),    # unaligned samples, 3 tasks
+])
+def test_l0_search_tiled_exact_topk(rng, m, s, tasks, block):
+    x = rng.uniform(0.5, 3.0, (m, s))
+    ids = np.sort(rng.integers(0, tasks, s))
+    layout = TaskLayout.from_task_ids(ids) if tasks > 1 else TaskLayout.single(s)
+    y = 2 * x[m // 3] * x[m // 2] + rng.normal(0, 0.3, s)
+    tuples, sses, n_eval = kops.l0_search_tiled(x, y, layout, n_keep=10,
+                                                block=block)
+    pairs = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
+    ref = np.array(score_tuples_qr(jnp.asarray(x), jnp.asarray(y), layout,
+                                   jnp.asarray(pairs)))
+    order = np.argsort(ref, kind="stable")[:10]
+    assert np.array_equal(tuples, pairs[order].astype(np.int64))
+    np.testing.assert_allclose(sses, ref[order], rtol=1e-5)
+    assert n_eval == m * (m - 1) // 2
+
+
+def test_l0_search_tiled_planted(rng):
+    m, s = 140, 96
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = -1.5 * x[7] + 4.0 * x[100]
+    tuples, sses, _ = kops.l0_search_tiled(x, y, TaskLayout.single(s), n_keep=3)
+    assert tuple(tuples[0]) == (7, 100)
+    assert sses[0] < 1e-9

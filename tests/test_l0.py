@@ -1,0 +1,115 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.l0 import (
+    compute_gram_stats, l0_search, n_models, score_tuples_gram,
+    score_tuples_qr, tuple_blocks,
+)
+from repro.core.sis import TaskLayout
+
+
+def lstsq_sse(x, y, slices, tup):
+    """numpy oracle: per-task LSQ with intercept, total SSE."""
+    total = 0.0
+    for lo, hi in slices:
+        a = np.concatenate([x[list(tup), lo:hi].T,
+                            np.ones((hi - lo, 1))], axis=1)
+        c, *_ = np.linalg.lstsq(a, y[lo:hi], rcond=None)
+        r = y[lo:hi] - a @ c
+        total += float(r @ r)
+    return total
+
+
+@pytest.mark.parametrize("n_dim", [1, 2, 3])
+@pytest.mark.parametrize("tasks", [1, 2])
+def test_gram_equals_qr_equals_numpy(rng, n_dim, tasks):
+    m, s = 12, 70
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    ids = np.repeat(np.arange(tasks), s // tasks + 1)[:s]
+    layout = TaskLayout.from_task_ids(ids)
+    tuples = np.asarray(list(__import__("itertools").combinations(range(m), n_dim)),
+                        np.int32)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    g = np.array(score_tuples_gram(stats, jnp.asarray(tuples)))
+    q = np.array(score_tuples_qr(jnp.asarray(x), jnp.asarray(y), layout,
+                                 jnp.asarray(tuples)))
+    ref = np.array([lstsq_sse(x, y, layout.slices, t) for t in tuples])
+    np.testing.assert_allclose(g, ref, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(q, ref, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 10), seed=st.integers(0, 10_000))
+def test_gram_qr_argmin_agree_property(m, seed):
+    rng = np.random.default_rng(seed)
+    s = 40
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    pairs = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    g = np.array(score_tuples_gram(stats, jnp.asarray(pairs)))
+    q = np.array(score_tuples_qr(jnp.asarray(x), jnp.asarray(y), layout,
+                                 jnp.asarray(pairs)))
+    assert np.argmin(g) == np.argmin(q)
+
+
+def test_n_models_matches_fig1d():
+    assert n_models(10, 1) == 10
+    assert n_models(10, 2) == 45
+    assert n_models(5000, 2) == 12_497_500  # SIS-sized spaces stay tractable
+
+
+@pytest.mark.parametrize("n_dim", [1, 2, 3])
+def test_tuple_blocks_cover_exactly_once(n_dim):
+    m, block = 9, 7
+    seen = set()
+    for blk in tuple_blocks(m, n_dim, block):
+        assert blk.shape[1] == n_dim and len(blk) <= block
+        for t in blk:
+            assert tuple(t) not in seen
+            assert all(t[i] < t[i + 1] for i in range(n_dim - 1))
+            seen.add(tuple(t))
+    assert len(seen) == n_models(m, n_dim)
+
+
+@pytest.mark.parametrize("engine", ["gram", "qr"])
+def test_l0_search_finds_planted_pair(rng, engine):
+    m, s = 30, 60
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2.0 * x[4] - 3.0 * x[17] + 0.7
+    res = l0_search(x, y, TaskLayout.single(s), n_dim=2, n_keep=5,
+                    block=101, engine=engine)
+    assert tuple(res.tuples[0]) == (4, 17)
+    assert res.sses[0] < 1e-6
+    assert res.n_evaluated == n_models(m, 2)
+    assert (np.diff(res.sses) >= -1e-12).all()
+
+
+def test_l0_search_topk_matches_bruteforce(rng):
+    m, s = 16, 50
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    res = l0_search(x, y, layout, n_dim=2, n_keep=8, block=13)
+    pairs = np.stack(np.triu_indices(m, 1), 1)
+    ref = np.array([lstsq_sse(x, y, layout.slices, t) for t in pairs])
+    order = np.argsort(ref, kind="stable")[:8]
+    np.testing.assert_allclose(res.sses, ref[order], rtol=1e-6)
+    assert {tuple(t) for t in res.tuples} == {tuple(pairs[i]) for i in order}
+
+
+def test_multitask_coefficients_differ_per_task(rng):
+    from repro.core.l0 import coefficients_for
+    s = 80
+    x = rng.uniform(0.5, 3.0, (5, s))
+    ids = np.repeat([0, 1], 40)
+    y = np.where(ids == 0, 2 * x[1] + 1, -3 * x[1] + 5)
+    layout = TaskLayout.from_task_ids(ids)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    coefs, inter = coefficients_for(stats, [1])
+    np.testing.assert_allclose(coefs[:, 0], [2.0, -3.0], rtol=1e-8)
+    np.testing.assert_allclose(inter, [1.0, 5.0], rtol=1e-7)

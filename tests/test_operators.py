@@ -1,0 +1,83 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import operators as om
+from repro.core.operators import ChildMeta
+from repro.core.units import Unit
+
+
+def test_registry_complete():
+    # paper Table II operator pool
+    for name in ("add", "sub", "mul", "div", "abs_diff", "sqrt", "cbrt",
+                 "sq", "cb", "inv", "log", "exp", "neg_exp", "abs",
+                 "sin", "cos", "six_pow"):
+        assert name in om.OP_BY_NAME
+
+
+def test_unit_rules():
+    L = Unit.from_mapping({"m": 1}, ("m",))
+    T = Unit.from_mapping({"s": 1}, ("m", "s"))
+    L2 = Unit.from_mapping({"m": 1}, ("m", "s"))
+    none = Unit.dimensionless(("m", "s"))
+    assert om.OPS[om.ADD].unit_rule(L2, L2) == L2
+    assert om.OPS[om.ADD].unit_rule(L2, T) is None
+    assert om.OPS[om.MUL].unit_rule(L2, T) == L2 * T
+    assert om.OPS[om.DIV].unit_rule(L2, T) == L2 / T
+    assert om.OPS[om.LOG].unit_rule(L2) is None
+    assert om.OPS[om.LOG].unit_rule(none) == none
+    assert om.OPS[om.SQRT].unit_rule(L2) == L2 ** "1/2"
+    assert om.OPS[om.SIX_POW].unit_rule(L2) == L2 ** 6
+    assert om.OPS[om.INV].unit_rule(L2) == L2 ** -1
+
+
+def test_domain_rules():
+    pos = ChildMeta(0.5, 3.0)
+    neg = ChildMeta(-3.0, -0.5)
+    span = ChildMeta(-1.0, 1.0)
+    assert om.OPS[om.DIV].domain_rule(pos, pos)
+    assert om.OPS[om.DIV].domain_rule(pos, neg)
+    assert not om.OPS[om.DIV].domain_rule(pos, span)  # zeros in divisor child
+    assert not om.OPS[om.INV].domain_rule(span)
+    assert om.OPS[om.LOG].domain_rule(pos)
+    assert not om.OPS[om.LOG].domain_rule(span)
+    assert om.OPS[om.SQRT].domain_rule(ChildMeta(0.0, 2.0))
+    assert not om.OPS[om.SQRT].domain_rule(span)
+    assert not om.OPS[om.EXP].domain_rule(ChildMeta(0.0, 200.0))  # overflow
+
+
+def test_redundant_unary_chains():
+    assert om.is_redundant_unary(om.EXP, om.LOG)
+    assert om.is_redundant_unary(om.SQ, om.SQRT)
+    assert om.is_redundant_unary(om.INV, om.INV)
+    assert not om.is_redundant_unary(om.SQ, om.CB)
+    assert not om.is_redundant_unary(om.SQ, None)
+
+
+finite_arrays = st.lists(
+    st.floats(min_value=0.1, max_value=50.0), min_size=4, max_size=16
+)
+
+
+@given(a=finite_arrays, b=finite_arrays)
+def test_apply_op_matches_numpy(a, b):
+    n = min(len(a), len(b))
+    a = np.asarray(a[:n])
+    b = np.asarray(b[:n])
+    checks = {
+        om.ADD: a + b, om.SUB: a - b, om.MUL: a * b, om.DIV: a / b,
+        om.ABS_DIFF: np.abs(a - b), om.LOG: np.log(a), om.SQRT: np.sqrt(a),
+        om.CBRT: np.cbrt(a), om.SQ: a ** 2, om.CB: a ** 3, om.INV: 1.0 / a,
+        om.SIN: np.sin(a), om.COS: np.cos(a), om.SIX_POW: a ** 6,
+        om.NEG_EXP: np.exp(-a),
+    }
+    for op_id, want in checks.items():
+        got = np.asarray(om.apply_op(op_id, jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_apply_op_unknown_raises():
+    with pytest.raises(ValueError):
+        om.apply_op(999, jnp.ones(3), jnp.ones(3))

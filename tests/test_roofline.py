@@ -1,0 +1,121 @@
+"""Tests for the loop-aware HLO analyzer and the dry-run cell logic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+from repro.launch.specs import effective_config, input_specs, params_spec
+from repro.models import SHAPE_CASES, cell_applicable, shape_case
+from repro.models.base import LMConfig
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    m, k, n, trips = 8, 16, 32, 7
+
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    txt = _compile_text(
+        f, jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((trips, k, n if k == n else k), jnp.float32))
+    costs = ha.analyze(txt)
+    want = 2 * m * k * k * trips  # square weights so the carry shape is fixed
+    assert costs.flops >= want, (costs.flops, want)
+    # no more than ~2x overcount (fusion epilogue flops etc.)
+    assert costs.flops < 3 * want, (costs.flops, want)
+    assert not costs.warnings
+
+
+def test_unrolled_matches_scan_totals():
+    m, k, trips = 8, 16, 5
+
+    def scanned(x, w):
+        def body(h, wi):
+            return h @ wi, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    def unrolled(x, w):
+        h = x
+        for i in range(trips):
+            h = h @ w[i]
+        return h.sum()
+
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((trips, k, k), jnp.float32)
+    c_scan = ha.analyze(_compile_text(scanned, x, w))
+    c_unroll = ha.analyze(_compile_text(unrolled, x, w))
+    dot_flops = 2 * m * k * k * trips
+    assert c_scan.flops >= dot_flops
+    assert c_unroll.flops >= dot_flops
+    # scan's loop-multiplied dots equal the unrolled dots to within epilogues
+    assert abs(c_scan.flops - c_unroll.flops) < 0.5 * dot_flops
+
+
+def test_shape_parsing():
+    assert ha._shape_bytes("f32[4,64]{1,0}") == 4 * 64 * 4
+    assert ha._shape_bytes("bf16[2,3]") == 12
+    assert ha._shape_bytes("(s32[], f32[4,128])") == 4 + 4 * 128 * 4
+    assert ha._shape_dims("f32[4,64]{1,0}") == [4, 64]
+    assert ha._shape_dims("pred[]") == []
+
+
+# ---------------------------------------------------------------------------
+# dry-run cell logic
+# ---------------------------------------------------------------------------
+
+def _dense_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256)
+    base.update(kw)
+    return LMConfig(**base)
+
+
+def test_long_500k_applicability():
+    full = _dense_cfg()
+    sub = _dense_cfg(sub_quadratic=True)
+    case = shape_case("long_500k")
+    assert not cell_applicable(full, case)[0]
+    assert cell_applicable(sub, case)[0]
+    for c in SHAPE_CASES:
+        if c.name != "long_500k":
+            assert cell_applicable(full, c)[0]
+
+
+def test_input_specs_shapes_per_kind():
+    cfg = _dense_cfg()
+    train = input_specs(cfg, shape_case("train_4k"))
+    assert train["tokens"].shape == (256, 4097)
+    pre = input_specs(cfg, shape_case("prefill_32k"))
+    assert pre["tokens"].shape == (32, 32768)
+    dec = input_specs(cfg, shape_case("decode_32k"))
+    assert dec["token"].shape == (128, 1)
+    assert dec["pos"] == 32767
+    # cache leaves sized by the case seq_len
+    k = dec["cache"]["k"]
+    assert k.shape == (2, 128, 32768, 2, 16)
+
+
+def test_whisper_decode_cell_resizes_cache():
+    cfg = _dense_cfg(family="audio", is_encoder_decoder=True, n_enc_layers=2,
+                     n_kv_heads=4, max_target_len=448)
+    ecfg = effective_config(cfg, shape_case("decode_32k"))
+    assert ecfg.max_target_len == 32768  # "KV cache of seq_len" per task spec
+    assert effective_config(cfg, shape_case("train_4k")).max_target_len == 448
+
+
+def test_params_spec_no_allocation():
+    cfg = _dense_cfg()
+    tpl = params_spec(cfg, shape_case("train_4k"))
+    for leaf in jax.tree.leaves(tpl):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    # padded vocab shows up in the embed table
+    assert tpl["embed"]["table"].shape == (256, 64)

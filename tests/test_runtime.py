@@ -1,0 +1,145 @@
+"""Runtime tests: checkpoint/restart, preemption, journal, monitor, optim."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, restore_pytree, save_pytree
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.optim.compression import compress_int8, decompress_int8
+from repro.runtime import StepMonitor, WorkJournal
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+    save_pytree(str(tmp_path), 7, tree, extra={"note": "x"})
+    out, step, extra = restore_pytree(str(tmp_path), template=tree)
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomic_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (10, 20, 30, 40):
+        ck.save(s, tree, blocking=True)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000030", "step_00000040"]
+    assert ck.latest() == 40
+    assert not any(d.startswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_restore_latest(tmp_path):
+    tree = {"w": jnp.arange(4.0)}
+    save_pytree(str(tmp_path), 1, tree)
+    save_pytree(str(tmp_path), 2, jax.tree.map(lambda x: x + 1, tree))
+    out, step, _ = restore_pytree(str(tmp_path), template=tree)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4.0) + 1)
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * state["master"]["w"]}
+        params, state, m = adamw_update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert np.isfinite(m["grad_norm"])
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < lrs[9] <= 1.0          # warmup
+    assert abs(lrs[10] - 1.0) < 0.01       # peak
+    assert abs(lrs[100] - 0.1) < 0.01      # floor
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # decay
+
+
+def test_int8_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=256), jnp.float32)
+    err = jnp.zeros_like(g)
+    acc_q = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, err = compress_int8(g, err)
+        acc_q = acc_q + decompress_int8(q, s)
+        acc = acc + g
+    # error feedback keeps the long-run average unbiased
+    np.testing.assert_allclose(np.asarray(acc_q), np.asarray(acc),
+                               rtol=0, atol=float(50 * np.abs(g).max() / 127) * 0.1)
+
+
+def test_work_journal_roundtrip(tmp_path):
+    j = WorkJournal(str(tmp_path / "j.json"))
+    assert not j.has_state()
+    j.record(5, np.asarray([1.0, 2.0]), np.asarray([[0, 1], [2, 3]]))
+    assert j.has_state()
+    sse, tups, nxt = j.restore()
+    assert nxt == 5
+    np.testing.assert_array_equal(sse, [1.0, 2.0])
+    np.testing.assert_array_equal(tups, [[0, 1], [2, 3]])
+    j.mark_reissued()
+    j.record(6, sse, tups)
+    j2 = WorkJournal(str(tmp_path / "j.json"))
+    _, _, nxt2 = j2.restore()
+    assert nxt2 == 6 and j2.reissues == 1
+    j2.clear()
+    assert not j2.has_state()
+
+
+def test_journal_l0_restart_resumes(tmp_path, rng):
+    from repro.core import l0_search
+    from repro.core.sis import TaskLayout
+    m, s = 24, 40
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2 * x[3] - x[11]
+    layout = TaskLayout.single(s)
+    ref = l0_search(x, y, layout, n_dim=2, n_keep=4, block=32)
+
+    class Interrupt(Exception):
+        pass
+
+    # run a journaled search that dies after 3 blocks
+    j = WorkJournal(str(tmp_path / "l0.json"))
+    orig = j.record
+    calls = {"n": 0}
+
+    def bomb(*a, **k):
+        orig(*a, **k)
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise Interrupt()
+
+    j.record = bomb
+    with pytest.raises(Interrupt):
+        l0_search(x, y, layout, n_dim=2, n_keep=4, block=32, journal=j)
+    # restart with a fresh journal object on the same file
+    j2 = WorkJournal(str(tmp_path / "l0.json"))
+    res = l0_search(x, y, layout, n_dim=2, n_keep=4, block=32, journal=j2)
+    np.testing.assert_array_equal(res.tuples, ref.tuples)
+    np.testing.assert_allclose(res.sses, ref.sses, rtol=1e-12)
+
+
+def test_step_monitor_flags_stragglers():
+    import time
+    mon = StepMonitor(window=20, straggler_factor=2.5)
+    flagged = []
+    for i in range(12):
+        mon.start()
+        time.sleep(0.02 if i != 9 else 0.12)
+        flagged.append(mon.stop())
+    assert flagged[9] is True
+    assert sum(flagged) == 1
+    assert 0.015 < mon.median_step_s < 0.06

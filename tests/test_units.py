@@ -1,0 +1,53 @@
+from fractions import Fraction
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.units import Unit
+
+BASIS = ("m", "s", "kg")
+
+
+def u(m=0, s=0, kg=0):
+    return Unit((Fraction(m), Fraction(s), Fraction(kg)), BASIS)
+
+
+def test_algebra():
+    length, time = u(m=1), u(s=1)
+    assert length * time == u(m=1, s=1)
+    assert length / time == u(m=1, s=-1)
+    assert (length ** 2) == u(m=2)
+    assert (length ** "1/2") == Unit((Fraction(1, 2), 0, 0), BASIS)
+    assert u().is_dimensionless
+    assert not length.is_dimensionless
+
+
+def test_hash_and_eq():
+    assert u(m=1) == u(m=1)
+    assert hash(u(m=1)) == hash(u(m=1))
+    assert u(m=1) != u(s=1)
+    assert len({u(m=1), u(m=1), u(s=1)}) == 2
+
+
+def test_basis_mismatch_raises():
+    other = Unit((Fraction(1),), ("m",))
+    with pytest.raises(ValueError):
+        _ = u(m=1) * other
+
+
+exps = st.integers(min_value=-4, max_value=4)
+
+
+@given(a=st.tuples(exps, exps, exps), b=st.tuples(exps, exps, exps))
+def test_mul_div_inverse_property(a, b):
+    ua, ub = u(*a), u(*b)
+    assert (ua * ub) / ub == ua
+    assert (ua / ub) * ub == ua
+
+
+@given(a=st.tuples(exps, exps, exps))
+def test_pow_roundtrip_property(a):
+    ua = u(*a)
+    assert (ua ** 2) ** "1/2" == ua
+    assert ua ** 1 == ua
+    assert (ua ** -1) ** -1 == ua
