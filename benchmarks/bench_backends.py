@@ -1,0 +1,37 @@
+"""Per-backend phase-timing comparison (engine layer, ARCHITECTURE.md).
+
+Runs the thermal reduced case end-to-end on every execution backend and
+emits one row per (backend, phase): the engine layer's promise is identical
+*results* (tests/test_engine_parity.py) with per-backend *performance* —
+this benchmark is the performance half of that claim.  On CPU containers
+the pallas backend runs in interpret mode, so its absolute numbers are a
+correctness exercise, not a speed claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.sisso_thermal import thermal_conductivity_case
+from repro.core import SissoRegressor
+from repro.engine import BACKENDS
+
+from .common import emit
+
+
+def main() -> None:
+    case = thermal_conductivity_case(reduced=True)
+    for backend in BACKENDS:
+        cfg = dataclasses.replace(case.config, backend=backend)
+        fit = SissoRegressor(cfg).fit(
+            case.x, case.y, case.names, units=case.units,
+            task_ids=case.task_ids,
+        )
+        best = fit.best()
+        rows = [f.row for f in best.features]
+        r2 = best.r2(case.y, fit.fspace.values_matrix()[rows])
+        for phase, secs in fit.timings.items():
+            emit(f"backend_{backend}_{phase}", secs * 1e6, f"r2={r2:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,14 +9,16 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from . import (bench_e2e_kaggle, bench_e2e_thermal, bench_feature_gen,
-               bench_l0, bench_precision, bench_scaling, bench_sis)
+from . import (bench_backends, bench_e2e_kaggle, bench_e2e_thermal,
+               bench_feature_gen, bench_l0, bench_precision, bench_scaling,
+               bench_sis)
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     for mod in (bench_feature_gen, bench_sis, bench_l0, bench_precision,
-                bench_e2e_thermal, bench_e2e_kaggle, bench_scaling):
+                bench_backends, bench_e2e_thermal, bench_e2e_kaggle,
+                bench_scaling):
         mod.main()
 
 

@@ -15,14 +15,129 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+try:  # jax >= 0.5 re-exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # jax 0.4.x keeps it in experimental
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .sis import ScoreContext, scores_from_reductions
+from .sis import ScoreContext, TaskLayout, scores_from_reductions
 
 
 def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sample_axis(mesh: Mesh) -> Optional[str]:
+    """Sample-sharding axis, or None when samples are replicated."""
+    return "model" if "model" in mesh.axis_names else None
+
+
+@functools.lru_cache(maxsize=None)
+def _sis_sharded_fn(mesh: Mesh, n_residuals: int):
+    """Compiled sharded SIS scorer, cached per (mesh, n_residuals).
+
+    The cache keeps the jitted closure alive across blocks — a fresh
+    closure per call would retrace and recompile every block.
+    """
+    dp = _dp_axes(mesh)
+    sample_ax = _sample_axis(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, sample_ax), P(None, sample_ax), P(None, sample_ax),
+                  P(None)),
+        out_specs=P(dp),
+    )
+    def local(x_blk, m_blk, yt_blk, counts):
+        sums = x_blk @ m_blk.T
+        sumsq = (x_blk * x_blk) @ m_blk.T
+        dots = x_blk @ yt_blk.T
+        if sample_ax is not None:
+            sums = jax.lax.psum(sums, sample_ax)
+            sumsq = jax.lax.psum(sumsq, sample_ax)
+            dots = jax.lax.psum(dots, sample_ax)
+        return scores_from_reductions(sums, sumsq, dots, counts, n_residuals)
+
+    return jax.jit(local)
+
+
+def sis_scores_sharded(
+    mesh: Mesh,
+    x: jnp.ndarray,  # (F, S) candidate values; F % n_data_shards == 0
+    ctx: ScoreContext,
+) -> jnp.ndarray:
+    """Full score vector (F,) with features sharded over data(+pod).
+
+    Unlike :func:`sis_scores_distributed` (which merges a local top-k), this
+    returns every score so the engine layer can apply the same host-side
+    TopK policy as every other backend.  Samples shard over 'model' when the
+    mesh has that axis (partial sums psum'ed); otherwise they are replicated
+    and the screen is collective-free.
+    """
+    fn = _sis_sharded_fn(mesh, ctx.n_residuals)
+    return fn(
+        x,
+        jnp.asarray(ctx.membership, x.dtype),
+        jnp.asarray(ctx.y_tilde, x.dtype),
+        jnp.asarray(ctx.counts, x.dtype),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _l0_pairs_sharded_fn(mesh: Mesh, n_tasks: int):
+    """Compiled sharded pair scorer, cached per (mesh, n_tasks)."""
+    from ..kernels.ref import solve3_sse
+
+    dp = _dp_axes(mesh)
+    sample_ax = _sample_axis(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, sample_ax), P(sample_ax), P(None, sample_ax),
+                  P(dp, None)),
+        out_specs=P(dp),
+    )
+    def local(x_blk, y_blk, mem_blk, prs):
+        def ps(v):
+            return jax.lax.psum(v, sample_ax) if sample_ax is not None else v
+
+        i, j = prs[:, 0], prs[:, 1]
+        total = jnp.zeros((prs.shape[0],), x_blk.dtype)
+        for ti in range(n_tasks):
+            w = mem_blk[ti]
+            xw = x_blk * w[None, :]
+            gii = ps((xw * x_blk).sum(axis=1))
+            fsum = ps(xw.sum(axis=1))
+            bv = ps(xw @ y_blk)
+            n = ps(w.sum())
+            ysum = ps(w @ y_blk)
+            yty = ps((w * y_blk) @ y_blk)
+            gij = ps((xw[i] * x_blk[j]).sum(axis=1))
+            total = total + solve3_sse(
+                gii[i], gii[j], n, gij, fsum[i], fsum[j],
+                bv[i], bv[j], ysum, yty)
+        return total
+
+    return jax.jit(local)
+
+
+def l0_pair_sses_sharded(
+    mesh: Mesh,
+    x: jnp.ndarray,      # (m, S) subspace features
+    y: jnp.ndarray,      # (S,)
+    layout: TaskLayout,
+    pairs: jnp.ndarray,  # (B, 2) int32; B % n_data_shards == 0
+) -> jnp.ndarray:
+    """Total SSE (B,) for explicit pairs, tuple space sharded over data(+pod).
+
+    The per-shard math is the same closed-form solve as the Pallas tile
+    kernel (kernels/ref.py:solve3_sse); per-task Gram partials psum over
+    'model' when the mesh shards samples.
+    """
+    mem = jnp.asarray(layout.membership(x.shape[1], np.float64), x.dtype)
+    fn = _l0_pairs_sharded_fn(mesh, layout.n_tasks)
+    return fn(x, y, mem, pairs)
 
 
 def sis_scores_distributed(

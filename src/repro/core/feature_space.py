@@ -9,6 +9,9 @@ Implements the paper's GPU algorithm (Fig. 2, right) adapted to TPU/JAX:
   rules run on host metadata and *prevent* evaluation; value rules (bounds,
   NaN, variance, duplicate values) are applied on device to the evaluated
   block and produce a validity mask — exactly the paper's "validity list".
+  Which device runs them is the execution engine's concern (engine/): the
+  FeatureSpace only asks its :class:`~repro.engine.Engine` to
+  ``eval_block``.
 * **on-the-fly last rung** (paper P3): the highest rung is optionally never
   materialized; candidates are kept as ``(op_id, child_a, child_b)`` integer
   triples and (re-)evaluated inside SIS (see kernels/fused_sis.py).
@@ -16,6 +19,9 @@ Implements the paper's GPU algorithm (Fig. 2, right) adapted to TPU/JAX:
 Value-based duplicate elimination uses two fixed random projections of the
 standardized feature values (sign-canonicalized, so ``x`` and ``-x`` — which
 span the same model space — collide), quantized to a relative tolerance.
+Projection keys are computed for whole candidate blocks at once (one
+matmul), and admitted rows append into a geometrically-grown SoA value
+matrix — ``values_matrix()`` is a view, never a re-stack.
 """
 from __future__ import annotations
 
@@ -27,13 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import operators as ops_mod
-from .operators import ChildMeta, Operator, apply_op
+from .operators import ChildMeta, Operator
 from .units import Unit
+from .validity import DEDUP_TOL, MIN_STD
 
 log = logging.getLogger(__name__)
-
-_DEDUP_TOL = 1e-5
-_MIN_STD = 1e-10
 
 
 @dataclasses.dataclass
@@ -84,6 +88,7 @@ class FeatureSpace:
         max_pairs_per_op: Optional[int] = None,
         seed: int = 0,
         dtype=jnp.float32,
+        engine=None,
     ) -> None:
         primary_values = np.asarray(primary_values, dtype=np.float64)
         if primary_values.ndim != 2:
@@ -91,9 +96,11 @@ class FeatureSpace:
         p, s = primary_values.shape
         if len(names) != p:
             raise ValueError("names must match primary feature count")
-        basis = units[0].basis if units else ()
         units = list(units) if units else [Unit.dimensionless() for _ in range(p)]
 
+        from ..engine import get_engine  # deferred: engine builds on core
+
+        self.engine = get_engine(engine or "reference")
         self.dtype = dtype
         self.n_samples = s
         self.ops: Tuple[Operator, ...] = ops_mod.op_pool(op_names)
@@ -112,40 +119,123 @@ class FeatureSpace:
         self._dedup: Dict[Tuple[int, int], int] = {}
 
         self.features: List[Feature] = []
-        self._rows: List[np.ndarray] = []  # float64 host rows
+        # SoA value store: geometrically grown, values_matrix() is a view.
+        self._values = np.empty((0, s), np.float64)
+        self._n_rows = 0
+        self._row_fids: List[int] = []  # row -> fid (O(1) feature_by_row)
         self.candidates: List[CandidateBlock] = []  # last rung, on-the-fly only
         self.n_rejected = {"unit": 0, "domain": 0, "value": 0, "dup": 0, "redundant": 0}
 
-        for i in range(p):
-            self._add_feature(
-                rung=0, unit=units[i], expr=str(names[i]), complexity=0,
-                values=primary_values[i],
-            )
+        self.admit_block(
+            rung=0, values=primary_values, units=units,
+            exprs=[str(n) for n in names], complexities=[0] * p,
+        )
 
     # ------------------------------------------------------------------
     # materialized storage
     # ------------------------------------------------------------------
     @property
     def n_materialized(self) -> int:
-        return len(self._rows)
+        return self._n_rows
 
     def values_matrix(self) -> np.ndarray:
-        """(n_materialized, n_samples) float64 host matrix."""
-        return np.stack(self._rows) if self._rows else np.zeros((0, self.n_samples))
+        """(n_materialized, n_samples) float64 host matrix.
+
+        A view into the incrementally-maintained store — O(1), not a
+        re-stack.  Treat as read-only; it may be detached from the live
+        store by a later growth reallocation.
+        """
+        return self._values[: self._n_rows]
 
     def values_device(self) -> jnp.ndarray:
         return jnp.asarray(self.values_matrix(), dtype=self.dtype)
 
-    def _dedup_key(self, values: np.ndarray) -> Optional[Tuple[int, int]]:
-        v = values - values.mean()
-        nrm = np.linalg.norm(v)
-        if nrm < _MIN_STD:
-            return None
-        v = v / nrm
-        p1, p2 = self._proj @ v
-        if p1 < 0 or (p1 == 0 and p2 < 0):
-            p1, p2 = -p1, -p2
-        return (int(round(p1 / _DEDUP_TOL)), int(round(p2 / _DEDUP_TOL)))
+    def _append_rows(self, rows: np.ndarray) -> None:
+        need = self._n_rows + len(rows)
+        if need > len(self._values):
+            cap = max(need, 2 * len(self._values), 64)
+            grown = np.empty((cap, self.n_samples), np.float64)
+            grown[: self._n_rows] = self._values[: self._n_rows]
+            self._values = grown
+        self._values[self._n_rows : need] = rows
+        self._n_rows = need
+
+    # ------------------------------------------------------------------
+    # value-duplicate elimination (vectorized over candidate blocks)
+    # ------------------------------------------------------------------
+    def _block_keys(
+        self, values: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Projection dedup keys for a whole block: (keys (B, 2), ok (B,))."""
+        v = values - values.mean(axis=1, keepdims=True)
+        nrm = np.linalg.norm(v, axis=1)
+        ok = nrm >= MIN_STD
+        with np.errstate(all="ignore"):
+            vn = v / nrm[:, None]
+        p = vn @ self._proj.T  # (B, 2) — the whole block in one matmul
+        flip = (p[:, 0] < 0) | ((p[:, 0] == 0) & (p[:, 1] < 0))
+        p = np.where(flip[:, None], -p, p)
+        with np.errstate(all="ignore"):
+            keys = np.round(p / DEDUP_TOL)
+        keys = np.where(np.isfinite(keys), keys, 0).astype(np.int64)
+        return keys, ok
+
+    def _is_dup(self, key: Tuple[int, int]) -> bool:
+        # check neighbor buckets too: quantization can split equal values
+        # across adjacent buckets at bucket boundaries
+        k0, k1 = key
+        for d1 in (-1, 0, 1):
+            for d2 in (-1, 0, 1):
+                if (k0 + d1, k1 + d2) in self._dedup:
+                    return True
+        return False
+
+    def admit_block(
+        self,
+        rung: int,
+        values: np.ndarray,  # (B, S) candidate values (already value-valid)
+        units: Sequence[Unit],
+        exprs: Sequence[str],
+        complexities: Sequence[int],
+        op_id: Optional[int] = None,
+        child_a: Optional[Sequence[int]] = None,
+        child_b: Optional[Sequence[int]] = None,
+        check_dup: bool = True,
+    ) -> List[Optional[Feature]]:
+        """Dedup + register a block of candidates; returns per-candidate
+        Feature or None (rejected).  Projection keys are computed for the
+        whole block at once; accepted rows append in one bulk copy."""
+        values = np.asarray(values, np.float64)
+        keys, ok = self._block_keys(values)
+        out: List[Optional[Feature]] = []
+        new_rows: List[np.ndarray] = []
+        for k in range(len(values)):
+            if not ok[k]:
+                self.n_rejected["value"] += 1
+                out.append(None)
+                continue
+            key = (int(keys[k, 0]), int(keys[k, 1]))
+            if check_dup and self._is_dup(key):
+                self.n_rejected["dup"] += 1
+                out.append(None)
+                continue
+            fid = len(self.features)
+            feat = Feature(
+                fid=fid, rung=rung, unit=units[k], expr=exprs[k],
+                complexity=complexities[k], op_id=op_id,
+                child_a=None if child_a is None else int(child_a[k]),
+                child_b=None if child_b is None else int(child_b[k]),
+                row=self._n_rows + len(new_rows),
+                vmin=float(values[k].min()), vmax=float(values[k].max()),
+            )
+            self._dedup[key] = fid
+            self.features.append(feat)
+            self._row_fids.append(fid)
+            new_rows.append(values[k])
+            out.append(feat)
+        if new_rows:
+            self._append_rows(np.stack(new_rows))
+        return out
 
     def _add_feature(
         self, rung: int, unit: Unit, expr: str, complexity: int,
@@ -153,28 +243,14 @@ class FeatureSpace:
         child_a: Optional[int] = None, child_b: Optional[int] = None,
         check_dup: bool = True,
     ) -> Optional[Feature]:
-        key = self._dedup_key(values)
-        if key is None:
-            self.n_rejected["value"] += 1
-            return None
-        if check_dup:
-            # check neighbor buckets too: quantization can split equal values
-            # across adjacent buckets at bucket boundaries
-            for d1 in (-1, 0, 1):
-                for d2 in (-1, 0, 1):
-                    if (key[0] + d1, key[1] + d2) in self._dedup:
-                        self.n_rejected["dup"] += 1
-                        return None
-        fid = len(self.features)
-        feat = Feature(
-            fid=fid, rung=rung, unit=unit, expr=expr, complexity=complexity,
-            op_id=op_id, child_a=child_a, child_b=child_b, row=len(self._rows),
-            vmin=float(values.min()), vmax=float(values.max()),
-        )
-        self._dedup[key] = fid
-        self.features.append(feat)
-        self._rows.append(np.asarray(values, dtype=np.float64))
-        return feat
+        return self.admit_block(
+            rung=rung, values=np.asarray(values, np.float64)[None, :],
+            units=[unit], exprs=[expr], complexities=[complexity],
+            op_id=op_id,
+            child_a=None if child_a is None else [child_a],
+            child_b=None if child_b is None else [child_b],
+            check_dup=check_dup,
+        )[0]
 
     # ------------------------------------------------------------------
     # candidate enumeration (host rules only — paper P2 "CPU side")
@@ -250,23 +326,15 @@ class FeatureSpace:
         self, op_id: int, rows_a: np.ndarray, rows_b: np.ndarray,
         values: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Evaluate op over child *rows*; returns (values (B,S), valid (B,))."""
+        """Evaluate op over child *rows*; returns (values (B,S), valid (B,)).
+
+        Routed through the execution engine — the canonical value rules
+        (core/validity.py) apply identically on every backend.
+        """
         x = self.values_matrix() if values is None else values
-        a = x[rows_a]
-        b = x[rows_b]
-        with np.errstate(all="ignore"):
-            v = np.asarray(apply_op(op_id, jnp.asarray(a), jnp.asarray(b)))
-        finite = np.isfinite(v).all(axis=1)
-        vabs = np.abs(np.where(np.isfinite(v), v, 0.0))
-        max_abs = vabs.max(axis=1)
-        std = v.std(axis=1, where=np.isfinite(v))
-        valid = (
-            finite
-            & (max_abs <= self.u_bound)
-            & (max_abs >= self.l_bound)
-            & (std > _MIN_STD)
+        return self.engine.eval_block(
+            op_id, x[rows_a], x[rows_b], self.l_bound, self.u_bound
         )
-        return v, valid
 
     # ------------------------------------------------------------------
     # generation driver
@@ -291,19 +359,26 @@ class FeatureSpace:
                         op.op_id, rows_a[lo:hi], rows_b[lo:hi]
                     )
                     self.n_rejected["value"] += int((~valid).sum())
-                    for k in np.nonzero(valid)[0]:
+                    keep = np.nonzero(valid)[0]
+                    if len(keep) == 0:
+                        continue
+                    blk_units, blk_exprs, blk_cx = [], [], []
+                    blk_a, blk_b = [], []
+                    for k in keep:
                         fa = self.features[int(ia[lo + k])]
                         fb = self.features[int(ib[lo + k])]
                         children = (fa.expr,) if op.arity == 1 else (fa.expr, fb.expr)
-                        self._add_feature(
-                            rung=rung, unit=units[lo + k],
-                            expr=ops_mod.expr_string(op, *children),
-                            complexity=ops_mod.complexity_of(
-                                op, fa.complexity, fb.complexity
-                            ),
-                            values=vals[k], op_id=op.op_id,
-                            child_a=fa.fid, child_b=fb.fid,
-                        )
+                        blk_units.append(units[lo + k])
+                        blk_exprs.append(ops_mod.expr_string(op, *children))
+                        blk_cx.append(ops_mod.complexity_of(
+                            op, fa.complexity, fb.complexity))
+                        blk_a.append(fa.fid)
+                        blk_b.append(fb.fid)
+                    self.admit_block(
+                        rung=rung, values=vals[keep], units=blk_units,
+                        exprs=blk_exprs, complexities=blk_cx,
+                        op_id=op.op_id, child_a=blk_a, child_b=blk_b,
+                    )
             log.info(
                 "rung %d: +%d materialized features (%d candidates deferred)",
                 rung, len(self.features) - n_before, self.n_candidates_deferred,
@@ -329,9 +404,8 @@ class FeatureSpace:
                 yield CandidateBlock(blk.op_id, blk.child_a[lo:hi], blk.child_b[lo:hi])
 
     def feature_by_row(self, row: int) -> Feature:
-        for f in self.features:
-            if f.row == row:
-                return f
+        if 0 <= row < len(self._row_fids):
+            return self.features[self._row_fids[row]]
         raise KeyError(row)
 
     def materialize_candidate(

@@ -228,48 +228,45 @@ def l0_search(
     n_dim: int,
     n_keep: int = 10,
     block: int = 65536,  # paper: "batch sizes should exceed 65536"
-    engine: str = "gram",
-    use_kernel: bool = False,
+    method: str = "gram",
+    engine=None,
     journal=None,
     dtype=jnp.float64,
 ) -> L0Result:
     """Exhaustive n_dim-tuple search over the SIS subspace.
 
-    ``engine``: 'gram' (TPU-native) or 'qr' (paper-faithful baseline).
-    ``use_kernel`` routes n_dim==2 blocks through the Pallas tile kernel.
+    ``method``: 'gram' (TPU-native closed form) or 'qr' (paper-faithful
+    baseline).  ``engine`` is the execution engine (engine/) that scores
+    each tuple block — this loop only owns enumeration, the running top-k
+    merge, and journaling, so there is no per-backend branching here.
     ``journal``: optional runtime.journal.WorkJournal for restartable sweeps.
     """
-    x = jnp.asarray(x, dtype)
-    y = jnp.asarray(y, dtype)
-    m = int(x.shape[0])
-    stats = compute_gram_stats(x, y, layout, dtype) if engine == "gram" else None
+    if isinstance(engine, str) and engine in ("gram", "qr"):
+        # legacy alias: ``engine`` used to name the math method
+        method, engine = engine, None
+    from ..engine import get_engine
 
-    if use_kernel:
-        from ..kernels import ops as kops
+    engine = get_engine(engine)
+    m = int(np.asarray(x).shape[0])
+    prob = engine.prepare_l0(x, y, layout, method=method, dtype=dtype)
 
     best_sse = np.full((n_keep,), np.inf)
     best_tuples = np.zeros((n_keep, n_dim), np.int64)
     n_eval = 0
 
+    start_block = 0
     if journal is not None and journal.has_state():
-        best_sse, best_tuples, start_block = journal.restore()
-    else:
-        start_block = 0
-
-    score_fn = None
-    if engine == "gram":
-        score_fn = jax.jit(lambda tt: score_tuples_gram(stats, tt))
-    else:
-        score_fn = jax.jit(lambda tt: score_tuples_qr(x, y, layout, tt, dtype))
+        j_sse, j_tuples, j_block = journal.restore()
+        # only resume state from the *same* sweep: a journal left by a
+        # different tuple width or top-k size must not poison this search
+        if j_tuples.shape == (n_keep, n_dim):
+            best_sse, best_tuples, start_block = j_sse, j_tuples, j_block
 
     for bi, tuples in enumerate(tuple_blocks(m, n_dim, block)):
         if bi < start_block:
             n_eval += len(tuples)
             continue
-        if use_kernel and n_dim == 2 and engine == "gram":
-            sses = np.asarray(kops.l0_score_pairs(stats, jnp.asarray(tuples)))
-        else:
-            sses = np.asarray(score_fn(jnp.asarray(tuples)))
+        sses = np.asarray(engine.l0_scores(prob, tuples))
         n_eval += len(tuples)
         # merge block top-k into running top-k (host)
         k = min(n_keep, len(sses))

@@ -176,15 +176,19 @@ def sis_screen(
     n_sis: int,
     exclude: Set[int],
     batch: int = 1 << 16,
-    use_kernel: bool = False,
+    engine=None,
     overselect: int = 2,
 ) -> Tuple[List[Feature], np.ndarray]:
     """Select the top-``n_sis`` unselected features; returns (features, scores).
 
     Screens both materialized features and deferred last-rung candidates
-    (paper P3 on-the-fly path).  ``use_kernel`` routes deferred blocks through
-    the fused Pallas kernel (interpret mode on CPU).
+    (paper P3 on-the-fly path).  All screening math runs on the supplied
+    execution ``engine`` (engine/) — this function only owns batching and
+    the host-side top-k merge, so there is no per-backend branching here.
     """
+    from ..engine import get_engine
+
+    engine = get_engine(engine)
     ctx = build_score_context(residuals, layout)
     x = fspace.values_matrix().astype(np.float64)
 
@@ -194,7 +198,7 @@ def sis_screen(
     if len(x):
         for lo in range(0, len(x), batch):
             hi = min(lo + batch, len(x))
-            s = np.array(score_block(jnp.asarray(x[lo:hi], jnp.float64), ctx))
+            s = np.asarray(engine.sis_scores(x[lo:hi], ctx), np.float64).copy()
             tags = [("feat", fid) for fid in range(lo, hi)]
             # mask out already-selected features
             for i, fid in enumerate(range(lo, hi)):
@@ -203,30 +207,16 @@ def sis_screen(
             top.push(s, tags)
 
     # 2) deferred last-rung candidates: generate -> score -> discard
-    if fspace.n_candidates_deferred:
-        if use_kernel:
-            from ..kernels import ops as kops
-        for blk in fspace.iter_candidate_batches(batch):
-            if use_kernel:
-                s = np.asarray(
-                    kops.fused_gen_sis(
-                        blk.op_id,
-                        jnp.asarray(x[blk.child_a], jnp.float32),
-                        jnp.asarray(x[blk.child_b], jnp.float32),
-                        ctx,
-                        l_bound=fspace.l_bound,
-                        u_bound=fspace.u_bound,
-                    )
-                )
-            else:
-                vals, valid = fspace.eval_candidates(blk.op_id, blk.child_a, blk.child_b)
-                s = np.asarray(score_block(jnp.asarray(vals, jnp.float64), ctx))
-                s = np.where(valid, s, -np.inf)
-            tags = [
-                ("cand", blk.op_id, int(a), int(b))
-                for a, b in zip(blk.child_a, blk.child_b)
-            ]
-            top.push(s, tags)
+    for blk in fspace.iter_candidate_batches(batch):
+        s = engine.sis_scores_deferred(
+            blk.op_id, x[blk.child_a], x[blk.child_b], ctx,
+            fspace.l_bound, fspace.u_bound,
+        )
+        tags = [
+            ("cand", blk.op_id, int(a), int(b))
+            for a, b in zip(blk.child_a, blk.child_b)
+        ]
+        top.push(s, tags)
 
     # 3) materialize winners, skipping dups, until n_sis collected
     selected: List[Feature] = []

@@ -42,11 +42,24 @@ class SissoConfig:
     on_the_fly_last_rung: bool = False  # paper P3
     l0_block: int = 65536               # paper: ℓ0 batches ≥ 65536
     sis_batch: int = 1 << 16
-    l0_engine: str = "gram"             # 'gram' (TPU-native) | 'qr' (paper-faithful)
-    use_kernels: bool = False           # route hot loops through Pallas
+    l0_method: str = "gram"             # 'gram' (TPU-native) | 'qr' (paper-faithful)
+    backend: str = "jnp"                # reference | jnp | pallas | sharded
     precision: str = "fp64"
     max_pairs_per_op: Optional[int] = None
     seed: int = 0
+    # deprecated aliases (pre-engine-layer configs)
+    l0_engine: Optional[str] = None     # -> l0_method
+    use_kernels: Optional[bool] = None  # True -> backend='pallas'
+
+    def __post_init__(self):
+        # apply-and-clear: dataclasses.replace() re-runs this, and a stale
+        # alias must not override an explicitly replaced backend/method
+        if self.l0_engine is not None:
+            self.l0_method = self.l0_engine
+            self.l0_engine = None
+        if self.use_kernels:
+            self.backend = "pallas"
+        self.use_kernels = None
 
 
 @dataclasses.dataclass
@@ -62,11 +75,18 @@ class SissoFit:
 
 
 class SissoRegressor:
-    """End-to-end SISSO (single- and multi-task)."""
+    """End-to-end SISSO (single- and multi-task).
 
-    def __init__(self, config: SissoConfig):
+    All three hot phases run on one execution engine selected by
+    ``config.backend`` (see engine/ and ARCHITECTURE.md).
+    """
+
+    def __init__(self, config: SissoConfig, engine=None):
+        from ..engine import get_engine
+
         self.cfg = config
         self.dtype = set_precision(config.precision)
+        self.engine = get_engine(engine or config.backend)
 
     def fit(
         self,
@@ -95,6 +115,7 @@ class SissoRegressor:
             l_bound=cfg.l_bound, u_bound=cfg.u_bound,
             on_the_fly_last_rung=cfg.on_the_fly_last_rung,
             max_pairs_per_op=cfg.max_pairs_per_op, seed=cfg.seed,
+            engine=self.engine,
         ).generate()
         timings["fc"] = time.perf_counter() - t0
         log.info(
@@ -114,7 +135,7 @@ class SissoRegressor:
             t0 = time.perf_counter()
             feats, scores = sis_screen(
                 fspace, residuals, layout, cfg.n_sis, selected,
-                batch=cfg.sis_batch, use_kernel=cfg.use_kernels,
+                batch=cfg.sis_batch, engine=self.engine,
             )
             timings["sis"] += time.perf_counter() - t0
             for f in feats:
@@ -134,10 +155,14 @@ class SissoRegressor:
             # raw-value Gram stats, so this is internal only)
             res = l0_search(
                 xs, y, layout, n_dim=dim, n_keep=cfg.n_residual,
-                block=cfg.l0_block, engine=cfg.l0_engine,
-                use_kernel=cfg.use_kernels, journal=journal,
+                block=cfg.l0_block, method=cfg.l0_method,
+                engine=self.engine, journal=journal,
                 dtype=self.dtype,
             )
+            if journal is not None:
+                # this dim's sweep is complete; stale state would otherwise be
+                # "restored" by the next dim's search (different tuple width)
+                journal.clear()
             timings["l0"] += time.perf_counter() - t0
 
             stats = compute_gram_stats(xs, y, layout, self.dtype)

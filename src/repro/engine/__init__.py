@@ -1,0 +1,54 @@
+"""Execution-engine layer: one screening-math expression per backend.
+
+Select with :func:`get_engine` (``SissoConfig.backend`` / ``--backend``)::
+
+    engine = get_engine("pallas")             # or reference | jnp | sharded
+    engine = get_engine("pallas", interpret=True)
+    engine = get_engine(existing_engine)      # pass-through
+
+See engine/base.py for the Backend contract and ARCHITECTURE.md for the
+phase→backend dispatch table.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from .base import Backend, Engine, L0Problem
+from .reference import ReferenceBackend
+from .jnp_backend import JnpBackend
+from .pallas_backend import PallasBackend
+from .sharded import ShardedBackend
+
+BACKENDS = {
+    "reference": ReferenceBackend,
+    "jnp": JnpBackend,
+    "pallas": PallasBackend,
+    "sharded": ShardedBackend,
+}
+
+#: default execution backend (jit-cached XLA) when none is configured.
+DEFAULT_BACKEND = "jnp"
+
+
+def get_engine(spec: Union[str, Engine, Backend, None] = None, **opts) -> Engine:
+    """Resolve a backend name / instance into an :class:`Engine`."""
+    if spec is None:
+        spec = DEFAULT_BACKEND
+    if isinstance(spec, Engine):
+        return spec
+    if isinstance(spec, Backend):
+        return Engine(spec)
+    try:
+        cls = BACKENDS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {spec!r}; expected one of {sorted(BACKENDS)}"
+        ) from None
+    return Engine(cls(**opts))
+
+
+__all__ = [
+    "Backend", "Engine", "L0Problem", "BACKENDS", "DEFAULT_BACKEND",
+    "get_engine", "ReferenceBackend", "JnpBackend", "PallasBackend",
+    "ShardedBackend",
+]

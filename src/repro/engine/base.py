@@ -1,0 +1,169 @@
+"""Pluggable execution-engine layer for the three SISSO hot phases.
+
+The paper's central claim is *portability*: one expression of the
+time-dominating phases (feature creation, SIS screening, ℓ0 regression)
+dispatched to whatever hardware is available — the Kokkos single-source
+discipline.  Here that translates to a :class:`Backend` contract with one
+implementation of the screening math per execution strategy:
+
+========== =============================================================
+backend     execution strategy
+========== =============================================================
+reference   host numpy, literal textbook formulas — the bit-exact oracle
+jnp         jit-cached XLA (MXU matmuls + vmapped solves)
+pallas      jnp + Pallas kernels on the hot paths (fused gen+SIS,
+            ℓ0 pair tiles); interpret mode on CPU, Mosaic on TPU
+sharded     jnp math inside shard_map over a device mesh
+========== =============================================================
+
+Core code (``core/sis.py``, ``core/l0.py``, ``core/feature_space.py``)
+never branches on *how* a phase executes; it calls the :class:`Engine` it
+was handed.  Capability flags let a backend decline a (phase, shape) combo
+— the class hierarchy then falls back to the jnp path, so every backend
+accepts every request.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.sis import ScoreContext, TaskLayout
+from ..core.l0 import GramStats
+
+
+@dataclasses.dataclass
+class L0Problem:
+    """One ℓ0 sweep's operands, prepared once and scored block-by-block.
+
+    ``stats`` (Gram sufficient statistics) and per-problem jit caches are
+    filled in by the backend's :meth:`Backend.prepare_l0`.
+    """
+
+    x: np.ndarray            # (m, S) subspace feature values
+    y: np.ndarray            # (S,)
+    layout: TaskLayout
+    method: str              # 'gram' (closed form) | 'qr' (paper-faithful)
+    dtype: Any
+    stats: Optional[GramStats] = None
+    cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def m(self) -> int:
+        return int(self.x.shape[0])
+
+
+class Backend(abc.ABC):
+    """One execution strategy for the three hot phases.
+
+    Capability flags:
+
+    * ``fused_deferred`` — :meth:`sis_scores_deferred` generates, validates
+      and scores candidate values without materializing them (paper P3); if
+      False the default eval→score→mask composition is used.
+    * ``l0_pairs_only`` — :meth:`l0_scores` only accelerates 2-tuples; other
+      widths are delegated to the jnp implementation.
+    * ``bit_exact_oracle`` — results define the parity baseline.
+    """
+
+    name: str = "abstract"
+    fused_deferred: bool = False
+    l0_pairs_only: bool = False
+    bit_exact_oracle: bool = False
+
+    # -- phase 1: candidate evaluation + value rules -------------------
+    @abc.abstractmethod
+    def eval_block(
+        self,
+        op_id: int,
+        a: np.ndarray,  # (B, S) child-1 values
+        b: np.ndarray,  # (B, S) child-2 values (== a for unary ops)
+        l_bound: float,
+        u_bound: float,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Evaluate one operator over child-value blocks.
+
+        Returns ``(values (B, S) float64, valid (B,) bool)`` under the
+        canonical value rules (core/validity.py).
+        """
+
+    # -- phase 2: SIS screening ----------------------------------------
+    @abc.abstractmethod
+    def sis_scores(self, values: np.ndarray, ctx: ScoreContext) -> np.ndarray:
+        """Projection scores (B,) of materialized candidate values."""
+
+    def sis_scores_deferred(
+        self,
+        op_id: int,
+        a: np.ndarray,
+        b: np.ndarray,
+        ctx: ScoreContext,
+        l_bound: float,
+        u_bound: float,
+    ) -> np.ndarray:
+        """Scores (B,) of *deferred* candidates; invalid -> -inf.
+
+        Default composition: evaluate, apply value rules, score.  Backends
+        with ``fused_deferred`` overrule this with a fused kernel.
+        """
+        values, valid = self.eval_block(op_id, a, b, l_bound, u_bound)
+        scores = self.sis_scores(values, ctx)
+        return np.where(valid, scores, -np.inf)
+
+    # -- phase 3: ℓ0 regression ----------------------------------------
+    def prepare_l0(
+        self,
+        x: np.ndarray,
+        y: np.ndarray,
+        layout: TaskLayout,
+        method: str = "gram",
+        dtype: Any = np.float64,
+    ) -> L0Problem:
+        return L0Problem(
+            x=np.asarray(x, np.float64), y=np.asarray(y, np.float64),
+            layout=layout, method=method, dtype=dtype,
+        )
+
+    @abc.abstractmethod
+    def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
+        """Total SSE (B,) of the per-task LSQ fits for (B, n) tuples."""
+
+
+class Engine:
+    """Phase→backend dispatcher threaded through the whole SISSO pipeline.
+
+    A thin façade over one :class:`Backend`: the solver, feature space, SIS
+    screen and ℓ0 search all hold the same ``Engine`` and never ask *how*
+    their math runs.  Exists as its own object (rather than passing the
+    backend around) so cross-phase policy — streaming, async double
+    buffering, multi-host merges — lands here without touching core code.
+    """
+
+    def __init__(self, backend: Backend):
+        self.backend = backend
+
+    @property
+    def name(self) -> str:
+        return self.backend.name
+
+    def __repr__(self) -> str:
+        return f"Engine({self.backend.name})"
+
+    def eval_block(self, op_id, a, b, l_bound, u_bound):
+        return self.backend.eval_block(op_id, a, b, l_bound, u_bound)
+
+    def sis_scores(self, values, ctx):
+        return self.backend.sis_scores(values, ctx)
+
+    def sis_scores_deferred(self, op_id, a, b, ctx, l_bound, u_bound):
+        return self.backend.sis_scores_deferred(
+            op_id, a, b, ctx, l_bound, u_bound
+        )
+
+    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64):
+        return self.backend.prepare_l0(x, y, layout, method=method, dtype=dtype)
+
+    def l0_scores(self, prob, tuples):
+        return self.backend.l0_scores(prob, tuples)

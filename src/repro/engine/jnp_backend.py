@@ -1,0 +1,84 @@
+"""jnp backend: jit-cached XLA implementations of the three hot phases.
+
+This is the default engine: the SIS screen is three MXU matmuls plus an
+epilogue (core/sis.py docstring), ℓ0 is the Gram-cached closed form or the
+paper-faithful batched QR (core/l0.py).  All entry points funnel through
+module-level ``jax.jit`` wrappers so repeated blocks of the same shape reuse
+the compiled executable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.l0 import compute_gram_stats, score_tuples_gram, score_tuples_qr
+from ..core.operators import apply_op
+from ..core.sis import ScoreContext, scores_from_reductions
+from ..core.validity import value_rules_jnp
+from .base import Backend, L0Problem
+
+
+@functools.partial(jax.jit, static_argnames=("op_id",))
+def _eval_jit(op_id, a, b, l_bound, u_bound):
+    v = apply_op(op_id, a, b)
+    return v, value_rules_jnp(v, l_bound, u_bound)
+
+
+@functools.partial(jax.jit, static_argnames=("n_residuals",))
+def _score_jit(values, membership, y_tilde, counts, n_residuals):
+    sums = values @ membership.T
+    sumsq = (values * values) @ membership.T
+    dots = values @ y_tilde.T
+    return scores_from_reductions(sums, sumsq, dots, counts, n_residuals)
+
+
+class JnpBackend(Backend):
+    name = "jnp"
+
+    def eval_block(self, op_id, a, b, l_bound, u_bound):
+        v, valid = _eval_jit(
+            int(op_id), jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64),
+            float(l_bound), float(u_bound),
+        )
+        return np.asarray(v, np.float64), np.asarray(valid)
+
+    def sis_scores(self, values, ctx: ScoreContext) -> np.ndarray:
+        v = jnp.asarray(values, jnp.float64)
+        scores = _score_jit(
+            v,
+            jnp.asarray(ctx.membership, v.dtype),
+            jnp.asarray(ctx.y_tilde, v.dtype),
+            jnp.asarray(ctx.counts, v.dtype),
+            ctx.n_residuals,
+        )
+        return np.asarray(scores)
+
+    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64):
+        prob = super().prepare_l0(x, y, layout, method=method, dtype=dtype)
+        if method == "gram":
+            prob.stats = compute_gram_stats(
+                jnp.asarray(prob.x), jnp.asarray(prob.y), layout, dtype
+            )
+        return prob
+
+    def _score_fn(self, prob: L0Problem):
+        fn = prob.cache.get("jnp_l0")
+        if fn is None:
+            if prob.method == "gram":
+                fn = jax.jit(lambda tt: score_tuples_gram(prob.stats, tt))
+            else:
+                xs = jnp.asarray(prob.x, prob.dtype)
+                ys = jnp.asarray(prob.y, prob.dtype)
+                fn = jax.jit(
+                    lambda tt: score_tuples_qr(
+                        xs, ys, prob.layout, tt, prob.dtype
+                    )
+                )
+            prob.cache["jnp_l0"] = fn
+        return fn
+
+    def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
+        return np.asarray(self._score_fn(prob)(jnp.asarray(tuples)))

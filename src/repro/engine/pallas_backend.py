@@ -1,0 +1,55 @@
+"""Pallas backend: jnp everywhere + Pallas kernels on the two hot paths.
+
+* deferred SIS — ``kernels/fused_sis.py``: candidates are generated,
+  validated and scored in VMEM, never materialized to HBM (paper P3,
+  deepened).  The wrapper in ``kernels/ops.py`` owns the fp32 cast and the
+  (8k, 128k) padding/layout policy.
+* ℓ0 pairs — ``kernels/ops.py:l0_score_pairs``: closed-form SSE gathered
+  from Gram statistics (the tile kernel's math, XLA-gather form).
+
+Everything else (materialized SIS blocks, ℓ0 widths ≠ 2, QR method)
+inherits the jnp implementation — the kernels accelerate, the semantics
+stay the canonical ones.  On CPU containers the kernels run with
+``interpret=True`` (same code path, same numerics); on TPU they lower to
+Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.sis import ScoreContext
+from ..kernels import ops as kops
+from .base import L0Problem
+from .jnp_backend import JnpBackend
+
+
+class PallasBackend(JnpBackend):
+    name = "pallas"
+    fused_deferred = True
+    l0_pairs_only = True
+
+    def __init__(self, interpret: Optional[bool] = None, block_b: int = 256):
+        self.interpret = interpret  # None -> auto (interpret off-TPU)
+        self.block_b = int(block_b)
+
+    def sis_scores_deferred(self, op_id, a, b, ctx: ScoreContext,
+                            l_bound, u_bound):
+        scores = kops.fused_gen_sis(
+            int(op_id),
+            jnp.asarray(a, jnp.float32),
+            jnp.asarray(b, jnp.float32),
+            ctx, l_bound=l_bound, u_bound=u_bound,
+            block_b=self.block_b, interpret=self.interpret,
+        )
+        return np.asarray(scores)
+
+    def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
+        tuples = np.asarray(tuples)
+        if tuples.shape[1] == 2 and prob.method == "gram":
+            return np.asarray(
+                kops.l0_score_pairs(prob.stats, jnp.asarray(tuples, jnp.int32))
+            )
+        return super().l0_scores(prob, tuples)

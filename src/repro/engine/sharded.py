@@ -1,0 +1,71 @@
+"""Sharded backend: the jnp math inside shard_map over a device mesh.
+
+Candidate features (SIS) and tuple blocks (ℓ0) shard over the mesh's
+``data`` (+``pod``) axes; samples shard over ``model`` when the mesh has
+one (Gram/projection partial sums are psum'ed — core/distributed.py).  On a
+single-device container this degenerates to a 1-shard mesh: the same code
+path, exercised end-to-end, which is exactly what the parity suite needs
+before a multi-host run is attempted.
+
+Deferred-candidate screening composes the jnp evaluator with the sharded
+scorer (no fused multi-device kernel yet — see ROADMAP open items).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core.distributed import (
+    _dp_axes, l0_pair_sses_sharded, sis_scores_sharded,
+)
+from ..core.sis import ScoreContext
+from .base import L0Problem
+from .jnp_backend import JnpBackend
+
+
+def default_mesh() -> Mesh:
+    """1-D data mesh over every visible device."""
+    return Mesh(np.asarray(jax.devices()), ("data",))
+
+
+class ShardedBackend(JnpBackend):
+    name = "sharded"
+    l0_pairs_only = True
+
+    def __init__(self, mesh: Optional[Mesh] = None):
+        self.mesh = mesh if mesh is not None else default_mesh()
+        dp = _dp_axes(self.mesh)
+        if not dp:
+            raise ValueError("sharded backend needs a 'data' or 'pod' mesh axis")
+        self._nd = int(np.prod([self.mesh.shape[a] for a in dp]))
+
+    def _pad(self, n: int) -> int:
+        return ((n + self._nd - 1) // self._nd) * self._nd
+
+    def sis_scores(self, values, ctx: ScoreContext) -> np.ndarray:
+        v = np.asarray(values, np.float64)
+        f = len(v)
+        if f == 0:
+            return np.zeros((0,))
+        vp = np.zeros((self._pad(f), v.shape[1]))
+        vp[:f] = v
+        scores = sis_scores_sharded(self.mesh, jnp.asarray(vp), ctx)
+        return np.asarray(scores)[:f]
+
+    def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
+        tuples = np.asarray(tuples)
+        if tuples.shape[1] != 2 or prob.method != "gram":
+            return super().l0_scores(prob, tuples)
+        b = len(tuples)
+        pairs = np.zeros((self._pad(b), 2), np.int32)
+        pairs[:b] = tuples
+        pairs[b:] = (0, min(1, prob.m - 1))  # benign padding pair, sliced off
+        sses = l0_pair_sses_sharded(
+            self.mesh, jnp.asarray(prob.x), jnp.asarray(prob.y),
+            prob.layout, jnp.asarray(pairs),
+        )
+        return np.asarray(sses)[:b]

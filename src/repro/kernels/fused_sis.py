@@ -30,9 +30,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.operators import apply_op
+from ..core.validity import value_rules_from_moments
 
 _EPS = 1e-12
-_VAR_MIN = 1e-10
 
 
 def _kernel(
@@ -63,13 +63,9 @@ def _kernel(
     r = dots.reshape(bsz, n_residuals, n_tasks) * inv_norm[:, None, :]
     score = jnp.abs(r).sum(axis=2).max(axis=1) / n_tasks
 
-    valid = (
-        finite
-        & (max_abs <= u_bound)
-        & (max_abs >= l_bound)
-        & (var.max(axis=1) > _VAR_MIN)
-        & jnp.isfinite(score)
-    )
+    valid = value_rules_from_moments(
+        finite, max_abs, sums, sumsq, cnt, l_bound, u_bound
+    ) & jnp.isfinite(score)
     out_ref[...] = jnp.where(valid, score, -jnp.inf)[None, :]
 
 

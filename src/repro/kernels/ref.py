@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.operators import apply_op
+from ..core.validity import value_rules_from_moments
 
 _EPS = 1e-12
 _DET_EPS = 1e-30
@@ -53,11 +54,8 @@ def fused_gen_sis_ref(
     r = dots.reshape(bsz, n_residuals, t) * inv_norm[:, None, :]
     score = jnp.abs(r).mean(axis=2).max(axis=1)
 
-    valid = (
-        finite
-        & (max_abs <= u_bound)
-        & (max_abs >= l_bound)
-        & (var.max(axis=1) > 1e-10)
+    valid = value_rules_from_moments(
+        finite, max_abs, sums, sumsq, counts, l_bound, u_bound
     )
     return jnp.where(valid & jnp.isfinite(score), score, -jnp.inf)
 

@@ -1,11 +1,13 @@
 """SISSO launcher: run a test case end-to-end with a restartable journal.
 
     PYTHONPATH=src python -m repro.launch.sisso --case thermal [--full] \
-        [--journal /tmp/l0.json] [--engine gram|qr] [--kernels]
+        [--backend reference|jnp|pallas|sharded] [--l0-method gram|qr] \
+        [--journal /tmp/l0.json]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 from ..configs.sisso_kaggle import kaggle_bandgap_case
 from ..configs.sisso_thermal import thermal_conductivity_case
@@ -17,20 +19,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--case", default="thermal", choices=("thermal", "kaggle"))
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--engine", default="gram", choices=("gram", "qr"))
+    ap.add_argument("--backend", default=None,
+                    choices=("reference", "jnp", "pallas", "sharded"),
+                    help="execution engine for all three hot phases")
+    ap.add_argument("--l0-method", "--engine", dest="l0_method",
+                    default="gram", choices=("gram", "qr"),
+                    help="l0 math: Gram closed form or paper-faithful QR "
+                         "(--engine is the deprecated spelling)")
     ap.add_argument("--kernels", action="store_true",
-                    help="route hot loops through the Pallas kernels")
+                    help="deprecated alias for --backend pallas")
     ap.add_argument("--journal", default=None,
                     help="work-journal path (restartable ℓ0 sweeps)")
     args = ap.parse_args()
 
     case = (thermal_conductivity_case if args.case == "thermal"
             else kaggle_bandgap_case)(reduced=not args.full)
-    import dataclasses
 
     cfg = case.config
-    cfg = dataclasses.replace(cfg, l0_engine=args.engine,
-                              use_kernels=args.kernels)
+    backend = args.backend or ("pallas" if args.kernels else cfg.backend)
+    cfg = dataclasses.replace(cfg, l0_method=args.l0_method, backend=backend)
 
     journal = WorkJournal(args.journal) if args.journal else None
     fit = SissoRegressor(cfg).fit(
@@ -40,8 +47,8 @@ def main():
     rows = [f.row for f in best.features]
     fv = fit.fspace.values_matrix()[rows]
     print(best)
-    print(f"[sisso] {case.name}: r2={best.r2(case.y, fv):.6f} "
-          f"rmse={best.rmse(case.y, fv):.4g}")
+    print(f"[sisso] {case.name}: backend={backend} "
+          f"r2={best.r2(case.y, fv):.6f} rmse={best.rmse(case.y, fv):.4g}")
     print(f"[sisso] phases: {fit.timings}")
     if journal is not None:
         journal.clear()

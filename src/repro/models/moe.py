@@ -99,7 +99,10 @@ def moe_apply_dispatch(params, x, cfg):
     gradients back into the ZeRO shard; the only activation collective is
     the inherent TP psum of the block output.
     """
-    from jax import shard_map
+    try:  # jax >= 0.5 re-exports shard_map at top level
+        from jax import shard_map
+    except ImportError:  # jax 0.4.x keeps it in experimental
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from .sharding import current_mesh

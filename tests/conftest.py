@@ -1,14 +1,16 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import settings
+
+from _hyp import HAS_HYPOTHESIS, settings
 
 # SISSO validation numerics want real fp64 on CPU (paper's FP64 mode).
 jax.config.update("jax_enable_x64", True)
 
-# JIT compilation makes first examples slow; wall-clock deadlines are noise.
-settings.register_profile("repro", deadline=None, max_examples=25)
-settings.load_profile("repro")
+if HAS_HYPOTHESIS:
+    # JIT compilation makes first examples slow; wall-clock deadlines are noise.
+    settings.register_profile("repro", deadline=None, max_examples=25)
+    settings.load_profile("repro")
 
 
 @pytest.fixture

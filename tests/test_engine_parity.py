@@ -1,0 +1,166 @@
+"""Backend parity suite: every phase, every backend, vs the reference oracle.
+
+The engine layer's contract (ISSUE 1 / ARCHITECTURE.md) is that screening
+math behaves identically on every backend: same validity masks, same SIS
+top-k, same ℓ0 winners (within fp32 score tolerance on the Pallas path).
+All on the thermal reduced case — multi-task, on-the-fly deferred last rung
+— plus synthetic single-task layouts.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.sisso_thermal import thermal_conductivity_case
+from repro.core import SissoRegressor, operators as om
+from repro.core.feature_space import FeatureSpace
+from repro.core.l0 import l0_search
+from repro.core.sis import TaskLayout, build_score_context, sis_screen
+from repro.engine import BACKENDS, Engine, get_engine
+
+DEVICE_BACKENDS = ["jnp", "pallas", "sharded"]
+ALL_BACKENDS = ["reference"] + DEVICE_BACKENDS
+
+
+@pytest.fixture(scope="module")
+def case():
+    return thermal_conductivity_case(reduced=True)
+
+
+def _fspace(case):
+    cfg = case.config
+    return FeatureSpace(
+        case.x, case.names, case.units, op_names=cfg.op_names,
+        max_rung=cfg.max_rung, l_bound=cfg.l_bound, u_bound=cfg.u_bound,
+        on_the_fly_last_rung=True,
+    ).generate()
+
+
+def test_registry_has_all_four_backends():
+    assert set(BACKENDS) == {"reference", "jnp", "pallas", "sharded"}
+    for name in BACKENDS:
+        eng = get_engine(name)
+        assert isinstance(eng, Engine) and eng.name == name
+    with pytest.raises(ValueError):
+        get_engine("cuda")
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_eval_block_validity_parity(rng, backend):
+    """Canonical value rules agree on every backend, including the cases
+    that historically split host vs kernel semantics."""
+    s = 64
+    ids = np.repeat([0, 1], s // 2)
+    x = np.stack([
+        rng.uniform(0.5, 3.0, s),          # plain valid
+        np.linspace(-1.0, 1.0, s),         # straddles zero (div -> inf)
+        np.full(s, 2.0),                   # zero variance everywhere
+        np.where(ids == 0, 1.0, 2.0),      # constant per task, varies across
+        rng.uniform(1e5, 1e6, s),          # mul -> exceeds u_bound=1e8? no
+        rng.uniform(1e7, 1e8, s),          # mul -> exceeds u_bound
+    ])
+    ia = np.array([0, 1, 2, 3, 4, 5])
+    ib = np.array([0, 0, 2, 3, 4, 5])
+    ref = get_engine("reference")
+    v_ref, m_ref = ref.eval_block(om.DIV, x[ia], x[ib], 1e-5, 1e8)
+    eng = get_engine(backend)
+    v, m = eng.eval_block(om.DIV, x[ia], x[ib], 1e-5, 1e8)
+    assert np.array_equal(m, m_ref)
+    np.testing.assert_allclose(v[m], v_ref[m_ref], rtol=1e-12)
+    # the per-task-constant row must be treated the same way everywhere
+    v_ref2, m_ref2 = ref.eval_block(om.MUL, x[[3]], x[[3]], 1e-5, 1e8)
+    v2, m2 = eng.eval_block(om.MUL, x[[3]], x[[3]], 1e-5, 1e8)
+    assert np.array_equal(m2, m_ref2)
+    assert m2[0]  # varies across tasks => whole-sample variance is real
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_sis_topk_parity_thermal(case, backend):
+    """Identical SIS top-k (materialized + deferred candidates, multi-task)."""
+    layout = TaskLayout.from_task_ids(case.task_ids)
+    f_ref, s_ref = sis_screen(
+        _fspace(case), case.y[None, :], layout, n_sis=25, exclude=set(),
+        engine=get_engine("reference"),
+    )
+    f_b, s_b = sis_screen(
+        _fspace(case), case.y[None, :], layout, n_sis=25, exclude=set(),
+        engine=get_engine(backend),
+    )
+    assert [f.expr for f in f_b] == [f.expr for f in f_ref]
+    np.testing.assert_allclose(s_b, s_ref, atol=5e-5)
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_sis_scores_parity_single_task(rng, backend):
+    """Raw block scores agree on a single-task, multi-residual layout."""
+    x = rng.uniform(0.5, 3.0, (60, 100))
+    resid = rng.normal(size=(4, 100))
+    ctx = build_score_context(resid, TaskLayout.single(100))
+    ref = get_engine("reference").sis_scores(x, ctx)
+    got = get_engine(backend).sis_scores(x, ctx)
+    np.testing.assert_allclose(got, ref, atol=1e-7)
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_sis_deferred_parity(case, backend):
+    """Fused / composed deferred-candidate scoring matches eval+score."""
+    fs = _fspace(case)
+    layout = TaskLayout.from_task_ids(case.task_ids)
+    ctx = build_score_context(case.y[None, :], layout)
+    x = fs.values_matrix().astype(np.float64)
+    ref = get_engine("reference")
+    eng = get_engine(backend)
+    blk = next(fs.iter_candidate_batches(512))
+    want = ref.sis_scores_deferred(
+        blk.op_id, x[blk.child_a], x[blk.child_b], ctx, fs.l_bound, fs.u_bound)
+    got = eng.sis_scores_deferred(
+        blk.op_id, x[blk.child_a], x[blk.child_b], ctx, fs.l_bound, fs.u_bound)
+    assert np.array_equal(np.isfinite(got), np.isfinite(want))
+    f = np.isfinite(want)
+    np.testing.assert_allclose(got[f], want[f], atol=5e-5)
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+@pytest.mark.parametrize("width", [1, 2, 3])
+def test_l0_scores_parity(rng, backend, width):
+    """Per-tuple SSE matches the lstsq oracle for every tuple width
+    (width != 2 exercises the pairs-only fallback on pallas/sharded)."""
+    m, s = 14, 156
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2.0 * x[3] - 1.0 * x[7] + 0.1 * rng.normal(size=s)
+    layout = TaskLayout.from_task_ids(np.repeat([0, 1], [75, 81]))
+    tuples = np.asarray(
+        list(__import__("itertools").combinations(range(m), width)), np.int32)
+    ref = get_engine("reference")
+    want = ref.l0_scores(ref.prepare_l0(x, y, layout), tuples)
+    eng = get_engine(backend)
+    got = eng.l0_scores(eng.prepare_l0(x, y, layout), tuples)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+    assert np.argmin(got) == np.argmin(want)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("method", ["gram", "qr"])
+def test_l0_search_winners_parity(rng, backend, method):
+    m, s = 24, 80
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 1.5 * x[5] - 2.5 * x[16] + 0.9
+    res = l0_search(x, y, TaskLayout.single(s), n_dim=2, n_keep=5,
+                    block=97, method=method, engine=get_engine(backend))
+    assert tuple(res.tuples[0]) == (5, 16)
+    assert res.sses[0] < 1e-6
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_full_fit_parity_thermal(case, backend):
+    """End-to-end: identical descriptor and matching SSE on every backend
+    (thermal reduced: multi-task + on-the-fly deferred last rung)."""
+    import dataclasses
+    fit_ref = SissoRegressor(
+        dataclasses.replace(case.config, backend="reference")
+    ).fit(case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
+    cfg = dataclasses.replace(case.config, backend=backend)
+    fit = SissoRegressor(cfg).fit(
+        case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
+    for dim in fit_ref.models_by_dim:
+        mr, mb = fit_ref.best(dim), fit.best(dim)
+        assert {f.expr for f in mr.features} == {f.expr for f in mb.features}
+        assert mb.sse == pytest.approx(mr.sse, rel=1e-6)

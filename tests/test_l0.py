@@ -1,7 +1,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.l0 import (
     compute_gram_stats, l0_search, n_models, score_tuples_gram,

@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, strategies as st
 
 import jax.numpy as jnp
 

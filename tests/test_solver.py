@@ -9,12 +9,12 @@ def _feature_rows(fit, model):
     return fit.fspace.values_matrix()[rows]
 
 
-@pytest.mark.parametrize("engine", ["gram", "qr"])
-def test_recovers_planted_formula(rng, engine):
+@pytest.mark.parametrize("method", ["gram", "qr"])
+def test_recovers_planted_formula(rng, method):
     x = rng.uniform(0.5, 3.0, size=(5, 120))
     y = 2.5 * (x[0] * x[1]) - 1.3 * (x[2] ** 2) + 0.7
     cfg = SissoConfig(max_rung=1, n_dim=2, n_sis=20, n_residual=5,
-                      l0_engine=engine,
+                      l0_method=method,
                       op_names=("add", "sub", "mul", "div", "sq", "sqrt", "inv"))
     fit = SissoRegressor(cfg).fit(x, y, list("abcde"))
     m = fit.best(2)
@@ -58,7 +58,7 @@ def test_kernel_path_equals_reference(rng):
     base = dict(max_rung=1, n_dim=2, n_sis=10, n_residual=3,
                 op_names=("add", "mul", "sq"), on_the_fly_last_rung=True)
     fit_ref = SissoRegressor(SissoConfig(**base)).fit(x, y, list("abcd"))
-    fit_ker = SissoRegressor(SissoConfig(use_kernels=True, **base)).fit(
+    fit_ker = SissoRegressor(SissoConfig(backend="pallas", **base)).fit(
         x, y, list("abcd"))
     mr, mk = fit_ref.best(2), fit_ker.best(2)
     assert {f.expr for f in mr.features} == {f.expr for f in mk.features}

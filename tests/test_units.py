@@ -1,7 +1,7 @@
 from fractions import Fraction
 
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, strategies as st
 
 from repro.core.units import Unit
 
