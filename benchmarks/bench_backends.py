@@ -1,36 +1,42 @@
 """Per-backend phase-timing comparison (engine layer, ARCHITECTURE.md).
 
 Runs the thermal reduced case end-to-end on every execution backend and
-emits one row per (backend, phase): the engine layer's promise is identical
-*results* (tests/test_engine_parity.py) with per-backend *performance* —
-this benchmark is the performance half of that claim.  On CPU containers
-the pallas backend runs in interpret mode, so its absolute numbers are a
-correctness exercise, not a speed claim.
+emits one row per (backend, phase) — including the new ``predict`` phase
+(compiled-descriptor evaluation, api layer).  The engine layer's promise is
+identical *results* (tests/test_engine_parity.py) with per-backend
+*performance*; this benchmark is the performance half of that claim, and
+its rows are recorded to ``BENCH_backends.json`` for the perf trajectory.
+On CPU containers the pallas backend runs in interpret mode, so its
+absolute numbers are a correctness exercise, not a speed claim.
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.api import SissoRegressor
 from repro.configs.sisso_thermal import thermal_conductivity_case
-from repro.core import SissoRegressor
 from repro.engine import BACKENDS
 
-from .common import emit
+from .common import emit, reset_bench_rows, time_call, write_bench_json
 
 
 def main() -> None:
+    reset_bench_rows()
     case = thermal_conductivity_case(reduced=True)
     for backend in BACKENDS:
         cfg = dataclasses.replace(case.config, backend=backend)
-        fit = SissoRegressor(cfg).fit(
-            case.x, case.y, case.names, units=case.units,
-            task_ids=case.task_ids,
-        )
-        best = fit.best()
-        rows = [f.row for f in best.features]
-        r2 = best.r2(case.y, fit.fspace.values_matrix()[rows])
-        for phase, secs in fit.timings.items():
+        est = SissoRegressor.from_config(cfg)
+        est.fit(case.x.T, case.y, names=case.names, units=case.units,
+                tasks=case.task_ids)
+        r2 = est.score(case.x.T, case.y, tasks=case.task_ids)
+        for phase, secs in est.fitted_.timings.items():
             emit(f"backend_{backend}_{phase}", secs * 1e6, f"r2={r2:.6f}")
+        # warm compiled-descriptor predict on the training batch shape
+        secs = time_call(
+            lambda: est.predict(case.x.T, tasks=case.task_ids))
+        emit(f"backend_{backend}_predict", secs * 1e6,
+             f"samples={case.x.shape[1]}")
+    write_bench_json("backends")
 
 
 if __name__ == "__main__":

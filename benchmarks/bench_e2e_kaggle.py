@@ -2,13 +2,13 @@
 from __future__ import annotations
 
 from repro.configs.sisso_kaggle import kaggle_bandgap_case
-from repro.core import SissoRegressor
+from repro.core import SissoSolver
 from .common import emit
 
 
 def main():
     case = kaggle_bandgap_case(reduced=True)
-    fit = SissoRegressor(case.config).fit(case.x, case.y, case.names)
+    fit = SissoSolver(case.config).fit(case.x, case.y, case.names)
     total = sum(fit.timings.values())
     for phase in ("fc", "sis", "l0"):
         emit(f"kaggle_{phase}", fit.timings[phase] * 1e6,

@@ -6,13 +6,13 @@ breakdown — the same three bars as the paper's Fig. 3b.
 from __future__ import annotations
 
 from repro.configs.sisso_thermal import thermal_conductivity_case
-from repro.core import SissoRegressor
+from repro.core import SissoSolver
 from .common import emit
 
 
 def main():
     case = thermal_conductivity_case(reduced=True)
-    fit = SissoRegressor(case.config).fit(
+    fit = SissoSolver(case.config).fit(
         case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
     total = sum(fit.timings.values())
     for phase in ("fc", "sis", "l0"):

@@ -1,0 +1,52 @@
+"""Serving-path microbenchmark: artifact -> SissoServer -> batched predict.
+
+Measures the descriptor-serving layer (api/serving.py): cold compile per
+batch bucket, warm per-batch latency across batch sizes, and the cost of
+an artifact load — the numbers behind ``repro.launch.serve_sisso``.  Rows
+are recorded to ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import FittedSisso, SissoRegressor, SissoServer
+
+from .common import emit, reset_bench_rows, time_call, write_bench_json
+
+
+def main() -> None:
+    reset_bench_rows()
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0.5, 3.0, size=(120, 5))
+    y = 2.5 * X[:, 0] * X[:, 1] - 1.3 * X[:, 2] ** 2 + 0.7
+    est = SissoRegressor(
+        max_rung=1, n_dim=2, n_sis=20,
+        op_names=("add", "sub", "mul", "div", "sq", "sqrt", "inv"),
+    )
+    est.fit(X, y, names=["radius", "charge", "mass", "chi", "ea"])
+
+    path = est.save("/tmp/bench_serve_model.json")
+    t0 = time.perf_counter()
+    fitted = FittedSisso.load(path)
+    emit("serve_artifact_load", (time.perf_counter() - t0) * 1e6,
+         "versioned JSON artifact")
+
+    server = SissoServer(fitted)
+    for batch in (1, 8, 64, 256):
+        xb = rng.uniform(0.5, 3.0, size=(batch, 5))
+        t0 = time.perf_counter()
+        server.predict(xb)   # first request in this bucket: jit compile
+        cold = time.perf_counter() - t0
+        warm = time_call(server.predict, xb)
+        emit(f"serve_batch{batch}_cold", cold * 1e6, "includes jit compile")
+        emit(f"serve_batch{batch}_warm", warm * 1e6,
+             f"{batch / max(warm, 1e-9):.0f} samples/s")
+    emit("serve_shape_cache", server.stats["n_compiled_shapes"],
+         f"buckets={server.stats['shapes']}")
+    write_bench_json("serve")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,15 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, BENCH_*.json recording."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+#: rows emitted since the last write_bench_json() call
+_ROWS: List[Dict] = []
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
@@ -28,3 +33,37 @@ def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived})
+
+
+def reset_bench_rows() -> None:
+    """Open a fresh BENCH_*.json recording scope.
+
+    Benchmarks that record JSON call this at the top of ``main()`` so rows
+    emitted by unrelated modules earlier in a ``benchmarks.run`` sweep
+    don't leak into their file.
+    """
+    global _ROWS
+    _ROWS = []
+
+
+def write_bench_json(tag: str) -> str:
+    """Write rows emitted since the last call to ``BENCH_<tag>.json``.
+
+    The file lands in ``$BENCH_DIR`` (default: CWD) so CI and local runs
+    leave a machine-readable perf trajectory next to the CSV stdout.
+    """
+    global _ROWS
+    path = os.path.join(os.environ.get("BENCH_DIR", "."), f"BENCH_{tag}.json")
+    doc = {
+        "tag": tag,
+        "created_unix": round(time.time(), 3),
+        "jax_backend": jax.default_backend(),
+        "rows": _ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {path} ({len(_ROWS)} rows)")
+    _ROWS = []
+    return path

@@ -11,14 +11,14 @@ jax.config.update("jax_enable_x64", True)
 
 from . import (bench_backends, bench_e2e_kaggle, bench_e2e_thermal,
                bench_feature_gen, bench_l0, bench_precision, bench_scaling,
-               bench_sis)
+               bench_serve, bench_sis)
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     for mod in (bench_feature_gen, bench_sis, bench_l0, bench_precision,
-                bench_backends, bench_e2e_thermal, bench_e2e_kaggle,
-                bench_scaling):
+                bench_backends, bench_serve, bench_e2e_thermal,
+                bench_e2e_kaggle, bench_scaling):
         mod.main()
 
 

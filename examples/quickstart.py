@@ -1,33 +1,57 @@
-"""Quickstart: find an analytic law with SISSO in ~20 lines.
+"""Quickstart: find an analytic law with SISSO and ship it, in ~30 lines.
+
+The canonical surface is the sklearn-style estimator in ``repro.api``::
+
+    from repro.api import SissoRegressor, load_artifact
+
+    est = SissoRegressor(max_rung=1, n_dim=2, n_sis=20)
+    est.fit(X_train, y_train, names=["radius", "charge", ...])
+    #   X: (n_samples, n_features) — sklearn convention
+
+    y_hat = est.predict(X_test)       # compiled descriptor, unseen samples
+    r2 = est.score(X_test, y_test)    # sklearn regressor scoring
+    d = est.transform(X_test)         # (n_samples, n_dim) descriptor values
+
+    est.save("law.json")              # versioned, data-free JSON artifact
+    load_artifact("law.json").predict(X_test)   # identical predictions
+
+Run it:
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import SissoConfig, SissoRegressor
+from repro.api import SissoRegressor, load_artifact
 
 rng = np.random.default_rng(0)
 
-# tabular data: 5 primary features, 120 samples
-X = rng.uniform(0.5, 3.0, size=(5, 120))
+# tabular data: 120 samples x 5 primary features (sklearn orientation)
+X = rng.uniform(0.5, 3.0, size=(120, 5))
 names = ["radius", "charge", "mass", "chi", "ea"]
 
 # hidden ground truth the model should rediscover
-y = 2.5 * X[0] * X[1] - 1.3 * X[2] ** 2 + 0.7
+y = 2.5 * X[:, 0] * X[:, 1] - 1.3 * X[:, 2] ** 2 + 0.7
 
-cfg = SissoConfig(
+X_train, X_test = X[:100], X[100:]
+y_train, y_test = y[:100], y[100:]
+
+est = SissoRegressor(
     max_rung=1,            # one level of operator composition
     n_dim=2,               # two-term descriptor
     n_sis=20,              # SIS subspace per dimension
     op_names=("add", "sub", "mul", "div", "sq", "sqrt", "inv"),
 )
-fit = SissoRegressor(cfg).fit(X, y, names)
+est.fit(X_train, y_train, names=names)
 
-model = fit.best()
+model = est.model()
 print(model)
-rows = [f.row for f in model.features]
-fv = fit.fspace.values_matrix()[rows]
-print(f"rmse={model.rmse(y, fv):.2e}  r2={model.r2(y, fv):.6f}")
-print(f"phase timings: {fit.timings}")
-assert model.r2(y, fv) > 0.999999
-print("recovered the planted law ✓")
+print(f"held-out rmse={np.sqrt(np.mean((est.predict(X_test) - y_test) ** 2)):.2e}"
+      f"  r2={est.score(X_test, y_test):.6f}")
+print(f"phase timings: {est.fitted_.timings}")
+assert est.score(X_test, y_test) > 0.999999
+
+# persistence: save -> load -> identical out-of-sample predictions
+path = est.save("/tmp/quickstart_law.json")
+reloaded = load_artifact(path)
+assert np.array_equal(reloaded.predict(X_test), est.predict(X_test))
+print("recovered the planted law, artifact round-trips ✓")

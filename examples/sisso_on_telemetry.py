@@ -11,8 +11,8 @@ data" use case applied to systems telemetry.
 """
 import numpy as np
 
+from repro.api import SissoRegressor
 from repro.configs.qwen2_1p5b import reduced
-from repro.core import SissoConfig, SissoRegressor
 from repro.optim import AdamWConfig, cosine_lr
 import jax.numpy as jnp
 
@@ -32,15 +32,13 @@ x = np.stack([warm, cosine, prog, steps / opt.total_steps, noise + 1.0])
 names = ["warmup", "cosine", "progress", "frac", "jitter"]
 
 # --- phase 2: SISSO on the telemetry --------------------------------------
-cfg = SissoConfig(max_rung=1, n_dim=1, n_sis=10, n_residual=3,
-                  op_names=("mul", "add", "sq"))
-fit = SissoRegressor(cfg).fit(x, lrs, names)
-best = fit.best(1)
+est = SissoRegressor(max_rung=1, n_dim=1, n_sis=10, n_residual=3,
+                     op_names=("mul", "add", "sq"))
+est.fit(x.T, lrs, names=names)   # api orientation: (n_samples, n_features)
+best = est.model(1)
 print("recovered schedule law:")
 print(best)
-rows = [f.row for f in best.features]
-fv = fit.fspace.values_matrix()[rows]
-print(f"r2={best.r2(lrs, fv):.8f}")
+print(f"r2={est.score(x.T, lrs):.8f}")
 # lr = lr_peak * warmup * (min_ratio + (1-min_ratio)*cosine)
 #    = 0.0003*warmup + 0.0027*(warmup*cosine):   SISSO finds warmup*cosine
 assert "(warmup * cosine)" in best.equation() or "warmup" in best.equation()

@@ -1,0 +1,25 @@
+"""repro.api — the canonical user-facing SISSO surface.
+
+sklearn-convention estimator (:class:`SissoRegressor`), compiled
+out-of-sample prediction (core/descriptor.py programs dispatched through the
+execution-engine layer), versioned model persistence
+(:class:`FittedSisso` / :func:`load_artifact`), and a batched serving front
+end (:class:`SissoServer`, driven by ``repro.launch.serve_sisso``).
+
+The array-major core driver remains available as
+:class:`repro.core.SissoSolver` for code that works in the paper's ``(P, S)``
+value-matrix layout.
+"""
+from ..core.descriptor import DescriptorProgram, compile_features
+from .artifact import (
+    ARTIFACT_FORMAT, ARTIFACT_VERSION, DescriptorModel, FittedSisso,
+    load_artifact,
+)
+from .estimator import NotFittedError, SissoRegressor
+from .serving import SissoServer
+
+__all__ = [
+    "SissoRegressor", "NotFittedError", "FittedSisso", "DescriptorModel",
+    "DescriptorProgram", "compile_features", "load_artifact", "SissoServer",
+    "ARTIFACT_FORMAT", "ARTIFACT_VERSION",
+]

@@ -1,0 +1,294 @@
+"""Versioned, data-free model artifacts for fitted SISSO estimators.
+
+A :class:`FittedSisso` is everything needed to *use* a fit — compiled
+descriptor programs (lineage DAGs flattened into tapes), per-task
+coefficients/intercepts, units, task layout, config and library version —
+and nothing that requires the training data.  ``save``/``load`` round-trip
+through a single JSON document so an artifact fitted on one machine can be
+served on another (launch/serve_sisso.py) with bit-identical predictions:
+evaluation replays the same ``apply_op`` tape the training run used
+(core/descriptor.py).
+
+Artifact format history:
+
+* **v1** — initial format: config, names, units, task labels,
+  ``models[dim] = [{program, coefs, intercepts, sse, exprs, units}]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from fractions import Fraction
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .. import __version__ as _LIB_VERSION
+from ..core.descriptor import DescriptorProgram
+from ..core.solver import SissoConfig
+from ..core.units import Unit
+
+ARTIFACT_FORMAT = "repro-sisso-artifact"
+ARTIFACT_VERSION = 1
+
+#: config fields that are deprecated aliases, never serialized
+_CONFIG_SKIP = {"l0_engine", "use_kernels"}
+
+
+def _py(v):
+    """numpy scalar -> native python scalar (JSON- and dict-key-safe)."""
+    return v.item() if isinstance(v, np.generic) else v
+
+
+def _unit_to_dict(u: Unit) -> dict:
+    return {
+        "basis": list(u.basis),
+        "exponents": [str(e) for e in u.exponents],
+    }
+
+
+def _unit_from_dict(d: dict) -> Unit:
+    return Unit(
+        tuple(Fraction(e) for e in d["exponents"]), tuple(d["basis"])
+    )
+
+
+@dataclasses.dataclass
+class DescriptorModel:
+    """One fitted model: compiled descriptor + per-task linear read-out."""
+
+    program: DescriptorProgram
+    coefs: np.ndarray       # (T, n)
+    intercepts: np.ndarray  # (T,)
+    sse: float
+    exprs: tuple            # human-readable descriptor expressions
+    units: tuple            # unit strings, aligned with exprs
+
+    @property
+    def dim(self) -> int:
+        return len(self.exprs)
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.coefs.shape[0])
+
+    def equation(self) -> str:
+        terms = []
+        for t in range(len(self.intercepts)):
+            parts = [f"{self.intercepts[t]:+.6g}"]
+            for c, e in zip(self.coefs[t], self.exprs):
+                parts.append(f"{c:+.6g}*{e}")
+            label = f"task{t}: " if len(self.intercepts) > 1 else ""
+            terms.append(label + " ".join(parts))
+        return "\n".join(terms)
+
+    def __str__(self) -> str:
+        return f"DescriptorModel(dim={self.dim}, sse={self.sse:.6g})\n" \
+               f"{self.equation()}"
+
+    def to_dict(self) -> dict:
+        return {
+            "program": self.program.to_dict(),
+            "coefs": np.asarray(self.coefs, np.float64).tolist(),
+            "intercepts": np.asarray(self.intercepts, np.float64).tolist(),
+            "sse": float(self.sse),
+            "exprs": list(self.exprs),
+            "units": list(self.units),
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "DescriptorModel":
+        return DescriptorModel(
+            program=DescriptorProgram.from_dict(d["program"]),
+            coefs=np.asarray(d["coefs"], np.float64),
+            intercepts=np.asarray(d["intercepts"], np.float64),
+            sse=float(d["sse"]),
+            exprs=tuple(d["exprs"]),
+            units=tuple(d["units"]),
+        )
+
+
+@dataclasses.dataclass
+class FittedSisso:
+    """A fitted, serializable SISSO model family (one model list per dim)."""
+
+    names: List[str]
+    config: SissoConfig
+    models_by_dim: Dict[int, List[DescriptorModel]]
+    task_labels: List[Any]           # labels as passed to fit, sorted
+    units: Optional[List[Unit]] = None
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)
+    library_version: str = _LIB_VERSION
+    _engines: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    # model access
+    # ------------------------------------------------------------------
+    @property
+    def n_features_in(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.task_labels)
+
+    def model(self, dim: Optional[int] = None) -> DescriptorModel:
+        """Best model of dimension ``dim`` (default: highest non-empty)."""
+        if dim is None:
+            finite = [d for d, ms in self.models_by_dim.items() if ms]
+            if not finite:
+                raise RuntimeError("artifact holds no finite models")
+            dim = max(finite)
+        models = self.models_by_dim.get(dim)
+        if not models:
+            raise RuntimeError(
+                f"dimension {dim} produced no finite models; "
+                f"dims with models: "
+                f"{sorted(d for d, ms in self.models_by_dim.items() if ms)}"
+            )
+        return models[0]
+
+    # ------------------------------------------------------------------
+    # prediction (compiled descriptor, engine-dispatched)
+    # ------------------------------------------------------------------
+    def _engine(self, backend: Optional[str] = None):
+        from ..engine import get_engine
+        from ..precision import set_precision
+
+        # a serving process never constructs a SissoSolver, so the
+        # artifact's precision policy (the global x64 switch) must be
+        # applied here or fp64 programs silently truncate to fp32 and
+        # predictions drift from the training machine
+        set_precision(self.config.precision)
+        key = backend or self.config.backend
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = self._engines[key] = get_engine(key)
+        return eng
+
+    def _primary_rows(self, X) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        if X.ndim != 2 or X.shape[1] != self.n_features_in:
+            raise ValueError(
+                f"X must be (n_samples, {self.n_features_in}) to match the "
+                f"{len(self.names)} training features, got {X.shape}"
+            )
+        return np.ascontiguousarray(X.T)
+
+    def _task_codes(self, tasks, n_samples: int) -> np.ndarray:
+        if self.n_tasks == 1:
+            return np.zeros(n_samples, np.intp)
+        if tasks is None:
+            raise ValueError(
+                f"this model was fit with {self.n_tasks} tasks "
+                f"({self.task_labels}); pass tasks=(n_samples,) labels"
+            )
+        lut = {label: i for i, label in enumerate(self.task_labels)}
+        try:
+            codes = np.asarray([lut[_py(t)] for t in np.asarray(tasks)])
+        except KeyError as e:
+            raise ValueError(
+                f"unknown task label {e.args[0]!r}; "
+                f"known: {self.task_labels}"
+            ) from None
+        if len(codes) != n_samples:
+            raise ValueError("tasks must have one label per sample")
+        return codes
+
+    def transform(self, X, *, dim: Optional[int] = None,
+                  backend: Optional[str] = None) -> np.ndarray:
+        """Descriptor values (n_samples, dim) — pysisso's transformer role."""
+        mdl = self.model(dim)
+        xp = self._primary_rows(X)
+        d = self._engine(backend).eval_program(mdl.program, xp)
+        return np.asarray(d, np.float64).T
+
+    def predict(self, X, *, dim: Optional[int] = None, tasks=None,
+                backend: Optional[str] = None) -> np.ndarray:
+        """Predicted targets (n_samples,) for unseen samples."""
+        mdl = self.model(dim)
+        xp = self._primary_rows(X)
+        d = self._engine(backend).eval_program(mdl.program, xp)  # (n, S)
+        codes = self._task_codes(tasks, xp.shape[1])
+        co = mdl.coefs[codes]                                    # (S, n)
+        return (co * d.T).sum(axis=1) + mdl.intercepts[codes]
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        cfg = {
+            k: v for k, v in dataclasses.asdict(self.config).items()
+            if k not in _CONFIG_SKIP
+        }
+        cfg["op_names"] = list(cfg["op_names"])
+        return {
+            "format": ARTIFACT_FORMAT,
+            "version": ARTIFACT_VERSION,
+            "library_version": self.library_version,
+            "config": cfg,
+            "names": list(self.names),
+            "units": None if self.units is None
+            else [_unit_to_dict(u) for u in self.units],
+            "task_labels": [_py(t) for t in self.task_labels],
+            "timings": {k: float(v) for k, v in self.timings.items()},
+            "models": {
+                str(dim): [m.to_dict() for m in models]
+                for dim, models in self.models_by_dim.items()
+            },
+        }
+
+    def save(self, path: str) -> str:
+        """Write the artifact as JSON (atomic rename); returns ``path``."""
+        doc = self.to_dict()
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, path)
+        return path
+
+    @staticmethod
+    def from_dict(doc: dict) -> "FittedSisso":
+        if doc.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(
+                f"not a {ARTIFACT_FORMAT} document "
+                f"(format={doc.get('format')!r})"
+            )
+        if int(doc.get("version", -1)) != ARTIFACT_VERSION:
+            raise ValueError(
+                f"unsupported artifact version {doc.get('version')!r}; "
+                f"this library reads version {ARTIFACT_VERSION}"
+            )
+        cfg_fields = {f.name for f in dataclasses.fields(SissoConfig)}
+        cfg_kwargs = {
+            k: v for k, v in doc["config"].items() if k in cfg_fields
+        }
+        cfg_kwargs["op_names"] = tuple(cfg_kwargs.get("op_names", ()))
+        cfg = SissoConfig(**cfg_kwargs)
+        units = doc.get("units")
+        return FittedSisso(
+            names=list(doc["names"]),
+            config=cfg,
+            models_by_dim={
+                int(dim): [DescriptorModel.from_dict(m) for m in models]
+                for dim, models in doc["models"].items()
+            },
+            task_labels=list(doc["task_labels"]),
+            units=None if units is None
+            else [_unit_from_dict(u) for u in units],
+            timings=dict(doc.get("timings", {})),
+            library_version=str(doc.get("library_version", "unknown")),
+        )
+
+    @staticmethod
+    def load(path: str) -> "FittedSisso":
+        with open(path) as f:
+            return FittedSisso.from_dict(json.load(f))
+
+
+def load_artifact(path: str) -> FittedSisso:
+    """Load a saved SISSO artifact (see :meth:`FittedSisso.save`)."""
+    return FittedSisso.load(path)

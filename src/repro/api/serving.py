@@ -1,0 +1,83 @@
+"""Descriptor serving: batched predict over request streams.
+
+A :class:`SissoServer` wraps one model of a :class:`FittedSisso` and answers
+``predict`` for arbitrary request batches.  Requests are padded up to
+power-of-two batch buckets so the jnp backend's whole-program jit cache
+(one executable per batch shape, core/descriptor.py) is hit by every warm
+request instead of recompiling per distinct batch size — the same
+shape-bucketing discipline LLM serving uses for dynamic batches.  Padding
+replicates the last real row (not zeros) so operators with domain
+constraints (``1/x``, ``log``) never see manufactured singularities in the
+padded lanes.
+
+    server = SissoServer(load_artifact("law.json"))
+    y = server.predict(X_batch)            # any batch size
+    server.stats                           # requests / samples / compiles
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .artifact import FittedSisso
+
+
+def _bucket(n: int) -> int:
+    """Smallest power of two >= n (the jit-cache shape bucket)."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class SissoServer:
+    """Batched, jit-cached serving front end for one fitted model."""
+
+    def __init__(
+        self,
+        fitted: FittedSisso,
+        dim: Optional[int] = None,
+        backend: Optional[str] = None,
+        bucket_batches: bool = True,
+    ):
+        self.fitted = fitted
+        self.model = fitted.model(dim)
+        self.dim = self.model.dim
+        self.backend = backend or fitted.config.backend
+        self.bucket_batches = bucket_batches
+        self._shapes = set()
+        self._requests = 0
+        self._samples = 0
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters: requests, samples, distinct compiled shapes."""
+        return {
+            "requests": self._requests,
+            "samples": self._samples,
+            "shapes": sorted(self._shapes),
+            "n_compiled_shapes": len(self._shapes),
+        }
+
+    def predict(self, X, tasks=None) -> np.ndarray:
+        """Predictions (batch,) for one request batch ``X (batch, P)``."""
+        X = np.asarray(X, np.float64)
+        if X.ndim == 1:
+            X = X[None, :]
+        b = X.shape[0]
+        if b == 0:
+            return np.zeros(0)
+        bp = _bucket(b) if self.bucket_batches else b
+        if bp != b:
+            X = np.concatenate([X, np.repeat(X[-1:], bp - b, axis=0)])
+            if tasks is not None:
+                tasks = np.concatenate(
+                    [np.asarray(tasks), np.repeat(np.asarray(tasks)[-1:], bp - b)]
+                )
+        out = self.fitted.predict(
+            X, dim=self.dim, tasks=tasks, backend=self.backend
+        )
+        self._requests += 1
+        self._samples += b
+        self._shapes.add(bp)
+        return out[:b]
+
+    __call__ = predict

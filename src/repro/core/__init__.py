@@ -6,13 +6,15 @@ from .l0 import (
     GramStats, compute_gram_stats, score_tuples_gram, score_tuples_qr,
     l0_search, n_models, tuple_blocks,
 )
-from .solver import SissoConfig, SissoRegressor, SissoFit
+from .descriptor import DescriptorProgram, Instruction, compile_features
+from .solver import SissoConfig, SissoSolver, SissoRegressor, SissoFit
 from .units import Unit
 
 __all__ = [
     "FeatureSpace", "Feature", "CandidateBlock", "SissoModel", "TaskLayout",
     "sis_screen", "build_score_context", "score_block", "GramStats",
     "compute_gram_stats", "score_tuples_gram", "score_tuples_qr", "l0_search",
-    "n_models", "tuple_blocks", "SissoConfig", "SissoRegressor", "SissoFit",
-    "Unit",
+    "n_models", "tuple_blocks", "DescriptorProgram", "Instruction",
+    "compile_features", "SissoConfig", "SissoSolver", "SissoRegressor",
+    "SissoFit", "Unit",
 ]

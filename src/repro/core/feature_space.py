@@ -126,10 +126,19 @@ class FeatureSpace:
         self.candidates: List[CandidateBlock] = []  # last rung, on-the-fly only
         self.n_rejected = {"unit": 0, "domain": 0, "value": 0, "dup": 0, "redundant": 0}
 
-        self.admit_block(
+        # Descriptor compilation (core/descriptor.py) rebuilds selected
+        # features from the *user's input columns*, so record which column
+        # each admitted primary came from (dedup may reject some primaries,
+        # making fid != column) and the full input-name row.
+        self.n_primary_inputs = p
+        self.primary_names: List[str] = [str(n) for n in names]
+        admitted = self.admit_block(
             rung=0, values=primary_values, units=units,
             exprs=[str(n) for n in names], complexities=[0] * p,
         )
+        self.primary_columns: Dict[int, int] = {
+            f.fid: col for col, f in enumerate(admitted) if f is not None
+        }
 
     # ------------------------------------------------------------------
     # materialized storage

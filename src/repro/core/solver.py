@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -54,11 +55,21 @@ class SissoConfig:
     def __post_init__(self):
         # apply-and-clear: dataclasses.replace() re-runs this, and a stale
         # alias must not override an explicitly replaced backend/method
+        # (clearing also means each alias warns once, not per replace()).
         if self.l0_engine is not None:
+            warnings.warn(
+                "SissoConfig.l0_engine is deprecated; use l0_method",
+                DeprecationWarning, stacklevel=3,
+            )
             self.l0_method = self.l0_engine
             self.l0_engine = None
-        if self.use_kernels:
-            self.backend = "pallas"
+        if self.use_kernels is not None:
+            warnings.warn(
+                "SissoConfig.use_kernels is deprecated; use backend='pallas'",
+                DeprecationWarning, stacklevel=3,
+            )
+            if self.use_kernels:
+                self.backend = "pallas"
         self.use_kernels = None
 
 
@@ -69,13 +80,34 @@ class SissoFit:
     timings: Dict[str, float]
 
     def best(self, dim: Optional[int] = None) -> SissoModel:
+        if not self.models_by_dim:
+            raise RuntimeError("SissoFit holds no models (empty fit)")
         if dim is None:
-            dim = max(self.models_by_dim)
-        return self.models_by_dim[dim][0]
+            # highest dimension that actually produced a finite model
+            finite = [d for d, ms in self.models_by_dim.items() if ms]
+            if not finite:
+                raise RuntimeError(
+                    "no dimension produced a finite model "
+                    f"(searched dims {sorted(self.models_by_dim)})"
+                )
+            dim = max(finite)
+        models = self.models_by_dim.get(dim)
+        if not models:
+            raise RuntimeError(
+                f"dimension {dim} produced no finite models; "
+                f"dims with models: "
+                f"{sorted(d for d, ms in self.models_by_dim.items() if ms)}"
+            )
+        return models[0]
 
 
-class SissoRegressor:
-    """End-to-end SISSO (single- and multi-task).
+class SissoSolver:
+    """End-to-end SISSO core driver (single- and multi-task).
+
+    Array-major convention: ``primary_values`` is ``(P, S)`` (features on
+    rows), mirroring the paper's value-matrix layout.  The sklearn-style
+    user surface with ``(n_samples, n_features)`` inputs, out-of-sample
+    prediction and persistence is :class:`repro.api.SissoRegressor`.
 
     All three hot phases run on one execution engine selected by
     ``config.backend`` (see engine/ and ARCHITECTURE.md).
@@ -180,6 +212,13 @@ class SissoRegressor:
                     )
                 )
             models_by_dim[dim] = models
+            if not models:
+                log.warning(
+                    "dim %d ℓ0: no finite models out of %d evaluated — "
+                    "SissoFit.best(%d) will raise; check bounds/validity "
+                    "rules and the SIS subspace",
+                    dim, res.n_evaluated, dim,
+                )
             log.info(
                 "dim %d ℓ0: %d models evaluated, best SSE %.6g",
                 dim, res.n_evaluated, res.sses[0],
@@ -193,3 +232,22 @@ class SissoRegressor:
             residuals = np.stack(resids) if resids else y[None, :]
 
         return SissoFit(models_by_dim=models_by_dim, fspace=fspace, timings=timings)
+
+
+class SissoRegressor(SissoSolver):
+    """Deprecated alias of :class:`SissoSolver`.
+
+    The name now belongs to the sklearn-convention estimator
+    :class:`repro.api.SissoRegressor` (``(n_samples, n_features)`` inputs,
+    ``predict``/``transform``/``save``); this shim keeps old array-major
+    call sites working.
+    """
+
+    def __init__(self, config: SissoConfig, engine=None):
+        warnings.warn(
+            "repro.core.SissoRegressor is deprecated: use "
+            "repro.api.SissoRegressor (sklearn-style estimator) or "
+            "repro.core.SissoSolver (array-major core driver)",
+            DeprecationWarning, stacklevel=2,
+        )
+        super().__init__(config, engine=engine)

@@ -130,6 +130,21 @@ class Backend(abc.ABC):
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
         """Total SSE (B,) of the per-task LSQ fits for (B, n) tuples."""
 
+    # -- prediction: compiled descriptor programs ----------------------
+    def eval_program(self, program, x: np.ndarray) -> np.ndarray:
+        """Descriptor values (n_outputs, S) for primary rows ``x (n_inputs, S)``.
+
+        ``program`` is a :class:`~repro.core.descriptor.DescriptorProgram`
+        (a fitted model's lineage DAG flattened into a tape).  The default
+        replays the tape on host through the same ``apply_op`` math that
+        ``eval_block`` ran during training, so predict-on-train reproduces
+        the training value matrix exactly; the jnp family overrides this
+        with one jit-cached whole-program closure per batch shape.
+        """
+        from ..core.descriptor import eval_program_host
+
+        return eval_program_host(program, x)
+
 
 class Engine:
     """Phase→backend dispatcher threaded through the whole SISSO pipeline.
@@ -167,3 +182,6 @@ class Engine:
 
     def l0_scores(self, prob, tuples):
         return self.backend.l0_scores(prob, tuples)
+
+    def eval_program(self, program, x):
+        return self.backend.eval_program(program, x)

@@ -38,6 +38,19 @@ def _score_jit(values, membership, y_tilde, counts, n_residuals):
 class JnpBackend(Backend):
     name = "jnp"
 
+    def __init__(self):
+        # compiled descriptor programs -> jit closure (jax.jit then caches
+        # one executable per batch shape — the serving compile cache)
+        self._programs = {}
+
+    def eval_program(self, program, x):
+        fn = self._programs.get(program)
+        if fn is None:
+            from ..core.descriptor import program_evaluator_jnp
+
+            fn = self._programs[program] = program_evaluator_jnp(program)
+        return np.asarray(fn(jnp.asarray(x, jnp.float64)), np.float64)
+
     def eval_block(self, op_id, a, b, l_bound, u_bound):
         v, valid = _eval_jit(
             int(op_id), jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64),

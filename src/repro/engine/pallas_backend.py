@@ -32,6 +32,7 @@ class PallasBackend(JnpBackend):
     l0_pairs_only = True
 
     def __init__(self, interpret: Optional[bool] = None, block_b: int = 256):
+        super().__init__()
         self.interpret = interpret  # None -> auto (interpret off-TPU)
         self.block_b = int(block_b)
 

@@ -37,6 +37,7 @@ class ShardedBackend(JnpBackend):
     l0_pairs_only = True
 
     def __init__(self, mesh: Optional[Mesh] = None):
+        super().__init__()
         self.mesh = mesh if mesh is not None else default_mesh()
         dp = _dp_axes(self.mesh)
         if not dp:

@@ -1,0 +1,81 @@
+"""Descriptor-serving launcher: load an artifact, answer batched predicts.
+
+    PYTHONPATH=src python -m repro.launch.serve_sisso \
+        --artifact /tmp/model.json [--batches 16] [--batch-size 32] \
+        [--backend jnp] [--dim 2] [--vary-batch]
+
+Drives :class:`repro.api.SissoServer` with synthetic request batches
+(uniform draws in a plausible primary-feature range — a throughput
+exercise, not a physics one) and reports cold-compile latency, warm
+latency, throughput, and the jit-shape-cache hit behaviour.  The artifact
+is produced by ``repro.launch.sisso --save`` or
+``repro.api.SissoRegressor.save``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..api import SissoServer, load_artifact
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", required=True, help="saved model JSON")
+    ap.add_argument("--batches", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--dim", type=int, default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=(None, "reference", "jnp", "pallas", "sharded"))
+    ap.add_argument("--vary-batch", action="store_true",
+                    help="randomize batch sizes to exercise shape bucketing")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    fitted = load_artifact(args.artifact)
+    server = SissoServer(fitted, dim=args.dim, backend=args.backend)
+    mdl = server.model
+    print(f"[serve_sisso] artifact: {len(fitted.names)} features, "
+          f"{fitted.n_tasks} task(s), lib {fitted.library_version}")
+    print(f"[serve_sisso] model dim={mdl.dim}: {' ; '.join(mdl.exprs)}")
+
+    rng = np.random.default_rng(args.seed)
+    p = fitted.n_features_in
+
+    def make_batch(b):
+        x = rng.uniform(0.5, 5.0, size=(b, p))
+        tasks = (rng.choice(fitted.task_labels, size=b)
+                 if fitted.n_tasks > 1 else None)
+        return x, tasks
+
+    # cold request: includes program-compile time for this batch shape
+    x, tasks = make_batch(args.batch_size)
+    t0 = time.perf_counter()
+    server.predict(x, tasks)
+    cold = time.perf_counter() - t0
+
+    lat = []
+    total = 0
+    t_warm = time.perf_counter()
+    for _ in range(args.batches):
+        b = (int(rng.integers(1, args.batch_size + 1)) if args.vary_batch
+             else args.batch_size)
+        x, tasks = make_batch(b)
+        t0 = time.perf_counter()
+        server.predict(x, tasks)
+        lat.append(time.perf_counter() - t0)
+        total += b
+    wall = time.perf_counter() - t_warm
+
+    lat = np.asarray(lat)
+    print(f"[serve_sisso] cold first batch: {cold * 1e3:.2f} ms")
+    print(f"[serve_sisso] {args.batches} warm batches, {total} samples: "
+          f"p50={np.median(lat) * 1e3:.3f} ms  p99={np.quantile(lat, 0.99) * 1e3:.3f} ms  "
+          f"{total / max(wall, 1e-9):.0f} samples/s")
+    print(f"[serve_sisso] stats: {server.stats}")
+
+
+if __name__ == "__main__":
+    main()

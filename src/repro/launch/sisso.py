@@ -2,16 +2,27 @@
 
     PYTHONPATH=src python -m repro.launch.sisso --case thermal [--full] \
         [--backend reference|jnp|pallas|sharded] [--l0-method gram|qr] \
-        [--journal /tmp/l0.json]
+        [--journal /tmp/l0.json] [--save /tmp/model.json]
+
+Fits through the canonical :mod:`repro.api` estimator, so the reported r²
+comes from the *compiled descriptor* ``predict`` path (the one serving
+uses), and ``--save`` writes a versioned artifact that
+``repro.launch.serve_sisso`` can load on another machine.
+
+The work journal is owned by the solver (cleared after each dimension's
+sweep completes); this launcher only creates it.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import warnings
 
+import numpy as np
+
+from ..api import SissoRegressor
 from ..configs.sisso_kaggle import kaggle_bandgap_case
 from ..configs.sisso_thermal import thermal_conductivity_case
-from ..core import SissoRegressor
 from ..runtime import WorkJournal
 
 
@@ -21,7 +32,7 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--backend", default=None,
                     choices=("reference", "jnp", "pallas", "sharded"),
-                    help="execution engine for all three hot phases")
+                    help="execution engine for all phases incl. predict")
     ap.add_argument("--l0-method", "--engine", dest="l0_method",
                     default="gram", choices=("gram", "qr"),
                     help="l0 math: Gram closed form or paper-faithful QR "
@@ -30,28 +41,35 @@ def main():
                     help="deprecated alias for --backend pallas")
     ap.add_argument("--journal", default=None,
                     help="work-journal path (restartable ℓ0 sweeps)")
+    ap.add_argument("--save", default=None,
+                    help="write the fitted model artifact (JSON) here")
     args = ap.parse_args()
 
     case = (thermal_conductivity_case if args.case == "thermal"
             else kaggle_bandgap_case)(reduced=not args.full)
 
     cfg = case.config
-    backend = args.backend or ("pallas" if args.kernels else cfg.backend)
+    backend = args.backend or cfg.backend
+    if args.kernels:
+        warnings.warn("--kernels is deprecated; use --backend pallas",
+                      DeprecationWarning, stacklevel=2)
+        backend = args.backend or "pallas"
     cfg = dataclasses.replace(cfg, l0_method=args.l0_method, backend=backend)
 
     journal = WorkJournal(args.journal) if args.journal else None
-    fit = SissoRegressor(cfg).fit(
-        case.x, case.y, case.names, units=case.units,
-        task_ids=case.task_ids, journal=journal)
-    best = fit.best()
-    rows = [f.row for f in best.features]
-    fv = fit.fspace.values_matrix()[rows]
+    est = SissoRegressor.from_config(cfg)
+    est.fit(case.x.T, case.y, names=case.names, units=case.units,
+            tasks=case.task_ids, journal=journal)
+    best = est.model()
     print(best)
-    print(f"[sisso] {case.name}: backend={backend} "
-          f"r2={best.r2(case.y, fv):.6f} rmse={best.rmse(case.y, fv):.4g}")
-    print(f"[sisso] phases: {fit.timings}")
-    if journal is not None:
-        journal.clear()
+    pred = est.predict(case.x.T, tasks=case.task_ids)
+    r2 = est.score(case.x.T, case.y, tasks=case.task_ids)
+    rmse = float(np.sqrt(np.mean((case.y - pred) ** 2)))
+    print(f"[sisso] {case.name}: backend={backend} r2={r2:.6f} "
+          f"rmse={rmse:.4g} dim={best.dim}")
+    print(f"[sisso] phases: {est.fitted_.timings}")
+    if args.save:
+        print(f"[sisso] artifact -> {est.save(args.save)}")
 
 
 if __name__ == "__main__":

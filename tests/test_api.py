@@ -1,0 +1,305 @@
+"""The repro.api surface: sklearn conventions, compiled prediction,
+artifact persistence, serving, and the deprecation satellites.
+
+Covers the acceptance contract of the api layer: a model fit on the
+reduced thermal case predicts on held-out rows with *identical* outputs
+before and after a save/load round trip, on both the reference and jnp
+backends.
+"""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ARTIFACT_FORMAT, ARTIFACT_VERSION, FittedSisso, NotFittedError,
+    SissoRegressor, SissoServer, load_artifact,
+)
+from repro.configs.sisso_thermal import thermal_conductivity_case
+from repro.core import SissoConfig, SissoFit
+from repro.core import SissoRegressor as CoreSissoRegressor
+
+QUICK_OPS = ("add", "sub", "mul", "div", "sq", "sqrt", "inv")
+
+
+def _planted(rng, s=120, p=5):
+    X = rng.uniform(0.5, 3.0, size=(s, p))
+    y = 2.5 * X[:, 0] * X[:, 1] - 1.3 * X[:, 2] ** 2 + 0.7
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def quick_fit():
+    rng = np.random.default_rng(3)
+    X, y = _planted(rng)
+    est = SissoRegressor(max_rung=1, n_dim=2, n_sis=20, op_names=QUICK_OPS)
+    est.fit(X[:100], y[:100], names=["r", "q", "m", "chi", "ea"])
+    return est, X, y
+
+
+# ---------------------------------------------------------------------------
+# sklearn estimator conventions
+# ---------------------------------------------------------------------------
+
+def test_get_set_params_roundtrip():
+    est = SissoRegressor(n_dim=3, n_sis=12, backend="reference")
+    params = est.get_params()
+    assert params["n_dim"] == 3 and params["backend"] == "reference"
+    est.set_params(n_dim=1, l0_method="qr")
+    assert est.n_dim == 1 and est.l0_method == "qr"
+    with pytest.raises(ValueError, match="invalid parameter"):
+        est.set_params(bogus=1)
+
+
+def test_params_cover_config_fields():
+    """Estimator params mirror SissoConfig one-to-one (aliases excluded)."""
+    cfg_fields = {f.name for f in dataclasses.fields(SissoConfig)}
+    cfg_fields -= {"l0_engine", "use_kernels"}   # deprecated aliases
+    assert set(SissoRegressor._get_param_names()) == cfg_fields
+
+
+def test_sklearn_clone_compatibility():
+    sklearn_base = pytest.importorskip("sklearn.base")
+    est = SissoRegressor(n_dim=1, n_sis=7, seed=42)
+    c = sklearn_base.clone(est)
+    assert c is not est and c.get_params() == est.get_params()
+    assert sklearn_base.is_regressor(est)
+
+
+def test_not_fitted_errors():
+    est = SissoRegressor()
+    with pytest.raises(NotFittedError):
+        est.predict(np.zeros((2, 3)))
+    with pytest.raises(NotFittedError):
+        est.transform(np.zeros((2, 3)))
+
+
+def test_fit_input_validation(rng):
+    est = SissoRegressor(max_rung=1, n_dim=1, n_sis=5, op_names=QUICK_OPS)
+    with pytest.raises(ValueError, match="n_samples, n_features"):
+        est.fit(np.zeros(10), np.zeros(10))
+    with pytest.raises(ValueError, match="one entry per X column"):
+        est.fit(np.zeros((10, 3)), np.zeros(10), names=["a"])
+
+
+# ---------------------------------------------------------------------------
+# fit / predict / transform on unseen samples
+# ---------------------------------------------------------------------------
+
+def test_holdout_prediction_recovers_law(quick_fit):
+    est, X, y = quick_fit
+    assert est.n_features_in_ == 5
+    pred = est.predict(X[100:])
+    assert pred.shape == (20,)
+    assert est.score(X[100:], y[100:]) > 0.999999
+
+
+def test_transform_is_descriptor_values(quick_fit):
+    est, X, y = quick_fit
+    d = est.transform(X[100:])
+    assert d.shape == (20, est.model().dim)
+    # predict == linear read-out over transform (single task)
+    mdl = est.model()
+    manual = d @ mdl.coefs[0] + mdl.intercepts[0]
+    np.testing.assert_allclose(manual, est.predict(X[100:]), rtol=1e-12)
+
+
+def test_models_by_dim_access(quick_fit):
+    est, _, _ = quick_fit
+    assert set(est.models_by_dim) == {1, 2}
+    assert est.model(1).dim == 1 and est.model(2).dim == 2
+    assert est.model().dim == 2   # default: highest dimension
+
+
+def test_predict_backend_override_is_exact(quick_fit):
+    est, X, _ = quick_fit
+    a = est.predict(X[100:], backend="jnp")
+    b = est.predict(X[100:], backend="reference")
+    assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: thermal reduced, held-out rows, save/load, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "jnp"])
+def test_thermal_holdout_save_load_parity(tmp_path, backend):
+    case = thermal_conductivity_case(reduced=True)
+    X = case.x.T
+    test = np.arange(len(case.y)) % 5 == 0
+    cfg = dataclasses.replace(case.config, backend=backend)
+    est = SissoRegressor.from_config(cfg)
+    est.fit(X[~test], case.y[~test], names=case.names, units=case.units,
+            tasks=case.task_ids[~test])
+
+    before = est.predict(X[test], tasks=case.task_ids[test])
+    assert est.score(X[test], case.y[test], tasks=case.task_ids[test]) > 0.99
+
+    path = est.save(str(tmp_path / "thermal.json"))
+    after = load_artifact(path).predict(X[test], tasks=case.task_ids[test])
+    assert np.array_equal(before, after)
+
+
+def test_artifact_roundtrip_preserves_everything(quick_fit, tmp_path):
+    est, X, _ = quick_fit
+    path = est.save(str(tmp_path / "m.json"))
+    re = load_artifact(path)
+    assert re.names == list(est.feature_names_in_)
+    assert re.config == est.fitted_.config
+    assert set(re.models_by_dim) == set(est.models_by_dim)
+    for dim in re.models_by_dim:
+        a, b = re.model(dim), est.model(dim)
+        assert a.program == b.program and a.exprs == b.exprs
+        np.testing.assert_array_equal(a.coefs, b.coefs)
+        np.testing.assert_array_equal(a.intercepts, b.intercepts)
+
+
+def test_artifact_is_versioned_json(quick_fit, tmp_path):
+    est, _, _ = quick_fit
+    path = est.save(str(tmp_path / "m.json"))
+    doc = json.load(open(path))
+    assert doc["format"] == ARTIFACT_FORMAT
+    assert doc["version"] == ARTIFACT_VERSION
+    assert doc["library_version"]
+    doc["version"] = 999
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="unsupported artifact version"):
+        load_artifact(str(bad))
+    doc["format"] = "something-else"
+    bad.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="not a"):
+        load_artifact(str(bad))
+
+
+def test_artifact_serves_identically_in_fresh_process(quick_fit, tmp_path):
+    """Serving applies the artifact's precision policy itself: a process
+    that never built a solver (so never enabled x64) must still produce
+    bit-identical fp64 predictions (-W error turns the silent float32
+    truncation warning into a failure)."""
+    import os
+    import subprocess
+    import sys
+
+    import repro
+
+    est, X, _ = quick_fit
+    path = est.save(str(tmp_path / "m.json"))
+    np.save(tmp_path / "X.npy", X[100:])
+    np.save(tmp_path / "want.npy", est.predict(X[100:]))
+    env = dict(os.environ)
+    src = os.path.dirname(os.path.dirname(repro.__file__))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = (
+        "import numpy as np\n"
+        "from repro.api import load_artifact\n"
+        f"X = np.load({str(tmp_path / 'X.npy')!r})\n"
+        f"want = np.load({str(tmp_path / 'want.npy')!r})\n"
+        f"got = load_artifact({path!r}).predict(X)\n"
+        "assert np.array_equal(got, want), 'cross-process predictions drifted'\n"
+    )
+    subprocess.run(
+        [sys.executable, "-W", "error::UserWarning", "-c", code],
+        check=True, env=env,
+    )
+
+
+def test_from_artifact_reconstructs_estimator(quick_fit, tmp_path):
+    est, X, y = quick_fit
+    path = est.save(str(tmp_path / "m.json"))
+    re = SissoRegressor.from_artifact(path)
+    assert np.array_equal(re.predict(X[100:]), est.predict(X[100:]))
+    assert tuple(re.get_params()["op_names"]) == QUICK_OPS
+
+
+# ---------------------------------------------------------------------------
+# multi-task prediction semantics
+# ---------------------------------------------------------------------------
+
+def test_multitask_requires_task_labels():
+    case = thermal_conductivity_case(reduced=True)
+    est = SissoRegressor.from_config(case.config)
+    est.fit(case.x.T, case.y, names=case.names, units=case.units,
+            tasks=case.task_ids)
+    with pytest.raises(ValueError, match="pass tasks="):
+        est.predict(case.x.T)
+    with pytest.raises(ValueError, match="unknown task label"):
+        est.predict(case.x.T, tasks=np.full(case.x.shape[1], 7))
+
+
+def test_unsorted_task_labels_are_regrouped(rng):
+    """api accepts interleaved task labels; core sees grouped samples."""
+    s = 80
+    X = rng.uniform(0.5, 3.0, size=(s, 3))
+    tasks = rng.choice(["exp", "calc"], size=s)
+    y = np.where(tasks == "exp", 2.0 * X[:, 0], -3.0 * X[:, 0])
+    est = SissoRegressor(max_rung=1, n_dim=1, n_sis=5, op_names=QUICK_OPS)
+    est.fit(X, y, names=["a", "b", "c"], tasks=tasks)
+    pred = est.predict(X, tasks=tasks)   # original (unsorted) order
+    assert est.fitted_.task_labels == ["calc", "exp"]
+    np.testing.assert_allclose(pred, y, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_server_matches_direct_predict(quick_fit):
+    est, X, _ = quick_fit
+    server = SissoServer(est.fitted_)
+    got = np.concatenate([server.predict(X[100:107]), server.predict(X[107:120])])
+    assert np.array_equal(got, est.predict(X[100:]))
+    # batches of 7 and 13 pad into the 8 and 16 buckets
+    assert server.stats["shapes"] == [8, 16]
+    assert server.stats["requests"] == 2 and server.stats["samples"] == 20
+
+
+def test_server_single_row_and_empty(quick_fit):
+    est, X, _ = quick_fit
+    server = SissoServer(est.fitted_, bucket_batches=False)
+    one = server.predict(X[100])          # 1-D request row
+    assert one.shape == (1,) and np.array_equal(one, est.predict(X[100:101]))
+    assert server.predict(X[:0]).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# satellites: best() errors, deprecations
+# ---------------------------------------------------------------------------
+
+def test_best_empty_dim_raises_runtime_error():
+    fit = SissoFit(models_by_dim={1: [], 2: []}, fspace=None, timings={})
+    with pytest.raises(RuntimeError, match="no dimension produced"):
+        fit.best()
+    with pytest.raises(RuntimeError, match="dimension 2 produced no finite"):
+        fit.best(2)
+    empty = SissoFit(models_by_dim={}, fspace=None, timings={})
+    with pytest.raises(RuntimeError, match="no models"):
+        empty.best()
+
+
+def test_fitted_model_empty_dim_raises():
+    f = FittedSisso(names=["a"], config=SissoConfig(), models_by_dim={1: []},
+                    task_labels=[0])
+    with pytest.raises(RuntimeError, match="dimension 1 produced no finite"):
+        f.model(1)
+
+
+def test_config_aliases_warn_and_apply():
+    with pytest.warns(DeprecationWarning, match="use_kernels"):
+        cfg = SissoConfig(use_kernels=True)
+    assert cfg.backend == "pallas" and cfg.use_kernels is None
+    with pytest.warns(DeprecationWarning, match="l0_engine"):
+        cfg = SissoConfig(l0_engine="qr")
+    assert cfg.l0_method == "qr" and cfg.l0_engine is None
+    # replace() must not re-warn (aliases were cleared) nor resurrect them
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = dataclasses.replace(cfg, backend="reference")
+    assert cfg2.backend == "reference" and cfg2.l0_method == "qr"
+
+
+def test_core_regressor_shim_warns():
+    with pytest.warns(DeprecationWarning, match="repro.api.SissoRegressor"):
+        CoreSissoRegressor(SissoConfig(max_rung=1, n_dim=1, n_sis=5))

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs.sisso_thermal import thermal_conductivity_case
-from repro.core import SissoRegressor, operators as om
+from repro.core import SissoSolver, compile_features, operators as om
 from repro.core.feature_space import FeatureSpace
 from repro.core.l0 import l0_search
 from repro.core.sis import TaskLayout, build_score_context, sis_screen
@@ -154,13 +154,37 @@ def test_full_fit_parity_thermal(case, backend):
     """End-to-end: identical descriptor and matching SSE on every backend
     (thermal reduced: multi-task + on-the-fly deferred last rung)."""
     import dataclasses
-    fit_ref = SissoRegressor(
+    fit_ref = SissoSolver(
         dataclasses.replace(case.config, backend="reference")
     ).fit(case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
     cfg = dataclasses.replace(case.config, backend=backend)
-    fit = SissoRegressor(cfg).fit(
+    fit = SissoSolver(cfg).fit(
         case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
     for dim in fit_ref.models_by_dim:
         mr, mb = fit_ref.best(dim), fit.best(dim)
         assert {f.expr for f in mr.features} == {f.expr for f in mb.features}
         assert mb.sse == pytest.approx(mr.sse, rel=1e-6)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_predict_on_train_matches_matrix_gather(case, backend):
+    """The compiled-descriptor ``predict`` phase (api layer): replaying a
+    selected feature's lineage tape through ``Engine.eval_program`` must
+    reproduce the training ``values_matrix()`` gather *bit-for-bit* on
+    every backend — the contract that makes out-of-sample prediction and
+    artifact serving trustworthy."""
+    import dataclasses
+    cfg = dataclasses.replace(case.config, backend=backend)
+    solver = SissoSolver(cfg)
+    fit = solver.fit(
+        case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
+    xmat = fit.fspace.values_matrix()
+    for dim, models in fit.models_by_dim.items():
+        mdl = models[0]
+        program = compile_features(mdl.features, fit.fspace)
+        got = solver.engine.eval_program(program, case.x)
+        want = xmat[[f.row for f in mdl.features]]
+        assert np.array_equal(got, want), (
+            f"backend={backend} dim={dim}: compiled descriptor diverged "
+            f"(max |Δ| = {np.abs(got - want).max():g})"
+        )

@@ -1,7 +1,7 @@
 import numpy as np
 import pytest
 
-from repro.core import SissoConfig, SissoRegressor
+from repro.core import SissoConfig, SissoSolver
 
 
 def _feature_rows(fit, model):
@@ -16,7 +16,7 @@ def test_recovers_planted_formula(rng, method):
     cfg = SissoConfig(max_rung=1, n_dim=2, n_sis=20, n_residual=5,
                       l0_method=method,
                       op_names=("add", "sub", "mul", "div", "sq", "sqrt", "inv"))
-    fit = SissoRegressor(cfg).fit(x, y, list("abcde"))
+    fit = SissoSolver(cfg).fit(x, y, list("abcde"))
     m = fit.best(2)
     assert {f.expr for f in m.features} == {"(a * b)", "(c)^2"}
     assert m.rmse(y, _feature_rows(fit, m)) < 1e-8
@@ -30,7 +30,7 @@ def test_multitask_recovery(rng):
                  -1.5 * x[0] * x[1] + 3.0 * x[2] - 2.0)
     cfg = SissoConfig(max_rung=1, n_dim=2, n_sis=15, n_residual=5,
                       op_names=("add", "sub", "mul", "div", "sq"))
-    fit = SissoRegressor(cfg).fit(x, y, list("abcd"), task_ids=ids)
+    fit = SissoSolver(cfg).fit(x, y, list("abcd"), task_ids=ids)
     m = fit.best(2)
     assert {f.expr for f in m.features} == {"(a * b)", "c"}
     np.testing.assert_allclose(
@@ -44,8 +44,8 @@ def test_on_the_fly_equals_materialized(rng):
     y = 1.7 * x[0] / x[3] - 0.4 * x[2] + 0.1 * rng.normal(size=64)
     base = dict(max_rung=2, n_dim=2, n_sis=12, n_residual=4,
                 op_names=("add", "mul", "div", "sq"))
-    fit_m = SissoRegressor(SissoConfig(**base)).fit(x, y, list("abcd"))
-    fit_o = SissoRegressor(SissoConfig(on_the_fly_last_rung=True, **base)).fit(
+    fit_m = SissoSolver(SissoConfig(**base)).fit(x, y, list("abcd"))
+    fit_o = SissoSolver(SissoConfig(on_the_fly_last_rung=True, **base)).fit(
         x, y, list("abcd"))
     mm, mo = fit_m.best(2), fit_o.best(2)
     assert {f.expr for f in mm.features} == {f.expr for f in mo.features}
@@ -57,8 +57,8 @@ def test_kernel_path_equals_reference(rng):
     y = 3.0 * x[0] * x[2] + 0.05 * rng.normal(size=96)
     base = dict(max_rung=1, n_dim=2, n_sis=10, n_residual=3,
                 op_names=("add", "mul", "sq"), on_the_fly_last_rung=True)
-    fit_ref = SissoRegressor(SissoConfig(**base)).fit(x, y, list("abcd"))
-    fit_ker = SissoRegressor(SissoConfig(backend="pallas", **base)).fit(
+    fit_ref = SissoSolver(SissoConfig(**base)).fit(x, y, list("abcd"))
+    fit_ker = SissoSolver(SissoConfig(backend="pallas", **base)).fit(
         x, y, list("abcd"))
     mr, mk = fit_ref.best(2), fit_ker.best(2)
     assert {f.expr for f in mr.features} == {f.expr for f in mk.features}
@@ -71,7 +71,7 @@ def test_dimension_progression_improves_fit(rng):
          + 0.05 * rng.normal(size=200))
     cfg = SissoConfig(max_rung=1, n_dim=3, n_sis=15, n_residual=5,
                       op_names=("add", "mul", "sq"))
-    fit = SissoRegressor(cfg).fit(x, y, list("abcdef"))
+    fit = SissoSolver(cfg).fit(x, y, list("abcdef"))
     sses = [fit.best(d).sse for d in (1, 2, 3)]
     assert sses[0] > sses[1] > sses[2]
     assert fit.best(3).rmse(y, _feature_rows(fit, fit.best(3))) < 0.1
@@ -82,6 +82,6 @@ def test_timings_recorded(rng):
     y = x[0] + x[1]
     cfg = SissoConfig(max_rung=1, n_dim=1, n_sis=5, n_residual=2,
                       op_names=("add", "mul"))
-    fit = SissoRegressor(cfg).fit(x, y, list("abc"))
+    fit = SissoSolver(cfg).fit(x, y, list("abc"))
     assert set(fit.timings) == {"fc", "sis", "l0"}
     assert all(v >= 0 for v in fit.timings.values())

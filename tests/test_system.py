@@ -9,14 +9,14 @@ larger sample axis) at laptop scale and assert the full pipeline behaves.
 import numpy as np
 import pytest
 
-from repro.core import SissoConfig, SissoRegressor, n_models
+from repro.core import SissoConfig, SissoSolver, n_models
 from repro.configs.sisso_thermal import thermal_conductivity_case
 from repro.configs.sisso_kaggle import kaggle_bandgap_case
 
 
 def test_thermal_like_multitask_pipeline():
     case = thermal_conductivity_case(reduced=True)
-    fit = SissoRegressor(case.config).fit(
+    fit = SissoSolver(case.config).fit(
         case.x, case.y, case.names, units=case.units, task_ids=case.task_ids)
     best = fit.best()
     assert best.dim == case.config.n_dim
@@ -33,7 +33,7 @@ def test_thermal_like_multitask_pipeline():
 
 def test_kaggle_like_large_sample_pipeline():
     case = kaggle_bandgap_case(reduced=True)
-    fit = SissoRegressor(case.config).fit(case.x, case.y, case.names)
+    fit = SissoSolver(case.config).fit(case.x, case.y, case.names)
     best = fit.best()
     rows = [f.row for f in best.features]
     fv = fit.fspace.values_matrix()[rows]
@@ -53,6 +53,6 @@ def test_equation_rendering_roundtrip(rng):
     y = 2.0 * x[0] + 1.0
     cfg = SissoConfig(max_rung=1, n_dim=1, n_sis=5, n_residual=2,
                       op_names=("add", "mul"))
-    fit = SissoRegressor(cfg).fit(x, y, ["alpha", "beta", "gamma"])
+    fit = SissoSolver(cfg).fit(x, y, ["alpha", "beta", "gamma"])
     eq = fit.best(1).equation()
     assert "alpha" in eq and "+2" in eq.replace(" ", "")
