@@ -1,24 +1,67 @@
 """ℓ0-regularization benchmark (paper Fig. 3 ℓ0 bars + batch-size claim).
 
 Reports models/second for: the paper-faithful batched-QR engine, the
-Gram-cached closed-form engine (TPU adaptation), and the Pallas tile kernel
-(interpret mode on CPU — the structural win is the blocked Gram reuse; see
-EXPERIMENTS.md §Perf for the roofline-level account).
-Sweeps the ℓ0 batch size around the paper's 65 536/131 072 settings.
+Gram-cached closed-form engine (TPU adaptation), the Pallas tile kernel
+(pairs) and the Gram-gather kernel path (widths ≥ 3) — plus, for the
+width-3 sweep, the **enumeration+streaming** comparison: the legacy
+host-``itertools`` + serial-merge loop vs the device-unranked,
+double-buffered ``l0_search`` on the same scoring backend, and per-width
+throughput (tuples/s *including* enumeration time).  Rows are recorded to
+``BENCH_l0.json`` (benchmarks/common.py).
+
+On this CPU container the Pallas rows run in interpret mode — correctness
+exercise, not a speed claim; the structural wins measured here are Gram
+reuse, device enumeration and overlap, which carry to TPU unchanged.
 """
 from __future__ import annotations
+
+import itertools
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.l0 import compute_gram_stats, score_tuples_qr
+from repro.core.l0 import compute_gram_stats, l0_search, n_models, score_tuples_qr
 from repro.core.sis import TaskLayout
+from repro.engine import get_engine
 from repro.kernels import ops as kops
-from .common import emit, time_call
+from repro.kernels.unrank import unrank_block
+from .common import emit, reset_bench_rows, time_call, write_bench_json
+
+
+def _legacy_blocks(m: int, n_dim: int, block: int):
+    """The pre-enumerator host path: chunked itertools.combinations."""
+    buf = []
+    for combo in itertools.combinations(range(m), n_dim):
+        buf.append(combo)
+        if len(buf) == block:
+            yield np.asarray(buf, np.int32)
+            buf = []
+    if buf:
+        yield np.asarray(buf, np.int32)
+
+
+def _legacy_sweep(x, prob, n_dim, block, engine):
+    """The seed ℓ0 loop: host enumeration, serial scoring, merge per block."""
+    best = np.full(10, np.inf)
+    for blk in _legacy_blocks(x.shape[0], n_dim, block):
+        sses = np.asarray(engine.l0_scores(prob, blk))
+        k = min(10, len(sses))
+        part = np.argpartition(sses, k - 1)[:k]
+        cat = np.concatenate([best, sses[part]])
+        best = cat[np.argsort(cat, kind="stable")[:10]]
+    return best
+
+
+def _wall(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def main(samples: int = 400, m: int = 256, quick: bool = False):
+    reset_bench_rows()
     rng = np.random.default_rng(0)
     x = rng.uniform(0.5, 3.0, (m, samples))
     y = 2 * x[3] * x[10] + rng.normal(0, 0.3, samples)
@@ -45,10 +88,75 @@ def main(samples: int = 400, m: int = 256, quick: bool = False):
     t_tile = time_call(
         lambda: kops.l0_search_tiled(x, y, layout, n_keep=10, block=128),
         repeats=1, warmup=0)
-    n_models = m * (m - 1) // 2
+    n_pairs = m * (m - 1) // 2
     emit("l0_tiled_full_sweep", t_tile * 1e6,
-         f"{n_models / t_tile:.0f} models/s incl. exact top-10 "
+         f"{n_pairs / t_tile:.0f} models/s incl. exact top-10 "
          "(Pallas interpret)")
+
+    # ---- width-3: enumeration + streaming vs the legacy host path -------
+    m3 = 96 if quick else 128
+    block = 65536  # paper: ℓ0 batches >= 65536
+    x3 = rng.uniform(0.5, 3.0, (m3, samples))
+    y3 = 2 * x3[3] - x3[10] + rng.normal(0, 0.3, samples)
+    total3 = n_models(m3, 3)
+    n_blocks = -(-total3 // block)
+
+    t_enum_host = _wall(lambda: [b for b in _legacy_blocks(m3, 3, block)])
+    emit("l0_enum_w3_itertools", t_enum_host * 1e6,
+         f"{total3 / t_enum_host:.0f} tuples/s (host Python generator)")
+
+    def enum_device():
+        outs = [
+            unrank_block(i * block, min(block, total3 - i * block), m3, 3)
+            for i in range(n_blocks)
+        ]
+        jax.block_until_ready(outs)
+
+    enum_device()  # compile
+    t_enum_dev = _wall(enum_device)
+    emit("l0_enum_w3_unrank", t_enum_dev * 1e6,
+         f"{total3 / t_enum_dev:.0f} tuples/s (device unranking; "
+         f"{t_enum_host / t_enum_dev:.1f}x vs itertools)")
+
+    eng = get_engine("jnp")
+    # one shared problem for both loops: its per-problem jit cache is the
+    # scoring executable, so warm runs compile once and the timed rows
+    # compare the steady-state loops, not XLA compile time
+    prob3 = eng.prepare_l0(x3, y3, layout)
+    _legacy_sweep(x3, prob3, 3, block, eng)
+    l0_search(x3, y3, layout, n_dim=3, n_keep=10, block=block, engine=eng,
+              prob=prob3)
+    t_legacy = _wall(lambda: _legacy_sweep(x3, prob3, 3, block, eng))
+    emit("l0_sweep_w3_legacy", t_legacy * 1e6,
+         f"{total3 / t_legacy:.0f} tuples/s incl. enumeration "
+         "(itertools + serial merge, jnp scoring)")
+    t_stream = _wall(lambda: l0_search(
+        x3, y3, layout, n_dim=3, n_keep=10, block=block, engine=eng,
+        prob=prob3))
+    emit("l0_sweep_w3_streamed", t_stream * 1e6,
+         f"{total3 / t_stream:.0f} tuples/s incl. enumeration "
+         f"(unrank + double-buffer + merge-skip; "
+         f"{t_legacy / t_stream:.2f}x vs legacy)")
+
+    # width 3/4 on the Pallas Gram-gather backend (interpret on CPU: slow
+    # by construction — the row tracks correctness-path throughput only)
+    mp = 32 if quick else 48
+    xp = rng.uniform(0.5, 3.0, (mp, samples))
+    yp = 2 * xp[3] - xp[10] + rng.normal(0, 0.3, samples)
+    eng_p = get_engine("pallas")
+    prob_p = eng_p.prepare_l0(xp, yp, layout)
+    for width in (3, 4):
+        totw = n_models(mp, width)
+        l0_search(xp, yp, layout, n_dim=width, n_keep=10, block=8192,
+                  engine=eng_p, prob=prob_p)  # warm the kernel compile
+        tw = _wall(lambda: l0_search(
+            xp, yp, layout, n_dim=width, n_keep=10, block=8192,
+            engine=eng_p, prob=prob_p))
+        emit(f"l0_sweep_w{width}_pallas_gather", tw * 1e6,
+             f"{totw / tw:.0f} tuples/s incl. enumeration "
+             f"({totw} tuples, Gram-gather kernel, interpret)")
+
+    write_bench_json("l0")
 
 
 if __name__ == "__main__":

@@ -10,10 +10,11 @@ psum over samples + one k-sized gather per phase).
 from __future__ import annotations
 
 from repro.core.l0 import n_models
-from .common import emit
+from .common import emit, reset_bench_rows, write_bench_json
 
 
 def main():
+    reset_bench_rows()
     n_candidates = 465_242_552      # paper kaggle FC count
     n_l0 = 1_249_975_000            # paper kaggle l0 models
     k = 50_000                      # SIS subspace
@@ -27,6 +28,7 @@ def main():
         emit(f"scaling_{nodes}nodes", 0.0,
              f"SIS {sis_local:.3g} cands/dev; L0 {l0_local:.3g} models/dev; "
              f"merge payload {merge}; serial fraction {serial_frac:.2e}")
+    write_bench_json("scaling")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,8 @@ from .feature_space import FeatureSpace, Feature, CandidateBlock
 from .model import SissoModel
 from .sis import TaskLayout, sis_screen, build_score_context, score_block
 from .l0 import (
-    GramStats, compute_gram_stats, score_tuples_gram, score_tuples_qr,
-    l0_search, n_models, tuple_blocks,
+    GramStats, TupleEnumerator, compute_gram_stats, score_tuples_gram,
+    score_tuples_qr, l0_search, n_models, tuple_blocks,
 )
 from .descriptor import DescriptorProgram, Instruction, compile_features
 from .solver import SissoConfig, SissoSolver, SissoRegressor, SissoFit
@@ -14,7 +14,8 @@ __all__ = [
     "FeatureSpace", "Feature", "CandidateBlock", "SissoModel", "TaskLayout",
     "sis_screen", "build_score_context", "score_block", "GramStats",
     "compute_gram_stats", "score_tuples_gram", "score_tuples_qr", "l0_search",
-    "n_models", "tuple_blocks", "DescriptorProgram", "Instruction",
+    "n_models", "tuple_blocks", "TupleEnumerator", "DescriptorProgram",
+    "Instruction",
     "compile_features", "SissoConfig", "SissoSolver", "SissoRegressor",
     "SissoFit", "Unit",
 ]

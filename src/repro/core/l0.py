@@ -25,8 +25,9 @@ coefficient matrices for each task").
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Iterator, List, Optional, Sequence, Tuple
+import hashlib
+import warnings
+from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -164,7 +165,10 @@ def score_tuples_qr(
             q, r = jnp.linalg.qr(a)
             c = jax.scipy.linalg.solve_triangular(r, q.T @ yt, lower=False)
             resid = yt - a @ c
-            return resid @ resid
+            sse = resid @ resid
+            # rank-deficient tuples (zero/collinear features) yield NaN from
+            # the triangular solve; rank them last, like the gram engine
+            return jnp.where(jnp.isfinite(sse), jnp.maximum(sse, 0.0), jnp.inf)
 
         return jax.vmap(per_tuple)(tuples)
 
@@ -186,32 +190,86 @@ def n_models(m: int, n_dim: int) -> int:
     return out
 
 
+class TupleEnumerator:
+    """Rank-addressable blocked view of the C(m, n) lexicographic tuple space.
+
+    A block is identified by its index alone — block ``bi`` covers ranks
+    ``[bi·block, bi·block + count(bi))`` — which is exactly the contract
+    the fault-tolerance work journal records (runtime/journal.py) and what
+    lets resume skip finished blocks without enumerating them.
+
+    Widths 1–2 slice host index arrays (cheap, O(m²) at most); widths ≥ 3
+    materialize blocks **on device** via the combinatorial-unranking kernel
+    (kernels/unrank.py) — the former host-side ``itertools`` generator
+    serialized the dominant phase on single-core Python.  Spaces too large
+    for exact device integer arithmetic fall back to host-exact unranking
+    of the block start plus C-speed sequential stepping.
+    """
+
+    def __init__(self, m: int, n_dim: int, block: int):
+        self.m = int(m)
+        self.n_dim = int(n_dim)
+        self.block = int(block)
+        self.total = n_models(self.m, self.n_dim)
+        self.n_blocks = -(-self.total // self.block) if self.total else 0
+        # width-2 host index cache, built eagerly: block_tuples is called
+        # from prefetch worker threads and must stay race-free
+        self._pairs: Optional[np.ndarray] = None
+        if self.n_dim == 2:
+            iu = np.triu_indices(self.m, k=1)
+            self._pairs = np.stack(iu, axis=1).astype(np.int32)
+
+    def count(self, bi: int) -> int:
+        """Tuples in block ``bi`` (== block except for the tail block)."""
+        return max(0, min(self.block, self.total - bi * self.block))
+
+    def block_tuples(self, bi: int):
+        """The (count(bi), n_dim) int32 tuple block; device-backed for n ≥ 3."""
+        lo = bi * self.block
+        cnt = self.count(bi)
+        if self.n_dim == 1:
+            return np.arange(lo, lo + cnt, dtype=np.int32)[:, None]
+        if self.n_dim == 2:
+            return self._pairs[lo : lo + cnt]
+        from ..kernels import unrank  # deferred: kernels package imports core
+
+        if unrank.device_unrank_ok(self.m, self.n_dim):
+            return unrank.unrank_block(lo, cnt, self.m, self.n_dim)
+        return self._host_block(lo, cnt)
+
+    def _host_block(self, lo: int, cnt: int) -> np.ndarray:
+        """Host-exact fallback: unrank the block start, then step."""
+        from ..kernels.unrank import unrank_lex_host
+
+        m, n = self.m, self.n_dim
+        a = unrank_lex_host(lo, m, n)
+        out = np.empty((cnt, n), np.int32)
+        for r in range(cnt):
+            out[r] = a
+            i = n - 1
+            while i >= 0 and a[i] == m - n + i:
+                i -= 1
+            if i < 0:
+                break
+            a[i] += 1
+            for j in range(i + 1, n):
+                a[j] = a[j - 1] + 1
+        return out
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        for bi in range(self.n_blocks):
+            yield np.asarray(self.block_tuples(bi))
+
+
 def tuple_blocks(m: int, n_dim: int, block: int) -> Iterator[np.ndarray]:
     """Yield (≤block, n_dim) int32 arrays covering all C(m, n_dim) tuples.
 
-    Deterministic order => a block index fully identifies its tuples, which is
-    what the fault-tolerance work journal records (runtime/journal.py).
+    Deterministic lexicographic order (``itertools.combinations`` order —
+    asserted against it in the tests) => a block index fully identifies its
+    tuples.  Kept as the stable generator API; :class:`TupleEnumerator`
+    is the rank-addressable form the streaming ℓ0 loop uses.
     """
-    if n_dim == 1:
-        idx = np.arange(m, dtype=np.int32)[:, None]
-        for lo in range(0, m, block):
-            yield idx[lo : lo + block]
-        return
-    if n_dim == 2:
-        iu = np.triu_indices(m, k=1)
-        pairs = np.stack(iu, axis=1).astype(np.int32)
-        for lo in range(0, len(pairs), block):
-            yield pairs[lo : lo + block]
-        return
-    # generic n: chunked combinations (host generator; n>=3 paths)
-    buf: List[Tuple[int, ...]] = []
-    for combo in itertools.combinations(range(m), n_dim):
-        buf.append(combo)
-        if len(buf) == block:
-            yield np.asarray(buf, np.int32)
-            buf = []
-    if buf:
-        yield np.asarray(buf, np.int32)
+    return iter(TupleEnumerator(m, n_dim, block))
 
 
 @dataclasses.dataclass
@@ -232,50 +290,126 @@ def l0_search(
     engine=None,
     journal=None,
     dtype=jnp.float64,
+    prefetch_depth: int = 2,
+    prob=None,
 ) -> L0Result:
-    """Exhaustive n_dim-tuple search over the SIS subspace.
+    """Exhaustive n_dim-tuple search over the SIS subspace, double-buffered.
 
     ``method``: 'gram' (TPU-native closed form) or 'qr' (paper-faithful
     baseline).  ``engine`` is the execution engine (engine/) that scores
-    each tuple block — this loop only owns enumeration, the running top-k
-    merge, and journaling, so there is no per-backend branching here.
+    each tuple block — this loop only owns enumeration policy, the running
+    top-k merge, and journaling, so there is no per-backend branching here.
     ``journal``: optional runtime.journal.WorkJournal for restartable sweeps.
+    ``prob``: optionally a pre-built ``engine.prepare_l0(...)`` problem —
+    repeated sweeps over the same operands (benchmarks, residual re-ranks)
+    then reuse its Gram statistics and per-problem jit caches.
+
+    Blocks are rank ranges of the lexicographic tuple space
+    (:class:`TupleEnumerator`); enumeration + device dispatch of block
+    *k+1* overlap block *k*'s scoring via ``prefetch_depth``-deep streaming
+    (engine/streaming.py), and the host merge runs off the critical path —
+    skipped outright when a block's best SSE cannot enter the current
+    top-k.
     """
     if isinstance(engine, str) and engine in ("gram", "qr"):
         # legacy alias: ``engine`` used to name the math method
+        warnings.warn(
+            f"l0_search(engine={engine!r}) is deprecated; pass "
+            f"method={engine!r} (engine= now takes an execution engine)",
+            DeprecationWarning, stacklevel=2,
+        )
         method, engine = engine, None
     from ..engine import get_engine
+    from ..engine.streaming import BlockPrefetcher
 
     engine = get_engine(engine)
+    n_dim, n_keep, block = int(n_dim), int(n_keep), int(block)
     m = int(np.asarray(x).shape[0])
-    prob = engine.prepare_l0(x, y, layout, method=method, dtype=dtype)
+    if not engine.backend.l0_ranking_exact(method, n_dim, n_keep,
+                                           layout.n_tasks, m):
+        warnings.warn(
+            f"n_keep={n_keep} exceeds the backend's exact-rescore window "
+            f"(rescore_k={getattr(engine.backend, 'rescore_k', None)}); "
+            f"top-k entries beyond it rank on fp32 pre-pass SSEs — raise "
+            f"rescore_k on the backend",
+            RuntimeWarning, stacklevel=2,
+        )
+    if prob is None:
+        prob = engine.prepare_l0(x, y, layout, method=method, dtype=dtype)
+    elif (
+        prob.method != method
+        or prob.backend != engine.name
+        or prob.dtype != dtype
+        or prob.layout != layout
+        or prob.x.shape != np.shape(x)
+        or not np.array_equal(prob.x, np.asarray(x, np.float64))
+        or not np.array_equal(prob.y, np.asarray(y, np.float64))
+    ):
+        raise ValueError(
+            f"pre-built prob (method={prob.method!r}, "
+            f"backend={prob.backend!r}, m={prob.m}) was prepared from "
+            f"different operands than this sweep (method={method!r}, "
+            f"backend={engine.name!r}); prepare it with the same engine "
+            f"and x/y/layout or omit prob="
+        )
+    enum = TupleEnumerator(m, n_dim, block)
 
     best_sse = np.full((n_keep,), np.inf)
     best_tuples = np.zeros((n_keep, n_dim), np.int64)
     n_eval = 0
 
     start_block = 0
+    sweep = None
+    if journal is not None:
+        # sweep signature: geometry + a digest of the operands, so a
+        # journal can only ever resume the sweep that wrote it —
+        # same-shaped sweeps over different data (or a stale file surviving
+        # a crash between completion and clear()) restart cleanly instead
+        # of poisoning results.  Journal-less sweeps skip the hash.
+        digest = hashlib.sha1()
+        digest.update(prob.x.tobytes())
+        digest.update(prob.y.tobytes())
+        digest.update(repr(layout.slices).encode())
+        sweep = {"m": m, "n_dim": n_dim, "block": block, "n_keep": n_keep,
+                 "method": method, "dtype": np.dtype(dtype).name,
+                 "data": digest.hexdigest()[:16]}
     if journal is not None and journal.has_state():
         j_sse, j_tuples, j_block = journal.restore()
         # only resume state from the *same* sweep: a journal left by a
-        # different tuple width or top-k size must not poison this search
-        if j_tuples.shape == (n_keep, n_dim):
+        # different tuple width, block size, top-k or dataset must not
+        # poison this search.  Files without a sweep signature
+        # (pre-signature format) fail closed — a clean restart only
+        # re-does one sweep's work, while resuming someone else's rank
+        # ranges silently drops tuples.
+        if j_tuples.shape == (n_keep, n_dim) and journal.meta == sweep:
             best_sse, best_tuples, start_block = j_sse, j_tuples, j_block
+    # finished blocks: counted in closed form, not re-enumerated
+    n_eval += min(start_block * block, enum.total)
 
-    for bi, tuples in enumerate(tuple_blocks(m, n_dim, block)):
-        if bi < start_block:
-            n_eval += len(tuples)
-            continue
-        sses = np.asarray(engine.l0_scores(prob, tuples))
-        n_eval += len(tuples)
-        # merge block top-k into running top-k (host)
-        k = min(n_keep, len(sses))
-        part = np.argpartition(sses, k - 1)[:k]
-        cat_sse = np.concatenate([best_sse, sses[part]])
-        cat_tup = np.concatenate([best_tuples, tuples[part].astype(np.int64)])
-        order = np.argsort(cat_sse, kind="stable")[:n_keep]
-        best_sse, best_tuples = cat_sse[order], cat_tup[order]
+    def score_block(bi: int):
+        tuples = enum.block_tuples(bi)
+        return tuples, np.asarray(engine.l0_scores(prob, tuples))
+
+    stream = BlockPrefetcher(
+        score_block, range(start_block, enum.n_blocks), depth=prefetch_depth
+    )
+    for bi, (tuples, sses) in stream:
+        n_eval += len(sses)
+        # merge block top-k into running top-k (host).  A block whose best
+        # SSE cannot beat the current k-th best contributes nothing — skip
+        # the concatenate+argsort (ties lose to incumbents either way).
+        # Negated comparison so a NaN block-min (a backend without the
+        # finite→inf guard) falls through to the merge, never to a skip.
+        if len(sses) and not (sses.min() >= best_sse[-1]):
+            k = min(n_keep, len(sses))
+            part = np.argpartition(sses, k - 1)[:k]
+            cat_sse = np.concatenate([best_sse, sses[part]])
+            cat_tup = np.concatenate(
+                [best_tuples, np.asarray(tuples)[part].astype(np.int64)]
+            )
+            order = np.argsort(cat_sse, kind="stable")[:n_keep]
+            best_sse, best_tuples = cat_sse[order], cat_tup[order]
         if journal is not None:
-            journal.record(bi + 1, best_sse, best_tuples)
+            journal.record(bi + 1, best_sse, best_tuples, meta=sweep)
 
     return L0Result(tuples=best_tuples, sses=best_sse, n_evaluated=n_eval)

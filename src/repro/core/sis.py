@@ -206,12 +206,21 @@ def sis_screen(
                     s[i] = -np.inf
             top.push(s, tags)
 
-    # 2) deferred last-rung candidates: generate -> score -> discard
-    for blk in fspace.iter_candidate_batches(batch):
-        s = engine.sis_scores_deferred(
+    # 2) deferred last-rung candidates: generate -> score -> discard.
+    #    Double-buffered (engine/streaming.py): block k+1's child-row
+    #    gather and device dispatch overlap block k's scoring, and the
+    #    host top-k push runs off the critical path.
+    from ..engine.streaming import BlockPrefetcher
+
+    def score_deferred(blk: CandidateBlock):
+        return engine.sis_scores_deferred(
             blk.op_id, x[blk.child_a], x[blk.child_b], ctx,
             fspace.l_bound, fspace.u_bound,
         )
+
+    for blk, s in BlockPrefetcher(
+        score_deferred, fspace.iter_candidate_batches(batch)
+    ):
         tags = [
             ("cand", blk.op_id, int(a), int(b))
             for a, b in zip(blk.child_a, blk.child_b)

@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Union
 
 from .base import Backend, Engine, L0Problem
+from .streaming import BlockPrefetcher
 from .reference import ReferenceBackend
 from .jnp_backend import JnpBackend
 from .pallas_backend import PallasBackend
@@ -48,7 +49,7 @@ def get_engine(spec: Union[str, Engine, Backend, None] = None, **opts) -> Engine
 
 
 __all__ = [
-    "Backend", "Engine", "L0Problem", "BACKENDS", "DEFAULT_BACKEND",
-    "get_engine", "ReferenceBackend", "JnpBackend", "PallasBackend",
-    "ShardedBackend",
+    "Backend", "Engine", "L0Problem", "BACKENDS", "BlockPrefetcher",
+    "DEFAULT_BACKEND", "get_engine", "ReferenceBackend", "JnpBackend",
+    "PallasBackend", "ShardedBackend",
 ]

@@ -49,6 +49,7 @@ class L0Problem:
     dtype: Any
     stats: Optional[GramStats] = None
     cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    backend: str = ""        # name of the backend that prepared this problem
 
     @property
     def m(self) -> int:
@@ -63,14 +64,17 @@ class Backend(abc.ABC):
     * ``fused_deferred`` — :meth:`sis_scores_deferred` generates, validates
       and scores candidate values without materializing them (paper P3); if
       False the default eval→score→mask composition is used.
-    * ``l0_pairs_only`` — :meth:`l0_scores` only accelerates 2-tuples; other
-      widths are delegated to the jnp implementation.
+    * ``l0_widths`` — tuple widths :meth:`l0_scores` accelerates with a
+      backend-native kernel; other widths delegate to the generic (jnp)
+      implementation.  ``None`` means the backend's one implementation
+      covers every width (reference, jnp).  Replaces the former boolean
+      ``l0_pairs_only`` flag now that the Pallas path covers widths 2–4.
     * ``bit_exact_oracle`` — results define the parity baseline.
     """
 
     name: str = "abstract"
     fused_deferred: bool = False
-    l0_pairs_only: bool = False
+    l0_widths: Optional[Tuple[int, ...]] = None
     bit_exact_oracle: bool = False
 
     # -- phase 1: candidate evaluation + value rules -------------------
@@ -123,12 +127,24 @@ class Backend(abc.ABC):
     ) -> L0Problem:
         return L0Problem(
             x=np.asarray(x, np.float64), y=np.asarray(y, np.float64),
-            layout=layout, method=method, dtype=dtype,
+            layout=layout, method=method, dtype=dtype, backend=self.name,
         )
 
     @abc.abstractmethod
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
         """Total SSE (B,) of the per-task LSQ fits for (B, n) tuples."""
+
+    def l0_ranking_exact(self, method: str, n_dim: int, n_keep: int,
+                         n_tasks: int, m: int) -> bool:
+        """Would a top-``n_keep`` merged from :meth:`l0_scores` blocks rank
+        on exact fp64 SSEs for this sweep?
+
+        True here (every base implementation is fp64 end-to-end); backends
+        with a two-phase fp32 pre-pass override this with their own
+        dispatch conditions so the warning logic in ``core/l0.py`` has a
+        single owner — the backend that actually makes the choice.
+        """
+        return True
 
     # -- prediction: compiled descriptor programs ----------------------
     def eval_program(self, program, x: np.ndarray) -> np.ndarray:

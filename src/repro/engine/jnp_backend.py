@@ -9,6 +9,7 @@ the compiled executable.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +43,10 @@ class JnpBackend(Backend):
         # compiled descriptor programs -> jit closure (jax.jit then caches
         # one executable per batch shape — the serving compile cache)
         self._programs = {}
+        # guards per-problem cache fills: l0_scores runs on prefetch worker
+        # threads (engine/streaming.py), and an unguarded check-then-build
+        # would trace+compile the scoring closure once per worker
+        self._l0_cache_lock = threading.Lock()
 
     def eval_program(self, program, x):
         fn = self._programs.get(program)
@@ -78,19 +83,20 @@ class JnpBackend(Backend):
         return prob
 
     def _score_fn(self, prob: L0Problem):
-        fn = prob.cache.get("jnp_l0")
-        if fn is None:
-            if prob.method == "gram":
-                fn = jax.jit(lambda tt: score_tuples_gram(prob.stats, tt))
-            else:
-                xs = jnp.asarray(prob.x, prob.dtype)
-                ys = jnp.asarray(prob.y, prob.dtype)
-                fn = jax.jit(
-                    lambda tt: score_tuples_qr(
-                        xs, ys, prob.layout, tt, prob.dtype
+        with self._l0_cache_lock:
+            fn = prob.cache.get("jnp_l0")
+            if fn is None:
+                if prob.method == "gram":
+                    fn = jax.jit(lambda tt: score_tuples_gram(prob.stats, tt))
+                else:
+                    xs = jnp.asarray(prob.x, prob.dtype)
+                    ys = jnp.asarray(prob.y, prob.dtype)
+                    fn = jax.jit(
+                        lambda tt: score_tuples_qr(
+                            xs, ys, prob.layout, tt, prob.dtype
+                        )
                     )
-                )
-            prob.cache["jnp_l0"] = fn
+                prob.cache["jnp_l0"] = fn
         return fn
 
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:

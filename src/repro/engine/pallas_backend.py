@@ -1,13 +1,19 @@
-"""Pallas backend: jnp everywhere + Pallas kernels on the two hot paths.
+"""Pallas backend: jnp everywhere + Pallas kernels on the hot paths.
 
 * deferred SIS — ``kernels/fused_sis.py``: candidates are generated,
   validated and scored in VMEM, never materialized to HBM (paper P3,
   deepened).  The wrapper in ``kernels/ops.py`` owns the fp32 cast and the
   (8k, 128k) padding/layout policy.
 * ℓ0 pairs — ``kernels/ops.py:l0_score_pairs``: closed-form SSE gathered
-  from Gram statistics (the tile kernel's math, XLA-gather form).
+  from Gram statistics (the tile kernel's math, XLA-gather form, fp64).
+* ℓ0 widths 3–4 — ``kernels/l0_gather.py``: blocked Gram-gather kernel
+  over VMEM-resident Gram statistics (one-hot MXU gathers + unrolled
+  closed-form solves), **two-phase**: the fp32 kernel scores every tuple,
+  then the per-block best ``rescore_k`` candidates are re-scored from the
+  fp64 Gram stats so downstream top-k rankings match ``reference``
+  bit-for-bit.
 
-Everything else (materialized SIS blocks, ℓ0 widths ≠ 2, QR method)
+Everything else (materialized SIS blocks, width-1/≥5 tuples, QR method)
 inherits the jnp implementation — the kernels accelerate, the semantics
 stay the canonical ones.  On CPU containers the kernels run with
 ``interpret=True`` (same code path, same numerics); on TPU they lower to
@@ -29,12 +35,16 @@ from .jnp_backend import JnpBackend
 class PallasBackend(JnpBackend):
     name = "pallas"
     fused_deferred = True
-    l0_pairs_only = True
+    l0_widths = (2, 3, 4)
 
-    def __init__(self, interpret: Optional[bool] = None, block_b: int = 256):
+    def __init__(self, interpret: Optional[bool] = None, block_b: int = 256,
+                 rescore_k: int = 512):
         super().__init__()
         self.interpret = interpret  # None -> auto (interpret off-TPU)
         self.block_b = int(block_b)
+        # per-block candidate count re-scored exactly in fp64 (phase 2 of
+        # the gather path); must comfortably exceed any caller's n_keep
+        self.rescore_k = int(rescore_k)
 
     def sis_scores_deferred(self, op_id, a, b, ctx: ScoreContext,
                             l_bound, u_bound):
@@ -47,10 +57,57 @@ class PallasBackend(JnpBackend):
         )
         return np.asarray(scores)
 
+    def l0_ranking_exact(self, method, n_dim, n_keep, n_tasks, m):
+        """Mirrors :meth:`_l0_scores_gather` dispatch: only the width-3/4
+        gram path within the VMEM budget runs the fp32 pre-pass, and its
+        exactness window is ``rescore_k`` per block."""
+        if method != "gram" or n_dim < 3 or n_dim not in self.l0_widths:
+            return True  # exact fp64 paths (pairs, jnp delegation, QR)
+        if kops.gram_pack_nbytes(n_tasks, m) > kops.GRAM_VMEM_BUDGET:
+            return True  # falls back to the exact jnp gram path
+        # require headroom: near n_keep == rescore_k, a non-rescored fp32
+        # SSE can still slip into the final top-k when rescoring raises
+        # borderline fp64 values past it
+        return 2 * n_keep <= self.rescore_k
+
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
-        tuples = np.asarray(tuples)
-        if tuples.shape[1] == 2 and prob.method == "gram":
+        width = int(tuples.shape[1])
+        if len(tuples) == 0 or prob.method != "gram" \
+                or width not in self.l0_widths:
+            return super().l0_scores(prob, tuples)
+        if width == 2:
             return np.asarray(
                 kops.l0_score_pairs(prob.stats, jnp.asarray(tuples, jnp.int32))
             )
-        return super().l0_scores(prob, tuples)
+        return self._l0_scores_gather(prob, tuples)
+
+    def _l0_scores_gather(self, prob: L0Problem, tuples) -> np.ndarray:
+        """Widths 3–4: fp32 Gram-gather kernel + exact fp64 rescore.
+
+        Phase 1 scores the whole block on device; phase 2 re-scores the
+        block's best ``rescore_k`` tuples from the fp64 Gram statistics and
+        splices the exact values in.  A caller merging a top-k with
+        2k ≤ rescore_k (the :meth:`l0_ranking_exact` gate) ranks on exact
+        fp64 SSEs: the fp32 pass only has to keep true winners inside the
+        rescore set, a ~50× margin at the defaults.
+        """
+        need = kops.gram_pack_nbytes(prob.stats.n_tasks, prob.stats.m)
+        if need > kops.GRAM_VMEM_BUDGET:
+            # Gram stats would not fit in VMEM (huge subspace) — use the
+            # generic device path; checked arithmetically so the fp32 pack
+            # is never even allocated.
+            return super().l0_scores(prob, tuples)
+        with self._l0_cache_lock:  # prefetch workers race the first fill
+            pack = prob.cache.get("gram_pack")
+            if pack is None:
+                pack = prob.cache["gram_pack"] = kops.pack_gram_fp32(prob.stats)
+        sse32 = np.asarray(
+            kops.l0_score_tuples(pack, tuples, interpret=self.interpret)
+        )
+        out = sse32.astype(np.float64)
+        r = min(len(out), self.rescore_k)
+        cand = np.argpartition(sse32, r - 1)[:r] if r < len(out) \
+            else np.arange(len(out))
+        exact = super().l0_scores(prob, jnp.asarray(tuples)[cand])
+        out[cand] = exact
+        return out

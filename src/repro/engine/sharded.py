@@ -34,7 +34,7 @@ def default_mesh() -> Mesh:
 
 class ShardedBackend(JnpBackend):
     name = "sharded"
-    l0_pairs_only = True
+    l0_widths = (2,)  # pair solves shard today; widths >= 3 run on the jnp path
 
     def __init__(self, mesh: Optional[Mesh] = None):
         super().__init__()
@@ -59,7 +59,7 @@ class ShardedBackend(JnpBackend):
 
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
         tuples = np.asarray(tuples)
-        if tuples.shape[1] != 2 or prob.method != "gram":
+        if tuples.shape[1] not in self.l0_widths or prob.method != "gram":
             return super().l0_scores(prob, tuples)
         b = len(tuples)
         pairs = np.zeros((self._pad(b), 2), np.int32)

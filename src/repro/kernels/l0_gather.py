@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: blocked Gram-gather ℓ0 scoring for tuple widths ≥ 3.
+
+The pair kernel (l0_tile.py) recomputes Gram *tiles* on the MXU because the
+pair space is the m×m upper triangle — Gram reuse is the whole win.  For
+widths ≥ 3 the tuple space is C(m, n) ≫ m², so the economics flip: the full
+per-task Gram statistics (G = X Xᵀ, s = X·1, b = X·y — a few hundred KB for
+SIS-sized subspaces) fit **resident in VMEM** and each tuple's least-squares
+problem is a *gather* of an (n+1)×(n+1) SPD system from them, O(n³) per
+tuple with zero O(S) work (core/l0.py engine-2 math, blocked).
+
+Per grid step (one tile of ``block_t`` tuples):
+
+    VMEM-resident:   G (T, m_pad, m_pad), s/b (T, m_pad), scalars (T, 8)
+    HBM → VMEM:      tuple tile (n, block_t) int32  — device-enumerated
+                     by kernels/unrank.py, so no host traffic at all
+    compute:         one-hot(idx_p)                 VPU  (iota compare)
+                     G·onehot_p                     MXU  (the gather)
+                     (n+1)×(n+1) solve + SSE        VPU  (unrolled
+                                                    Gaussian elimination,
+                                                    ref.eliminate_spd_sse)
+    VMEM → HBM:      per-tuple SSE (1, block_t) fp32
+
+Gathering by one-hot matmul instead of dynamic indexing keeps the kernel
+Mosaic-lowerable (TPU has no fast arbitrary gather) and turns the hot loop
+into n dense (m_pad × m_pad)·(m_pad × block_t) matmuls per task — MXU work
+proportional to tuples scored, independent of sample count.
+
+Outputs are fp32; the backend runs the existing two-phase exact rescore
+(top candidates re-scored from fp64 Gram stats) so final rankings match
+``reference`` bit-for-bit on the parity suite.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import eliminate_spd_sse, gathered_system
+
+
+def _kernel(
+    tup_ref,    # (n, block_t) int32 tuple tile (transposed: lanes = tuples)
+    gram_ref,   # (T, m_pad, m_pad) fp32
+    fsum_ref,   # (T, m_pad)
+    b_ref,      # (T, m_pad)
+    scal_ref,   # (T, 8): [n_samples, ysum, yty, 0, ...]
+    sse_out,    # (1, block_t)
+    *, n: int, n_tasks: int, m_pad: int, block_t: int,
+):
+    tup = tup_ref[...]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (m_pad, block_t), 0)
+    onehots = [
+        (iota == tup[p : p + 1, :]).astype(jnp.float32) for p in range(n)
+    ]
+    fsum = fsum_ref[...]
+    bvec = b_ref[...]
+    total = jnp.zeros((1, block_t), jnp.float32)
+    for t in range(n_tasks):  # static unroll over tasks
+        g = gram_ref[t]
+        g_cols = [
+            jnp.dot(g, oh, preferred_element_type=jnp.float32)
+            for oh in onehots
+        ]
+        a, rhs = gathered_system(
+            g_cols, onehots, fsum[t : t + 1, :], bvec[t : t + 1, :],
+            scal_ref[t, 0], scal_ref[t, 1],
+        )
+        total = total + eliminate_spd_sse(a, rhs, scal_ref[t, 2])
+    sse_out[...] = total
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_t", "interpret")
+)
+def l0_gather_tuples_pallas(
+    tuples_t: jnp.ndarray,   # (n, b_pad) int32, b_pad % block_t == 0
+    gram: jnp.ndarray,       # (T, m_pad, m_pad) fp32, m_pad % 128 == 0
+    fsum: jnp.ndarray,       # (T, m_pad)
+    bvec: jnp.ndarray,       # (T, m_pad)
+    scal: jnp.ndarray,       # (T, 8)
+    n: int,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-tuple total SSE (b_pad,) fp32 for a padded tuple block."""
+    t, m_pad, _ = gram.shape
+    b_pad = tuples_t.shape[1]
+    assert b_pad % block_t == 0 and m_pad % 128 == 0
+    ntiles = b_pad // block_t
+    kern = functools.partial(
+        _kernel, n=n, n_tasks=t, m_pad=m_pad, block_t=block_t
+    )
+    sse = pl.pallas_call(
+        kern,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((n, block_t), lambda i: (0, i)),
+            pl.BlockSpec((t, m_pad, m_pad), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((t, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((t, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntiles, block_t), jnp.float32),
+        interpret=interpret,
+    )(tuples_t, gram, fsum, bvec, scal)
+    return sse.reshape(-1)

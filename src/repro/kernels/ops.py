@@ -16,6 +16,7 @@ import numpy as np
 from ..core.l0 import GramStats
 from ..core.sis import ScoreContext, TaskLayout
 from .fused_sis import fused_gen_sis_pallas
+from .l0_gather import l0_gather_tuples_pallas
 from .l0_tile import l0_pairs_tiled_pallas
 from .ref import solve3_sse
 
@@ -88,6 +89,78 @@ def l0_score_pairs(stats: GramStats, pairs: jnp.ndarray) -> jnp.ndarray:
             stats.b[t][i], stats.b[t][j], stats.ysum[t], stats.yty[t],
         )
     return total
+
+
+# ---------------------------------------------------------------------------
+# ℓ0 generic-width scoring (Gram-gather kernel, widths >= 3)
+# ---------------------------------------------------------------------------
+
+#: VMEM budget for the resident Gram statistics (fp32 bytes).  SIS-sized
+#: subspaces (m ≲ 1000) fit easily; beyond this the backend falls back to
+#: the fp64 XLA-gather path rather than thrash VMEM.
+GRAM_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def gram_pack_nbytes(n_tasks: int, m: int) -> int:
+    """fp32 bytes :func:`pack_gram_fp32` would occupy — computable *before*
+    building the pack, so over-budget subspaces never pay the allocation."""
+    m_pad = _pad_to(max(m, 128), 128)
+    return 4 * n_tasks * (m_pad * m_pad + 2 * m_pad + 8)
+
+
+def pack_gram_fp32(stats: GramStats) -> dict:
+    """Pad Gram statistics to lane-aligned fp32 arrays for the gather kernel.
+
+    Zero padding is inert: tuples only ever index real features, and padded
+    Gram rows/columns are never touched by their one-hot gathers.
+    """
+    t = stats.n_tasks
+    m = stats.m
+    m_pad = _pad_to(max(m, 128), 128)
+    gram = np.zeros((t, m_pad, m_pad), np.float32)
+    fsum = np.zeros((t, m_pad), np.float32)
+    bvec = np.zeros((t, m_pad), np.float32)
+    scal = np.zeros((t, 8), np.float32)
+    gram[:, :m, :m] = np.asarray(stats.gram, np.float32)
+    fsum[:, :m] = np.asarray(stats.fsum, np.float32)
+    bvec[:, :m] = np.asarray(stats.b, np.float32)
+    scal[:, 0] = np.asarray(stats.n, np.float32)
+    scal[:, 1] = np.asarray(stats.ysum, np.float32)
+    scal[:, 2] = np.asarray(stats.yty, np.float32)
+    return {
+        "gram": jnp.asarray(gram), "fsum": jnp.asarray(fsum),
+        "bvec": jnp.asarray(bvec), "scal": jnp.asarray(scal),
+        "m": m, "m_pad": m_pad,
+        "vmem_bytes": gram_pack_nbytes(t, m),
+    }
+
+
+def l0_score_tuples(
+    pack: dict,
+    tuples: jnp.ndarray,     # (B, n) int32 — may live on device (unrank.py)
+    block_t: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """fp32 total SSE (B,) for width-n tuples via the Gram-gather kernel.
+
+    Padding tuples are the benign (0, 1, …, n-1) combination, sliced off
+    before returning.  The result stays on device so the caller can fuse
+    the top-k / rescore selection without an extra transfer.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    tuples = jnp.asarray(tuples, jnp.int32)
+    b, n = tuples.shape
+    b_pad = _pad_to(max(b, block_t), block_t)
+    if b_pad != b:
+        fill = jnp.broadcast_to(
+            jnp.arange(n, dtype=jnp.int32)[None, :], (b_pad - b, n)
+        )
+        tuples = jnp.concatenate([tuples, fill], axis=0)
+    sse = l0_gather_tuples_pallas(
+        tuples.T, pack["gram"], pack["fsum"], pack["bvec"], pack["scal"],
+        n=n, block_t=block_t, interpret=interpret,
+    )
+    return sse[:b]
 
 
 def _task_padded_layout(

@@ -92,6 +92,109 @@ def solve3_sse(a, b, c, d, e, f, r1, r2, r3, yty):
     return sse
 
 
+# ---------------------------------------------------------------------------
+# ℓ0 generic-width scoring, closed form (kernel: l0_gather.py)
+# ---------------------------------------------------------------------------
+
+def eliminate_spd_sse(a, rhs, yty, rel_jitter=1e-6, eps=1e-30):
+    """SSE after solving the k×k SPD system by unrolled Gaussian elimination.
+
+    ``a`` is a k×k nested list and ``rhs`` a length-k list of mutually
+    broadcastable arrays — each entry is one coefficient *vectorized over a
+    tile of tuples*, so every operation below is an elementwise VPU op and
+    the loops unroll statically (k = n_dim+1 ≤ 5).  Shared by the Pallas
+    gather kernel and its pure-jnp oracle.
+
+    A scale-relative diagonal jitter keeps fp32 elimination stable (the
+    absolute 1e-10 jitter of the fp64 path vanishes in fp32); degenerate
+    pivots or non-finite results map to +inf SSE, and the two-phase exact
+    rescore re-ranks anything that survives in fp64.
+    """
+    k = len(rhs)
+    a = [[a[i][j] for j in range(k)] for i in range(k)]
+    rhs0 = list(rhs)
+    rhs = list(rhs)
+    for p in range(k):
+        a[p][p] = a[p][p] * (1.0 + rel_jitter)
+    ok = True
+    for p in range(k):
+        piv = a[p][p]
+        good = jnp.abs(piv) > eps
+        ok = good & ok
+        inv = jnp.where(good, 1.0, 0.0) / jnp.where(good, piv, 1.0)
+        for r in range(p + 1, k):
+            f = a[r][p] * inv
+            for c in range(p + 1, k):
+                a[r][c] = a[r][c] - f * a[p][c]
+            rhs[r] = rhs[r] - f * rhs[p]
+    coef = [None] * k
+    for p in range(k - 1, -1, -1):
+        acc = rhs[p]
+        for c in range(p + 1, k):
+            acc = acc - a[p][c] * coef[c]
+        piv = a[p][p]
+        good = jnp.abs(piv) > eps
+        coef[p] = jnp.where(good, 1.0, 0.0) * acc / jnp.where(good, piv, 1.0)
+    sse = yty
+    for p in range(k):
+        sse = sse - coef[p] * rhs0[p]
+    return jnp.where(ok & jnp.isfinite(sse), jnp.maximum(sse, 0.0), jnp.inf)
+
+
+def gathered_system(g_cols, onehots, fsum_row, b_row, count, ysum):
+    """Assemble the (n+1)×(n+1) normal equations for a tile of tuples.
+
+    ``g_cols[p] = G @ onehot_p`` is the one-hot-matmul gather of Gram
+    columns (the MXU-friendly gather: G[:, idx_p] as an (m_pad, B) panel);
+    entries, feature sums and projections reduce out of it elementwise.
+    Returns (a, rhs) in the nested-list form ``eliminate_spd_sse`` takes.
+    """
+    n = len(onehots)
+    k = n + 1
+    a = [[None] * k for _ in range(k)]
+    rhs = [None] * k
+    for p in range(n):
+        for q in range(p, n):
+            e = jnp.sum(g_cols[p] * onehots[q], axis=0, keepdims=True)
+            a[p][q] = e
+            a[q][p] = e
+        sp = jnp.dot(fsum_row, onehots[p], preferred_element_type=jnp.float32)
+        a[p][n] = sp
+        a[n][p] = sp
+        rhs[p] = jnp.dot(b_row, onehots[p], preferred_element_type=jnp.float32)
+    a[n][n] = count
+    rhs[n] = ysum
+    return a, rhs
+
+
+def l0_gather_sse_ref(
+    gram: jnp.ndarray,   # (T, m_pad, m_pad) fp32 Gram matrices (zero-padded)
+    fsum: jnp.ndarray,   # (T, m_pad)
+    bvec: jnp.ndarray,   # (T, m_pad)
+    scal: jnp.ndarray,   # (T, 8): [n, ysum, yty, 0, ...]
+    tuples: jnp.ndarray,  # (B, n) int32
+) -> jnp.ndarray:
+    """Pure-jnp oracle for the gather kernel: same one-hot gathers, same
+    elimination, whole batch at once.  Returns (B,) fp32 total SSE."""
+    m_pad = gram.shape[1]
+    n = tuples.shape[1]
+    tup = tuples.T.astype(jnp.int32)                       # (n, B)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (m_pad, tup.shape[1]), 0)
+    onehots = [(iota == tup[p][None, :]).astype(jnp.float32) for p in range(n)]
+    total = jnp.zeros((1, tup.shape[1]), jnp.float32)
+    for t in range(gram.shape[0]):
+        g_cols = [
+            jnp.dot(gram[t], oh, preferred_element_type=jnp.float32)
+            for oh in onehots
+        ]
+        a, rhs = gathered_system(
+            g_cols, onehots, fsum[t][None, :], bvec[t][None, :],
+            scal[t, 0], scal[t, 1],
+        )
+        total = total + eliminate_spd_sse(a, rhs, scal[t, 2])
+    return total.reshape(-1)
+
+
 def l0_pair_sse_ref(
     x: jnp.ndarray,        # (m, S) feature values, samples grouped by task
     y: jnp.ndarray,        # (S,)

@@ -1,7 +1,8 @@
 """Work journal: restartable sweeps over huge embarrassingly-parallel spaces.
 
 The SISSO ℓ0 stage evaluates 10^9–10^13 tuples in deterministic blocks
-(core/l0.py `tuple_blocks` / kernels/ops.py tile chunks).  The journal
+(rank ranges of core/l0.py `TupleEnumerator` / kernels/ops.py tile
+chunks — a block index fully identifies its tuples).  The journal
 records, atomically, the index of the next unfinished block plus the running
 top-k state, so:
 
@@ -25,6 +26,11 @@ class WorkJournal:
     def __init__(self, path: str):
         self.path = path
         self.reissues = 0
+        #: sweep signature of the recorded state (e.g. {m, n_dim, block,
+        #: n_keep} for ℓ0 rank-range sweeps); None on files written before
+        #: signatures existed.  Callers compare it before resuming so a
+        #: journal can never poison a *different* sweep's search.
+        self.meta: Optional[dict] = None
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
 
     # -- generic block-sweep state (core/l0.py) -------------------------
@@ -32,7 +38,7 @@ class WorkJournal:
         return os.path.exists(self.path)
 
     def record(self, next_block: int, best_sse: np.ndarray,
-               best_tuples: np.ndarray) -> None:
+               best_tuples: np.ndarray, meta: Optional[dict] = None) -> None:
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             json.dump({
@@ -41,6 +47,7 @@ class WorkJournal:
                 "best_sse": np.asarray(best_sse).tolist(),
                 "best_tuples": np.asarray(best_tuples).tolist(),
                 "reissues": self.reissues,
+                "meta": meta,
             }, f)
         os.replace(tmp, self.path)
 
@@ -49,6 +56,7 @@ class WorkJournal:
             st = json.load(f)
         assert st["kind"] == "blocks", st["kind"]
         self.reissues = st.get("reissues", 0)
+        self.meta = st.get("meta")
         return (np.asarray(st["best_sse"], np.float64),
                 np.asarray(st["best_tuples"], np.int64),
                 int(st["next_block"]))

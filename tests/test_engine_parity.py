@@ -119,11 +119,17 @@ def test_sis_deferred_parity(case, backend):
 
 
 @pytest.mark.parametrize("backend", DEVICE_BACKENDS)
-@pytest.mark.parametrize("width", [1, 2, 3])
+@pytest.mark.parametrize("width", [1, 2, 3, 4])
 def test_l0_scores_parity(rng, backend, width):
-    """Per-tuple SSE matches the lstsq oracle for every tuple width
-    (width != 2 exercises the pairs-only fallback on pallas/sharded)."""
-    m, s = 14, 156
+    """Per-tuple SSE matches the lstsq oracle for every tuple width.
+
+    Widths 2–4 are native kernels on pallas (pair gathers + the blocked
+    Gram-gather kernel); width 1 and everything ≥ 3 on sharded exercise
+    the generic jnp delegation.  The suite's tuple counts sit inside the
+    pallas backend's rescore window, so its values here are the exact
+    fp64 phase-2 numbers — which is the bit-exactness contract the
+    ℓ0 top-k merge relies on (m chosen so C(m, 4) < rescore_k)."""
+    m, s = 12, 156
     x = rng.uniform(0.5, 3.0, (m, s))
     y = 2.0 * x[3] - 1.0 * x[7] + 0.1 * rng.normal(size=s)
     layout = TaskLayout.from_task_ids(np.repeat([0, 1], [75, 81]))
@@ -137,6 +143,26 @@ def test_l0_scores_parity(rng, backend, width):
     assert np.argmin(got) == np.argmin(want)
 
 
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+@pytest.mark.parametrize("width", [3, 4])
+def test_l0_search_ranking_parity_wide(rng, backend, width):
+    """Full ℓ0 sweeps at widths 3/4: the final top-k tuples must be
+    *bit-identical* to reference (and SSEs numerically equal) through the
+    device enumerator + streaming loop + per-backend scoring."""
+    m, s = 12, 80
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = (1.5 * x[5] - 2.5 * x[9] + 0.8 * x[2]
+         + 0.4 * rng.normal(size=s))
+    layout = TaskLayout.from_task_ids(np.repeat([0, 1], 40))
+    ref = l0_search(x, y, layout, n_dim=width, n_keep=7, block=61,
+                    engine=get_engine("reference"))
+    res = l0_search(x, y, layout, n_dim=width, n_keep=7, block=61,
+                    engine=get_engine(backend))
+    assert np.array_equal(res.tuples, ref.tuples)
+    np.testing.assert_allclose(res.sses, ref.sses, rtol=1e-6, atol=1e-8)
+    assert res.n_evaluated == ref.n_evaluated
+
+
 @pytest.mark.parametrize("backend", ALL_BACKENDS)
 @pytest.mark.parametrize("method", ["gram", "qr"])
 def test_l0_search_winners_parity(rng, backend, method):
@@ -147,6 +173,22 @@ def test_l0_search_winners_parity(rng, backend, method):
                     block=97, method=method, engine=get_engine(backend))
     assert tuple(res.tuples[0]) == (5, 16)
     assert res.sses[0] < 1e-6
+
+
+def test_l0_search_ranking_parity_partial_rescore(rng):
+    """The two-phase contract under *partial* rescoring: with blocks much
+    larger than rescore_k, phase 1's fp32 ranking actually selects the
+    rescore set, and the final top-k must still match reference exactly."""
+    m, s = 24, 80
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 1.5 * x[5] - 2.5 * x[16] + 0.8 * x[2] + 0.4 * rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    eng = get_engine("pallas", rescore_k=32)   # C(24,3)=2024 >> 32
+    ref = l0_search(x, y, layout, n_dim=3, n_keep=8, block=2048,
+                    engine=get_engine("reference"))
+    res = l0_search(x, y, layout, n_dim=3, n_keep=8, block=2048, engine=eng)
+    assert np.array_equal(res.tuples, ref.tuples)
+    np.testing.assert_allclose(res.sses, ref.sses, rtol=1e-6, atol=1e-8)
 
 
 @pytest.mark.parametrize("backend", DEVICE_BACKENDS)

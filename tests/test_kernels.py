@@ -162,6 +162,63 @@ def test_l0_search_tiled_exact_topk(rng, m, s, tasks, block):
     assert n_eval == m * (m - 1) // 2
 
 
+# ---------------------------------------------------------------------------
+# ℓ0 Gram-gather kernel (widths >= 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,s,tasks,width,block_t", [
+    (10, 40, 1, 3, 128),     # minimal single-task
+    (14, 156, 2, 3, 128),    # thermal-like multi-task
+    (14, 60, 2, 4, 128),     # width 4
+    (20, 90, 1, 4, 256),     # bigger tile
+    (12, 333, 3, 3, 128),    # unaligned samples, 3 tasks
+])
+def test_l0_gather_kernel_matches_oracle(rng, m, s, tasks, width, block_t):
+    from repro.kernels.ref import l0_gather_sse_ref
+
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2.0 * x[3] - x[7] + 0.1 * rng.normal(size=s)
+    ids = np.sort(rng.integers(0, tasks, s))
+    layout = TaskLayout.from_task_ids(ids) if tasks > 1 else TaskLayout.single(s)
+    tuples = np.asarray(
+        list(__import__("itertools").combinations(range(m), width)), np.int32)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    pack = kops.pack_gram_fp32(stats)
+    got = np.asarray(kops.l0_score_tuples(pack, jnp.asarray(tuples),
+                                          block_t=block_t, interpret=True))
+    oracle = np.asarray(l0_gather_sse_ref(
+        pack["gram"], pack["fsum"], pack["bvec"], pack["scal"],
+        jnp.asarray(tuples)))
+    want = np.asarray(score_tuples_qr(jnp.asarray(x), jnp.asarray(y), layout,
+                                      jnp.asarray(tuples)))
+    assert got.shape == (len(tuples),)
+    # kernel vs pure-jnp oracle: same math, fp32 accumulation-order noise
+    np.testing.assert_allclose(got, oracle, rtol=1e-3, atol=1e-4)
+    # fp32 pre-pass vs fp64 QR: a ranking-quality bound, not bit equality —
+    # phase 2 (backend rescore) restores exact values for the winners
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-9)
+    assert np.quantile(rel, 0.99) < 2e-2
+    assert np.argmin(got) == np.argmin(want)
+
+
+def test_l0_gather_padding_is_inert(rng):
+    """Block sizes that don't divide block_t get benign padding tuples;
+    results must be identical to an aligned call, sliced."""
+    m, s = 11, 50
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    pack = kops.pack_gram_fp32(stats)
+    tuples = np.asarray(
+        list(__import__("itertools").combinations(range(m), 3)), np.int32)
+    full = np.asarray(kops.l0_score_tuples(pack, jnp.asarray(tuples),
+                                           block_t=128, interpret=True))
+    ragged = np.asarray(kops.l0_score_tuples(pack, jnp.asarray(tuples[:131]),
+                                             block_t=128, interpret=True))
+    np.testing.assert_array_equal(ragged, full[:131])
+
+
 def test_l0_search_tiled_planted(rng):
     m, s = 140, 96
     x = rng.uniform(0.5, 3.0, (m, s))

@@ -63,7 +63,7 @@ def test_n_models_matches_fig1d():
     assert n_models(5000, 2) == 12_497_500  # SIS-sized spaces stay tractable
 
 
-@pytest.mark.parametrize("n_dim", [1, 2, 3])
+@pytest.mark.parametrize("n_dim", [1, 2, 3, 4])
 def test_tuple_blocks_cover_exactly_once(n_dim):
     m, block = 9, 7
     seen = set()
@@ -76,13 +76,74 @@ def test_tuple_blocks_cover_exactly_once(n_dim):
     assert len(seen) == n_models(m, n_dim)
 
 
-@pytest.mark.parametrize("engine", ["gram", "qr"])
-def test_l0_search_finds_planted_pair(rng, engine):
+@pytest.mark.parametrize("m,n", [(5, 3), (9, 3), (9, 4), (12, 2), (7, 1),
+                                 (16, 4), (6, 5)])
+def test_unranking_matches_itertools(m, n):
+    """Device unranking is the exact lexicographic bijection: rank r maps to
+    the r-th tuple of ``itertools.combinations(range(m), n)``."""
+    from repro.kernels.unrank import comb_exact, unrank_lex, unrank_lex_host
+
+    want = np.asarray(list(__import__("itertools").combinations(range(m), n)),
+                      np.int32)
+    total = comb_exact(m, n)
+    assert total == len(want) == n_models(m, n)
+    got = np.asarray(unrank_lex(jnp.arange(total), m, n))
+    assert np.array_equal(got, want)
+    for r in (0, 1, total // 2, total - 1):
+        assert unrank_lex_host(r, m, n) == list(want[r])
+
+
+def test_enumerator_blocks_are_rank_addressable():
+    """Block bi materializes exactly ranks [bi*block, bi*block+count) — the
+    journal's resume contract — on both the device and host-exact paths."""
+    from repro.core.l0 import TupleEnumerator
+
+    m, n, block = 11, 3, 37
+    want = np.asarray(list(__import__("itertools").combinations(range(m), n)),
+                      np.int32)
+    enum = TupleEnumerator(m, n, block)
+    assert enum.total == len(want)
+    for bi in range(enum.n_blocks):
+        lo = bi * block
+        blk = np.asarray(enum.block_tuples(bi))
+        assert np.array_equal(blk, want[lo : lo + enum.count(bi)])
+        host = enum._host_block(lo, enum.count(bi))
+        assert np.array_equal(host, blk)
+
+
+def test_l0_search_qr_degenerate_feature_not_dropped(rng):
+    """A rank-deficient feature (all-zero column) must not poison its
+    block: QR SSEs for tuples containing it rank last (inf, not NaN), and
+    the merge-skip never discards a block holding the true winner."""
+    m, s = 8, 40
+    x = rng.uniform(0.5, 3.0, (m, s))
+    x[2] = 0.0  # degenerate: QR normal equations go rank-deficient
+    y = 2.0 * x[4] - 1.0 * x[5] + 0.01 * rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    res = l0_search(x, y, layout, n_dim=2, n_keep=3, block=1000, method="qr")
+    assert tuple(res.tuples[0]) == (4, 5)
+    assert np.isfinite(res.sses[0])
+
+
+def test_l0_search_legacy_engine_alias_warns(rng):
+    m, s = 10, 30
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    with pytest.warns(DeprecationWarning, match="l0_search"):
+        res = l0_search(x, y, TaskLayout.single(s), n_dim=2, n_keep=3,
+                        block=16, engine="qr")
+    ref = l0_search(x, y, TaskLayout.single(s), n_dim=2, n_keep=3,
+                    block=16, method="qr")
+    np.testing.assert_array_equal(res.tuples, ref.tuples)
+
+
+@pytest.mark.parametrize("method", ["gram", "qr"])
+def test_l0_search_finds_planted_pair(rng, method):
     m, s = 30, 60
     x = rng.uniform(0.5, 3.0, (m, s))
     y = 2.0 * x[4] - 3.0 * x[17] + 0.7
     res = l0_search(x, y, TaskLayout.single(s), n_dim=2, n_keep=5,
-                    block=101, engine=engine)
+                    block=101, method=method)
     assert tuple(res.tuples[0]) == (4, 17)
     assert res.sses[0] < 1e-6
     assert res.n_evaluated == n_models(m, 2)

@@ -132,6 +132,88 @@ def test_journal_l0_restart_resumes(tmp_path, rng):
     np.testing.assert_allclose(res.sses, ref.sses, rtol=1e-12)
 
 
+def test_journal_l0_restart_resumes_width3_device_enumerator(tmp_path, rng):
+    """Mid-sweep resume under the rank-range enumerator: a width-3 sweep
+    killed after a few blocks restarts from the journal and reproduces the
+    uninterrupted result (blocks re-materialize from rank ranges alone)."""
+    from repro.core import l0_search
+    from repro.core.sis import TaskLayout
+    m, s = 12, 40
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2 * x[3] - x[8] + 0.5 * x[5] + 0.1 * rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    ref = l0_search(x, y, layout, n_dim=3, n_keep=4, block=17)
+
+    class Interrupt(Exception):
+        pass
+
+    j = WorkJournal(str(tmp_path / "l0w3.json"))
+    orig = j.record
+    calls = {"n": 0}
+
+    def bomb(*a, **k):
+        orig(*a, **k)
+        calls["n"] += 1
+        if calls["n"] == 4:
+            raise Interrupt()
+
+    j.record = bomb
+    with pytest.raises(Interrupt):
+        l0_search(x, y, layout, n_dim=3, n_keep=4, block=17, journal=j)
+
+    j2 = WorkJournal(str(tmp_path / "l0w3.json"))
+    res = l0_search(x, y, layout, n_dim=3, n_keep=4, block=17, journal=j2)
+    np.testing.assert_array_equal(res.tuples, ref.tuples)
+    np.testing.assert_allclose(res.sses, ref.sses, rtol=1e-12)
+    assert res.n_evaluated == ref.n_evaluated
+
+
+def test_journal_sweep_signature_guards_resume(tmp_path, rng):
+    """A journal recorded by one sweep must not seed a different sweep:
+    same top-k shape but different block size => state is ignored."""
+    from repro.core import l0_search
+    from repro.core.sis import TaskLayout
+    m, s = 10, 30
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    layout = TaskLayout.single(s)
+
+    j = WorkJournal(str(tmp_path / "sig.json"))
+    l0_search(x, y, layout, n_dim=2, n_keep=4, block=16, journal=j)
+    assert j.has_state()  # completed sweep: next_block == n_blocks
+    # same (n_keep, n_dim) shape, different block size: a naive resume
+    # would skip "finished" blocks that mean different tuples here
+    res = l0_search(x, y, layout, n_dim=2, n_keep=4, block=7, journal=j)
+    ref = l0_search(x, y, layout, n_dim=2, n_keep=4, block=7)
+    np.testing.assert_array_equal(res.tuples, ref.tuples)
+    assert res.n_evaluated == ref.n_evaluated
+
+    # same geometry, different data: the operand digest must reject the
+    # state (a completed journal surviving a crash-before-clear would
+    # otherwise hand this sweep the previous dataset's winners)
+    x2 = x + rng.uniform(0.1, 0.2, x.shape)
+    j_d = WorkJournal(str(tmp_path / "sig2.json"))
+    l0_search(x, y, layout, n_dim=2, n_keep=4, block=16, journal=j_d)
+    res_d = l0_search(x2, y, layout, n_dim=2, n_keep=4, block=16, journal=j_d)
+    ref_d = l0_search(x2, y, layout, n_dim=2, n_keep=4, block=16)
+    np.testing.assert_array_equal(res_d.tuples, ref_d.tuples)
+    assert res_d.n_evaluated == ref_d.n_evaluated
+
+    # legacy journal files carry no signature: resume must fail closed
+    # (restart) rather than trust state of unknown provenance
+    import json
+    with open(j.path) as f:
+        st = json.load(f)
+    st.pop("meta")
+    st["next_block"] = 3  # pretend mid-sweep
+    with open(j.path, "w") as f:
+        json.dump(st, f)
+    j3 = WorkJournal(j.path)
+    res3 = l0_search(x, y, layout, n_dim=2, n_keep=4, block=7, journal=j3)
+    np.testing.assert_array_equal(res3.tuples, ref.tuples)
+    assert res3.n_evaluated == ref.n_evaluated
+
+
 def test_step_monitor_flags_stragglers():
     import time
     mon = StepMonitor(window=20, straggler_factor=2.5)
