@@ -1,41 +1,64 @@
-"""FP64-vs-FP32 benchmark (paper Fig. 3 hatched bars, P7).
+"""Precision sweep per execution backend (paper Fig. 3 hatched bars, P7).
 
-The paper reports FP32 giving identical SISSO results at lower cost.  We
-verify both claims at laptop scale: identical selected descriptors, and the
-ℓ0 scoring throughput ratio.
+The paper added an FP32 mode to SISSO++ because datacenter GPUs run FP32 at
+≥2× FP64 peak; on TPU the interesting axis is bf16-matmul/fp32-accumulate
+vs fp32 vs fp64.  ``SissoConfig.precision`` now threads through the engine
+layer (``Engine.set_precision`` -> ``Backend.compute_dtype``), so this
+benchmark sweeps bf16/fp32/fp64 *per backend* through the public engine
+API — SIS block scoring and ℓ0 pair scoring — and verifies the paper's
+"FP32 yields the same numerical results" claim as a selected-model
+consistency column.  Rows are recorded to ``BENCH_precision.json``.
 """
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core.l0 import compute_gram_stats
-from repro.core.sis import TaskLayout
-from repro.kernels import ops as kops
-from .common import emit, time_call
+from repro.core.sis import TaskLayout, build_score_context
+from repro.engine import get_engine
+
+from .common import emit, reset_bench_rows, time_call, write_bench_json
+
+BACKENDS = ("jnp", "pallas", "sharded")
+PRECISIONS = ("bf16", "fp32", "fp64")
 
 
-def main(samples: int = 400, m: int = 192):
+def main(samples: int = 400, m: int = 192, n_feat: int = 2048):
+    reset_bench_rows()
     rng = np.random.default_rng(1)
     x = rng.uniform(0.5, 3.0, (m, samples))
     y = 2 * x[3] * x[10] - x[50] + rng.normal(0, 0.2, samples)
+    feats = rng.uniform(0.5, 3.0, (n_feat, samples))
     layout = TaskLayout.single(samples)
-    pairs = jnp.asarray(np.stack(np.triu_indices(m, 1), 1), jnp.int32)
+    pairs = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
 
-    results = {}
-    for prec, dtype in (("fp64", jnp.float64), ("fp32", jnp.float32)):
-        stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout,
-                                   dtype)
-        fn = jax.jit(lambda p: kops.l0_score_pairs(stats, p))
-        t = time_call(fn, pairs)
-        sses = np.array(fn(pairs))
-        results[prec] = (t, int(np.argmin(sses)))
-        emit(f"l0_{prec}", t * 1e6, f"{len(pairs) / t:.0f} models/s")
-    same = results["fp64"][1] == results["fp32"][1]
-    emit("l0_fp32_same_argmin", 0.0,
-         f"selected model identical across precisions: {same} "
-         "(paper: 'FP32 yields the same numerical results')")
+    argmins = {}
+    for backend in BACKENDS:
+        for prec in PRECISIONS:
+            eng = get_engine(backend).set_precision(prec)
+            ctx = build_score_context(
+                rng.normal(size=(2, samples)), layout,
+                dtype=eng.backend.score_ctx_dtype,
+            )
+
+            t_sis = time_call(lambda: eng.sis_scores(feats, ctx))
+            emit(f"sis_{backend}_{prec}", t_sis * 1e6,
+                 f"{n_feat / t_sis:.0f} feats/s")
+
+            prob = eng.prepare_l0(x, y, layout)  # dtype <- compute_dtype
+            t_l0 = time_call(lambda: eng.l0_scores(prob, pairs))
+            sses = np.asarray(eng.l0_scores(prob, pairs), np.float64)
+            argmins[(backend, prec)] = int(np.argmin(sses))
+            emit(f"l0_{backend}_{prec}", t_l0 * 1e6,
+                 f"{len(pairs) / t_l0:.0f} models/s")
+
+    for backend in BACKENDS:
+        same32 = argmins[(backend, "fp32")] == argmins[(backend, "fp64")]
+        same16 = argmins[(backend, "bf16")] == argmins[(backend, "fp64")]
+        emit(f"l0_{backend}_same_argmin", 0.0,
+             f"fp32=={'fp64' if same32 else 'DIFFERENT'} "
+             f"bf16=={'fp64' if same16 else 'DIFFERENT'} "
+             "(paper: 'FP32 yields the same numerical results')")
+    write_bench_json("precision")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,14 @@ Prints ``name,us_per_call,derived`` CSV rows.  On this CPU container the
 absolute numbers calibrate the *relative* claims (QR vs Gram engines,
 fused-vs-materialized SIS, FP64 vs FP32, phase breakdowns); the TPU roofline
 analysis lives in EXPERIMENTS.md (fed by launch/dryrun.py).
+
+``--smoke`` runs the fast JSON-recording subset (precision sweep, backend
+phase timings, serving) so CI leaves ``BENCH_*.json`` artifacts on every
+push — the machine-readable perf trajectory — without paying for the full
+sweep.
 """
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
@@ -13,14 +20,22 @@ from . import (bench_backends, bench_e2e_kaggle, bench_e2e_thermal,
                bench_feature_gen, bench_l0, bench_precision, bench_scaling,
                bench_serve, bench_sis)
 
+#: fast modules that record BENCH_*.json — the CI smoke set
+SMOKE_MODULES = (bench_precision, bench_backends, bench_serve)
 
-def main() -> None:
+ALL_MODULES = (bench_feature_gen, bench_sis, bench_l0, bench_precision,
+               bench_backends, bench_serve, bench_e2e_thermal,
+               bench_e2e_kaggle, bench_scaling)
+
+
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
-    for mod in (bench_feature_gen, bench_sis, bench_l0, bench_precision,
-                bench_backends, bench_serve, bench_e2e_thermal,
-                bench_e2e_kaggle, bench_scaling):
+    for mod in (SMOKE_MODULES if smoke else ALL_MODULES):
         mod.main()
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast JSON-recording subset (CI perf trajectory)")
+    main(**vars(ap.parse_args()))

@@ -33,6 +33,16 @@ def _sample_axis(mesh: Mesh) -> Optional[str]:
     return "model" if "model" in mesh.axis_names else None
 
 
+def _n_dp(mesh: Mesh) -> int:
+    dp = _dp_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+
+def _shard_index(dp: Tuple[str, ...]):
+    """Linearized shard index over the candidate axes (inside shard_map)."""
+    return jax.lax.axis_index(dp[0] if len(dp) == 1 else dp)
+
+
 @functools.lru_cache(maxsize=None)
 def _sis_sharded_fn(mesh: Mesh, n_residuals: int):
     """Compiled sharded SIS scorer, cached per (mesh, n_residuals).
@@ -46,10 +56,10 @@ def _sis_sharded_fn(mesh: Mesh, n_residuals: int):
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(dp, sample_ax), P(None, sample_ax), P(None, sample_ax),
-                  P(None)),
+                  P(None), P(dp)),
         out_specs=P(dp),
     )
-    def local(x_blk, m_blk, yt_blk, counts):
+    def local(x_blk, m_blk, yt_blk, counts, mask_blk):
         sums = x_blk @ m_blk.T
         sumsq = (x_blk * x_blk) @ m_blk.T
         dots = x_blk @ yt_blk.T
@@ -57,7 +67,11 @@ def _sis_sharded_fn(mesh: Mesh, n_residuals: int):
             sums = jax.lax.psum(sums, sample_ax)
             sumsq = jax.lax.psum(sumsq, sample_ax)
             dots = jax.lax.psum(dots, sample_ax)
-        return scores_from_reductions(sums, sumsq, dots, counts, n_residuals)
+        scores = scores_from_reductions(sums, sumsq, dots, counts, n_residuals)
+        # padding/masked rows are killed *inside* the sharded fn so a
+        # device-side top-k can never select one — host slice-off is not a
+        # defense once only winners cross the boundary
+        return jnp.where(mask_blk, scores, -jnp.inf)
 
     return jax.jit(local)
 
@@ -66,22 +80,93 @@ def sis_scores_sharded(
     mesh: Mesh,
     x: jnp.ndarray,  # (F, S) candidate values; F % n_data_shards == 0
     ctx: ScoreContext,
+    row_mask: Optional[jnp.ndarray] = None,  # (F,) bool; False -> -inf
 ) -> jnp.ndarray:
     """Full score vector (F,) with features sharded over data(+pod).
 
-    Unlike :func:`sis_scores_distributed` (which merges a local top-k), this
-    returns every score so the engine layer can apply the same host-side
-    TopK policy as every other backend.  Samples shard over 'model' when the
-    mesh has that axis (partial sums psum'ed); otherwise they are replicated
-    and the screen is collective-free.
+    Unlike :func:`sis_topk_sharded` (which merges a local top-k on device),
+    this returns every score so the engine layer can apply the same
+    host-side TopK policy as every other backend.  Samples shard over
+    'model' when the mesh has that axis (partial sums psum'ed); otherwise
+    they are replicated and the screen is collective-free.  ``row_mask``
+    marks real rows: padding (and excluded) rows score ``-inf`` on device.
     """
     fn = _sis_sharded_fn(mesh, ctx.n_residuals)
+    if row_mask is None:
+        row_mask = jnp.ones((x.shape[0],), bool)
     return fn(
         x,
         jnp.asarray(ctx.membership, x.dtype),
         jnp.asarray(ctx.y_tilde, x.dtype),
         jnp.asarray(ctx.counts, x.dtype),
+        jnp.asarray(row_mask, bool),
     )
+
+
+@functools.lru_cache(maxsize=None)
+def _sis_topk_fn(mesh: Mesh, n_residuals: int, k_local: int, k_merge: int):
+    """Compiled sharded SIS screen with the merge *on device*: per-shard
+    scores -> local top-``k_local`` -> ``all_gather`` of k-sized (score,
+    index) payloads over the candidate axes -> replicated top-``k_merge``.
+    Only O(k) winners ever leave the device mesh."""
+    dp = _dp_axes(mesh)
+    sample_ax = _sample_axis(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, sample_ax), P(None, sample_ax), P(None, sample_ax),
+                  P(None), P(dp)),
+        out_specs=(P(None), P(None)),
+        check_rep=False,
+    )
+    def local(x_blk, m_blk, yt_blk, counts, mask_blk):
+        sums = x_blk @ m_blk.T
+        sumsq = (x_blk * x_blk) @ m_blk.T
+        dots = x_blk @ yt_blk.T
+        if sample_ax is not None:
+            sums = jax.lax.psum(sums, sample_ax)
+            sumsq = jax.lax.psum(sumsq, sample_ax)
+            dots = jax.lax.psum(dots, sample_ax)
+        scores = scores_from_reductions(sums, sumsq, dots, counts, n_residuals)
+        scores = jnp.where(mask_blk, scores, -jnp.inf)
+        vals, sel = jax.lax.top_k(scores, k_local)
+        gidx = scores.shape[0] * _shard_index(dp) + sel
+        gv = jax.lax.all_gather(vals, dp, tiled=True)    # (nd * k_local,)
+        gi = jax.lax.all_gather(gidx, dp, tiled=True)
+        v2, s2 = jax.lax.top_k(gv, k_merge)
+        return v2, gi[s2]
+
+    return jax.jit(local)
+
+
+def sis_topk_sharded(
+    mesh: Mesh,
+    x: jnp.ndarray,                 # (F, S); F % n_data_shards == 0
+    ctx: ScoreContext,
+    row_mask: jnp.ndarray,          # (F,) bool; padding/excluded rows False
+    n_keep: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Device-merged top-``n_keep`` (scores desc, global indices).
+
+    The general-mesh form of the k-sized all-gather merge: candidates shard
+    over data(+pod), samples over 'model' when present.  Masked rows can
+    never win (in-shard ``-inf``); the host receives exactly
+    ``min(n_keep, nd·k_local)`` entries and the caller drops ``-inf`` tails.
+    """
+    f = int(x.shape[0])
+    nd = _n_dp(mesh)
+    assert f % nd == 0, (f, nd)
+    k_local = min(int(n_keep), f // nd)
+    k_merge = min(int(n_keep), nd * k_local)
+    fn = _sis_topk_fn(mesh, ctx.n_residuals, k_local, k_merge)
+    vals, idx = fn(
+        x,
+        jnp.asarray(ctx.membership, x.dtype),
+        jnp.asarray(ctx.y_tilde, x.dtype),
+        jnp.asarray(ctx.counts, x.dtype),
+        jnp.asarray(row_mask, bool),
+    )
+    return np.asarray(vals, np.float64), np.asarray(idx)
 
 
 @functools.lru_cache(maxsize=None)
@@ -95,10 +180,10 @@ def _l0_pairs_sharded_fn(mesh: Mesh, n_tasks: int):
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(None, sample_ax), P(sample_ax), P(None, sample_ax),
-                  P(dp, None)),
+                  P(dp, None), P(dp)),
         out_specs=P(dp),
     )
-    def local(x_blk, y_blk, mem_blk, prs):
+    def local(x_blk, y_blk, mem_blk, prs, vld):
         def ps(v):
             return jax.lax.psum(v, sample_ax) if sample_ax is not None else v
 
@@ -117,7 +202,9 @@ def _l0_pairs_sharded_fn(mesh: Mesh, n_tasks: int):
             total = total + solve3_sse(
                 gii[i], gii[j], n, gij, fsum[i], fsum[j],
                 bv[i], bv[j], ysum, yty)
-        return total
+        # padding pairs are +inf *inside* the sharded fn: a device-side
+        # top-k must never pick a benign-padding solve as a winner
+        return jnp.where(vld, total, jnp.inf)
 
     return jax.jit(local)
 
@@ -128,16 +215,187 @@ def l0_pair_sses_sharded(
     y: jnp.ndarray,      # (S,)
     layout: TaskLayout,
     pairs: jnp.ndarray,  # (B, 2) int32; B % n_data_shards == 0
+    valid: Optional[jnp.ndarray] = None,  # (B,) bool; False -> +inf
 ) -> jnp.ndarray:
     """Total SSE (B,) for explicit pairs, tuple space sharded over data(+pod).
 
     The per-shard math is the same closed-form solve as the Pallas tile
     kernel (kernels/ref.py:solve3_sse); per-task Gram partials psum over
-    'model' when the mesh shards samples.
+    'model' when the mesh shards samples.  Rows where ``valid`` is False
+    (padding pairs) come back ``+inf`` — masked on device, not host-sliced.
     """
     mem = jnp.asarray(layout.membership(x.shape[1], np.float64), x.dtype)
     fn = _l0_pairs_sharded_fn(mesh, layout.n_tasks)
-    return fn(x, y, mem, pairs)
+    if valid is None:
+        valid = jnp.ones((pairs.shape[0],), bool)
+    return fn(x, y, mem, pairs, jnp.asarray(valid, bool))
+
+
+# ---------------------------------------------------------------------------
+# generic ℓ0 device-merged top-k: any width, any (traceable) scorer
+# ---------------------------------------------------------------------------
+
+def make_l0_topk_fn(mesh: Mesh, scorer, k_local: int, k_merge: int,
+                    n_operands: int):
+    """Build the compiled sharded ℓ0 block reducer for one sweep.
+
+    ``scorer(tuples_blk, *operands) -> sse (b_local,)`` is any traceable
+    scoring function (jnp Gram closed form, batched QR, …); ``operands``
+    are replicated device arrays (Gram statistics are tiny — (T, m, m) —
+    so replication is the right call; the *tuple space* is what shards).
+    Per shard: score -> mask padding to +inf -> local top-``k_local`` ->
+    all-gather the k-sized (sse, index) payloads over data(+pod) ->
+    replicated top-``k_merge``.  The caller caches the returned closure per
+    sweep (``L0Problem.cache``) exactly like the single-device jit paths.
+    """
+    dp = _dp_axes(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, None), P(dp)) + (P(),) * n_operands,
+        out_specs=(P(None), P(None)),
+        check_rep=False,
+    )
+    def local(tup_blk, vld_blk, *ops):
+        sse = scorer(tup_blk, *ops)
+        sse = jnp.where(vld_blk, sse, jnp.inf)
+        neg, sel = jax.lax.top_k(-sse, k_local)
+        gidx = sse.shape[0] * _shard_index(dp) + sel
+        gv = jax.lax.all_gather(neg, dp, tiled=True)
+        gi = jax.lax.all_gather(gidx, dp, tiled=True)
+        n2, s2 = jax.lax.top_k(gv, k_merge)
+        return -n2, gi[s2]
+
+    return jax.jit(local)
+
+
+def gram_topk_scorer(m: int):
+    """Traceable Gram-closed-form scorer for :func:`make_l0_topk_fn`.
+
+    Operand order matches :func:`gram_operands`; ``m`` (subspace size) is
+    static so the rebuilt :class:`GramStats` has a concrete shape."""
+    from .l0 import GramStats, score_tuples_gram
+
+    def scorer(tup_blk, gram, fsum, b, n, ysum, yty):
+        stats = GramStats(gram=gram, fsum=fsum, b=b, n=n, ysum=ysum,
+                          yty=yty, m=m)
+        return score_tuples_gram(stats, tup_blk)
+
+    return scorer
+
+
+def gram_operands(stats) -> Tuple[jnp.ndarray, ...]:
+    return (stats.gram, stats.fsum, stats.b, stats.n, stats.ysum, stats.yty)
+
+
+def qr_topk_scorer(layout: TaskLayout, dtype):
+    """Traceable paper-faithful QR scorer (operands: x (m, S), y (S,))."""
+    from .l0 import score_tuples_qr
+
+    def scorer(tup_blk, x, y):
+        return score_tuples_qr(x, y, layout, tup_blk, dtype)
+
+    return scorer
+
+
+# ---------------------------------------------------------------------------
+# fused + distributed deferred SIS: the Pallas gen+validate+score kernel
+# wrapped in shard_map (candidates shard over data(+pod); samples replicated)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fused_sis_topk_fn(mesh: Mesh, op_id: int, n_residuals: int,
+                       k_local: int, k_merge: int, l_bound: float,
+                       u_bound: float, block_b: int, interpret: bool):
+    """Compiled shard_map-wrapped fused SIS kernel with device merge.
+
+    Each shard runs the Pallas fused gen+validate+score kernel
+    (kernels/fused_sis.py) on its candidate slice — values live only in
+    that shard's VMEM — masks its padding rows in-kernel (``n_valid``),
+    takes a local top-k and joins the k-sized all-gather merge.  This is
+    the ROADMAP "fused sharded kernel": the deferred screen is fused *and*
+    distributed.
+    """
+    from ..kernels.fused_sis import fused_gen_sis_pallas
+
+    dp = _dp_axes(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, None), P(dp, None), P(None, None), P(None, None),
+                  P(None, None), P(dp)),
+        out_specs=(P(None), P(None)),
+        check_rep=False,
+    )
+    def local(a_blk, b_blk, m_blk, yt_blk, cnt, nv_blk):
+        scores = fused_gen_sis_pallas(
+            op_id, a_blk, b_blk, m_blk, yt_blk, cnt,
+            n_residuals=n_residuals, l_bound=l_bound, u_bound=u_bound,
+            block_b=block_b, interpret=interpret, n_valid=nv_blk[0],
+        )
+        vals, sel = jax.lax.top_k(scores, k_local)
+        gidx = scores.shape[0] * _shard_index(dp) + sel
+        gv = jax.lax.all_gather(vals, dp, tiled=True)
+        gi = jax.lax.all_gather(gidx, dp, tiled=True)
+        v2, s2 = jax.lax.top_k(gv, k_merge)
+        return v2, gi[s2]
+
+    return jax.jit(local)
+
+
+def fused_sis_topk_sharded(
+    mesh: Mesh,
+    op_id: int,
+    a: jnp.ndarray,    # (B, S) child-1 values
+    b: jnp.ndarray,    # (B, S) child-2 values
+    ctx: ScoreContext,
+    n_keep: int,
+    l_bound: float,
+    u_bound: float,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-``n_keep`` (scores desc, indices) of a deferred candidate block,
+    fused (Pallas) and distributed (shard_map), merged on device.
+
+    Padding policy mirrors ``kernels/ops.py:fused_gen_sis`` — children pad
+    with the domain-safe 1.0, the sample axis to a lane multiple of 128 —
+    except rows are padded per-shard to a ``block_b`` grid multiple and
+    masked in-kernel, so per-row fp32 scores are bit-identical to the
+    single-device fused path.  Requires a sample-replicated mesh (no
+    'model' axis): the kernel computes whole-sample reductions itself.
+    """
+    assert _sample_axis(mesh) is None, (
+        "fused sharded SIS requires sample-replicated meshes; use the "
+        "compose path (eval + sis_topk_sharded) on sample-sharded meshes"
+    )
+    bsz, s = a.shape
+    nd = _n_dp(mesh)
+    s_pad = ((max(s, 128) + 127) // 128) * 128
+    chunk = nd * block_b
+    b_pad = ((max(bsz, chunk) + chunk - 1) // chunk) * chunk
+    b_local = b_pad // nd
+
+    def pad2(v, rows, cols, fill):
+        out = jnp.full((rows, cols), fill, jnp.float32)
+        return out.at[: v.shape[0], : v.shape[1]].set(v.astype(jnp.float32))
+
+    a_p = pad2(jnp.asarray(a), b_pad, s_pad, 1.0)
+    b_p = pad2(jnp.asarray(b), b_pad, s_pad, 1.0)
+    m_p = pad2(jnp.asarray(ctx.membership), ctx.membership.shape[0], s_pad, 0.0)
+    yt_p = pad2(jnp.asarray(ctx.y_tilde), ctx.y_tilde.shape[0], s_pad, 0.0)
+    cnt = jnp.asarray(ctx.counts, jnp.float32)[None, :]
+    # per-shard count of real rows (shard i holds rows [i*b_local, ...))
+    nv = np.clip(bsz - np.arange(nd) * b_local, 0, b_local).astype(np.int32)
+
+    k_local = min(int(n_keep), b_local)
+    k_merge = min(int(n_keep), nd * k_local)
+    fn = _fused_sis_topk_fn(
+        mesh, int(op_id), ctx.n_residuals, k_local, k_merge,
+        float(l_bound), float(u_bound), int(block_b), bool(interpret),
+    )
+    vals, idx = fn(a_p, b_p, m_p, yt_p, cnt, jnp.asarray(nv))
+    return np.asarray(vals, np.float64), np.asarray(idx)
 
 
 def sis_scores_distributed(

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .sis import TaskLayout
+from .sis import ReducedBlock, TaskLayout
 
 _JITTER = 1e-10
 
@@ -90,6 +90,12 @@ def compute_gram_stats(
 
 def _solve_tuple_task(g, s_, b, n, ysum, yty, idx):
     """SSE of the LSQ fit (with intercept) for one tuple in one task."""
+    if np.dtype(g.dtype).itemsize < 4:
+        # sub-fp32 Gram stats (bf16 precision mode): the SPD solve has no
+        # sub-fp32 Cholesky lowering — bf16 is a storage/matmul format,
+        # solves run in fp32
+        g, s_, b = g.astype(jnp.float32), s_.astype(jnp.float32), b.astype(jnp.float32)
+        n, ysum, yty = (v.astype(jnp.float32) for v in (n, ysum, yty))
     gs = g[jnp.ix_(idx, idx)]                       # (n, n)
     ss = s_[idx]                                    # (n,)
     bs = b[idx]                                     # (n,)
@@ -125,10 +131,14 @@ def coefficients_for(
     """(coefs (T,n), intercepts (T,)) of the LSQ fit for one tuple."""
     idx = jnp.asarray(idx, jnp.int32)
     coefs, intercepts = [], []
+    solve_dtype = (
+        jnp.float32 if np.dtype(stats.gram.dtype).itemsize < 4
+        else stats.gram.dtype
+    )
     for t in range(stats.n_tasks):
         k = idx.shape[0]
-        gs = stats.gram[t][jnp.ix_(idx, idx)]
-        ss = stats.fsum[t][idx]
+        gs = stats.gram[t][jnp.ix_(idx, idx)].astype(solve_dtype)
+        ss = stats.fsum[t][idx].astype(solve_dtype)
         a = jnp.zeros((k + 1, k + 1), gs.dtype)
         a = a.at[:k, :k].set(gs).at[:k, k].set(ss).at[k, :k].set(ss)
         a = a.at[k, k].set(stats.n[t]) + _JITTER * jnp.eye(k + 1, dtype=gs.dtype)
@@ -289,7 +299,7 @@ def l0_search(
     method: str = "gram",
     engine=None,
     journal=None,
-    dtype=jnp.float64,
+    dtype=None,  # None -> the engine's compute dtype (precision registry)
     prefetch_depth: int = 2,
     prob=None,
 ) -> L0Result:
@@ -323,6 +333,8 @@ def l0_search(
     from ..engine.streaming import BlockPrefetcher
 
     engine = get_engine(engine)
+    if dtype is None:
+        dtype = engine.backend.compute_dtype
     n_dim, n_keep, block = int(n_dim), int(n_keep), int(block)
     m = int(np.asarray(x).shape[0])
     if not engine.backend.l0_ranking_exact(method, n_dim, n_keep,
@@ -388,25 +400,53 @@ def l0_search(
 
     def score_block(bi: int):
         tuples = enum.block_tuples(bi)
-        return tuples, np.asarray(engine.l0_scores(prob, tuples))
+        # a reducing backend (engine/sharded.py) hands back a ReducedBlock
+        # of O(n_keep) winners — only they cross the host boundary; every
+        # other backend returns the block's full SSE vector
+        return tuples, engine.l0_scores(prob, tuples, n_keep=n_keep)
+
+    def winners_of(tuples, bi: int, indices: np.ndarray) -> np.ndarray:
+        """Block-local winner indices -> (k, n_dim) int64 tuples.
+
+        Widths ≥ 3 enumerate on device; unranking the k winning ranks on
+        host keeps the block itself device-resident (no B×n transfer just
+        to gather k rows).
+        """
+        if n_dim <= 2:
+            return np.asarray(tuples)[indices].astype(np.int64)
+        from ..kernels.unrank import unrank_lex_host
+
+        base = bi * block
+        return np.asarray(
+            [unrank_lex_host(base + int(i), m, n_dim) for i in indices],
+            np.int64,
+        )
 
     stream = BlockPrefetcher(
         score_block, range(start_block, enum.n_blocks), depth=prefetch_depth
     )
-    for bi, (tuples, sses) in stream:
-        n_eval += len(sses)
+    for bi, (tuples, res) in stream:
+        n_eval += len(tuples)
         # merge block top-k into running top-k (host).  A block whose best
         # SSE cannot beat the current k-th best contributes nothing — skip
         # the concatenate+argsort (ties lose to incumbents either way).
         # Negated comparison so a NaN block-min (a backend without the
         # finite→inf guard) falls through to the merge, never to a skip.
-        if len(sses) and not (sses.min() >= best_sse[-1]):
-            k = min(n_keep, len(sses))
-            part = np.argpartition(sses, k - 1)[:k]
-            cat_sse = np.concatenate([best_sse, sses[part]])
-            cat_tup = np.concatenate(
-                [best_tuples, np.asarray(tuples)[part].astype(np.int64)]
-            )
+        blk_sse = blk_tup = None
+        if isinstance(res, ReducedBlock):
+            if len(res) and not (res.scores.min() >= best_sse[-1]):
+                blk_sse = res.scores
+                blk_tup = winners_of(tuples, bi, res.indices)
+        else:
+            sses = np.asarray(res)
+            if len(sses) and not (sses.min() >= best_sse[-1]):
+                k = min(n_keep, len(sses))
+                part = np.argpartition(sses, k - 1)[:k]
+                blk_sse = sses[part]
+                blk_tup = np.asarray(tuples)[part].astype(np.int64)
+        if blk_sse is not None:
+            cat_sse = np.concatenate([best_sse, blk_sse])
+            cat_tup = np.concatenate([best_tuples, blk_tup])
             order = np.argsort(cat_sse, kind="stable")[:n_keep]
             best_sse, best_tuples = cat_sse[order], cat_tup[order]
         if journal is not None:

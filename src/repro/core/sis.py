@@ -138,9 +138,56 @@ def score_block(values: jnp.ndarray, ctx: ScoreContext) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# host-side top-k merge (paper: coefficients "transferred back to CPU, ...
-# used to rank the features and select the top candidates")
+# top-k merge.  Two block shapes flow into the merge: full score vectors
+# (host-side ranking, the paper's "transferred back to CPU ... used to rank
+# the features") and *pre-reduced* blocks — a backend that merges on device
+# (engine/sharded.py) returns only the block's top-k (index, score) winners,
+# so O(k) payloads cross the host boundary instead of O(B) score vectors.
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReducedBlock:
+    """Device-reduced top-k of one score block.
+
+    ``indices`` are positions *within the submitted block* (0 ≤ i < the
+    block length the caller dispatched); ``scores`` are sorted best-first
+    (descending for SIS projection scores, ascending for ℓ0 SSEs).  Entries
+    are always finite: padding rows, invalid candidates and ±inf sentinels
+    are filtered before the block crosses the host boundary.  Top-k of a
+    union equals top-k of the per-block top-k union, so merging reduced
+    blocks is exactly as good as merging full vectors.
+    """
+
+    indices: np.ndarray   # (k',) int64, k' <= n_keep
+    scores: np.ndarray    # (k',) float64, best-first
+    n_source: int         # block length the reduction ran over
+
+    def __len__(self) -> int:
+        return len(self.indices)
+
+    @staticmethod
+    def reduce_host(
+        scores: np.ndarray,
+        n_keep: int,
+        mask: Optional[np.ndarray] = None,
+        largest: bool = True,
+    ) -> "ReducedBlock":
+        """Host-side reference reduction (backends without a device merge).
+
+        Stable first-occurrence tie order — the same order a stable
+        descending/ascending sort of the full vector would produce, so a
+        host-reduced block merges bit-identically to the full vector.
+        """
+        s = np.asarray(scores, np.float64)
+        if mask is not None:
+            s = np.where(np.asarray(mask, bool), s, -np.inf if largest else np.inf)
+        order = np.argsort(-s if largest else s, kind="stable")[: int(n_keep)]
+        keep = np.isfinite(s[order])
+        order = order[keep]
+        return ReducedBlock(
+            indices=order.astype(np.int64), scores=s[order], n_source=len(s)
+        )
+
 
 @dataclasses.dataclass
 class TopK:
@@ -164,6 +211,14 @@ class TopK:
         self.scores = all_scores[idx]
         self.tags = [all_tags[i] for i in idx]
 
+    def push_reduced(self, rb: ReducedBlock, tag_of) -> None:
+        """Merge a pre-reduced block; ``tag_of(i)`` builds the tag for
+        block-local index ``i`` — called only for the O(k) winners, so the
+        host never materializes a block-length tag list."""
+        if len(rb) == 0:
+            return
+        self.push(rb.scores, [tag_of(int(i)) for i in rb.indices])
+
 
 # ---------------------------------------------------------------------------
 # full screen over a FeatureSpace
@@ -184,12 +239,18 @@ def sis_screen(
     Screens both materialized features and deferred last-rung candidates
     (paper P3 on-the-fly path).  All screening math runs on the supplied
     execution ``engine`` (engine/) — this function only owns batching and
-    the host-side top-k merge, so there is no per-backend branching here.
+    the top-k merge policy, so there is no per-backend branching here: a
+    backend that merges on device (``engine.reduces_blocks``) hands back
+    :class:`ReducedBlock` winners and the push indexes tags lazily; every
+    other backend returns full score vectors and the classic host merge
+    runs.
     """
     from ..engine import get_engine
 
     engine = get_engine(engine)
-    ctx = build_score_context(residuals, layout)
+    ctx = build_score_context(
+        residuals, layout, dtype=engine.backend.score_ctx_dtype
+    )
     x = fspace.values_matrix().astype(np.float64)
 
     top = TopK(k=n_sis * overselect)
@@ -198,13 +259,21 @@ def sis_screen(
     if len(x):
         for lo in range(0, len(x), batch):
             hi = min(lo + batch, len(x))
-            s = np.asarray(engine.sis_scores(x[lo:hi], ctx), np.float64).copy()
-            tags = [("feat", fid) for fid in range(lo, hi)]
-            # mask out already-selected features
-            for i, fid in enumerate(range(lo, hi)):
-                if fid in exclude:
-                    s[i] = -np.inf
-            top.push(s, tags)
+            # mask of screenable rows: already-selected features must not
+            # occupy winner slots (applied on device on reducing backends)
+            blk_mask = None
+            if exclude:
+                blk_mask = np.ones(hi - lo, bool)
+                for fid in exclude:
+                    if lo <= fid < hi:
+                        blk_mask[fid - lo] = False
+            res = engine.sis_scores(x[lo:hi], ctx, n_keep=top.k, mask=blk_mask)
+            if isinstance(res, ReducedBlock):
+                top.push_reduced(res, lambda i, lo=lo: ("feat", lo + i))
+            else:
+                # the Engine already applied blk_mask (-inf) on this path
+                top.push(np.asarray(res, np.float64),
+                         [("feat", fid) for fid in range(lo, hi)])
 
     # 2) deferred last-rung candidates: generate -> score -> discard.
     #    Double-buffered (engine/streaming.py): block k+1's child-row
@@ -215,17 +284,25 @@ def sis_screen(
     def score_deferred(blk: CandidateBlock):
         return engine.sis_scores_deferred(
             blk.op_id, x[blk.child_a], x[blk.child_b], ctx,
-            fspace.l_bound, fspace.u_bound,
+            fspace.l_bound, fspace.u_bound, n_keep=top.k,
         )
 
     for blk, s in BlockPrefetcher(
         score_deferred, fspace.iter_candidate_batches(batch)
     ):
-        tags = [
-            ("cand", blk.op_id, int(a), int(b))
-            for a, b in zip(blk.child_a, blk.child_b)
-        ]
-        top.push(s, tags)
+        if isinstance(s, ReducedBlock):
+            top.push_reduced(
+                s,
+                lambda i, blk=blk: (
+                    "cand", blk.op_id, int(blk.child_a[i]), int(blk.child_b[i])
+                ),
+            )
+        else:
+            tags = [
+                ("cand", blk.op_id, int(a), int(b))
+                for a, b in zip(blk.child_a, blk.child_b)
+            ]
+            top.push(s, tags)
 
     # 3) materialize winners, skipping dups, until n_sis collected
     selected: List[Feature] = []

@@ -45,7 +45,11 @@ class SissoConfig:
     sis_batch: int = 1 << 16
     l0_method: str = "gram"             # 'gram' (TPU-native) | 'qr' (paper-faithful)
     backend: str = "jnp"                # reference | jnp | pallas | sharded
-    precision: str = "fp64"
+    #                                     | 'sharded:<inner>' (distribution
+    #                                     wrapper over jnp/pallas/reference)
+    precision: str = "fp64"             # bf16 | fp32 | fp64 (precision.py);
+    #                                     threaded into the engine's compute
+    #                                     dtype (SIS matmuls, ℓ0 solves)
     max_pairs_per_op: Optional[int] = None
     seed: int = 0
     # deprecated aliases (pre-engine-layer configs)
@@ -119,6 +123,10 @@ class SissoSolver:
         self.cfg = config
         self.dtype = set_precision(config.precision)
         self.engine = get_engine(engine or config.backend)
+        # thread the configured precision into the engine: backends run
+        # their screening matmuls / ℓ0 solves at this dtype (the reference
+        # oracle stays literal fp64)
+        self.engine.set_precision(config.precision)
 
     def fit(
         self,

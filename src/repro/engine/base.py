@@ -13,7 +13,8 @@ reference   host numpy, literal textbook formulas — the bit-exact oracle
 jnp         jit-cached XLA (MXU matmuls + vmapped solves)
 pallas      jnp + Pallas kernels on the hot paths (fused gen+SIS,
             ℓ0 pair tiles); interpret mode on CPU, Mosaic on TPU
-sharded     jnp math inside shard_map over a device mesh
+sharded     composable distribution wrapper over any inner backend
+            (``sharded:pallas`` etc.): shard_map + device top-k merges
 ========== =============================================================
 
 Core code (``core/sis.py``, ``core/l0.py``, ``core/feature_space.py``)
@@ -30,7 +31,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.sis import ScoreContext, TaskLayout
+from ..core.sis import ReducedBlock, ScoreContext, TaskLayout
 from ..core.l0 import GramStats
 
 
@@ -69,13 +70,49 @@ class Backend(abc.ABC):
       implementation.  ``None`` means the backend's one implementation
       covers every width (reference, jnp).  Replaces the former boolean
       ``l0_pairs_only`` flag now that the Pallas path covers widths 2–4.
+    * ``reduces_blocks`` — the backend merges score blocks *on device*:
+      when a caller passes ``n_keep`` through the :class:`Engine`, the
+      ``*_topk`` entry points return a
+      :class:`~repro.core.sis.ReducedBlock` of O(k) winners instead of a
+      full block-length vector (engine/sharded.py).
     * ``bit_exact_oracle`` — results define the parity baseline.
+
+    Precision: ``compute_dtype`` (set via :meth:`set_precision` from the
+    ``precision.py`` registry) is the dtype device backends run the
+    screening matmuls and ℓ0 solves in; the fp64 default preserves the
+    historical pins.  The reference backend stays a literal fp64 oracle
+    regardless.
     """
 
     name: str = "abstract"
     fused_deferred: bool = False
     l0_widths: Optional[Tuple[int, ...]] = None
+    reduces_blocks: bool = False
     bit_exact_oracle: bool = False
+    compute_dtype: Any = np.float64
+
+    def set_precision(self, precision: str) -> "Backend":
+        """Select the compute dtype by registry name (bf16 | fp32 | fp64).
+
+        Goes through :func:`repro.precision.set_precision`, the owner of
+        the global x64 switch, so requesting fp64 works outside the solver
+        too."""
+        from ..precision import set_precision
+
+        self.compute_dtype = set_precision(precision)
+        return self
+
+    @property
+    def score_ctx_dtype(self):
+        """Master dtype for screening-context operands (membership,
+        normalized residuals).  Capped at fp32 — the historical storage
+        format, per the paper's FP32 mode — unless the compute dtype is
+        narrower (bf16); backends upcast at the matmul."""
+        return (
+            self.compute_dtype
+            if np.dtype(self.compute_dtype).itemsize < 4
+            else np.float32
+        )
 
     # -- phase 1: candidate evaluation + value rules -------------------
     @abc.abstractmethod
@@ -115,6 +152,50 @@ class Backend(abc.ABC):
         values, valid = self.eval_block(op_id, a, b, l_bound, u_bound)
         scores = self.sis_scores(values, ctx)
         return np.where(valid, scores, -np.inf)
+
+    # -- pre-reduced blocks: device-merged top-k entry points ----------
+    #
+    # The Engine routes through these (instead of the full-vector methods
+    # above) when the caller supplies ``n_keep`` and the backend declares
+    # ``reduces_blocks``.  The defaults reduce on host with the stable
+    # tie order the full-vector TopK merge would produce, so a reducing
+    # wrapper (engine/sharded.py) and a plain backend are interchangeable
+    # winner-for-winner.
+
+    def sis_topk(
+        self,
+        values: np.ndarray,
+        ctx: ScoreContext,
+        n_keep: int,
+        mask: Optional[np.ndarray] = None,
+    ) -> ReducedBlock:
+        """Top-``n_keep`` of a materialized block; ``mask`` rows excluded."""
+        return ReducedBlock.reduce_host(
+            self.sis_scores(values, ctx), n_keep, mask=mask, largest=True
+        )
+
+    def sis_topk_deferred(
+        self,
+        op_id: int,
+        a: np.ndarray,
+        b: np.ndarray,
+        ctx: ScoreContext,
+        l_bound: float,
+        u_bound: float,
+        n_keep: int,
+    ) -> ReducedBlock:
+        """Top-``n_keep`` of a deferred candidate block."""
+        return ReducedBlock.reduce_host(
+            self.sis_scores_deferred(op_id, a, b, ctx, l_bound, u_bound),
+            n_keep, largest=True,
+        )
+
+    def l0_topk(self, prob: "L0Problem", tuples: np.ndarray,
+                n_keep: int) -> ReducedBlock:
+        """Best-``n_keep`` (ascending SSE) of one tuple block."""
+        return ReducedBlock.reduce_host(
+            self.l0_scores(prob, tuples), n_keep, largest=False
+        )
 
     # -- phase 3: ℓ0 regression ----------------------------------------
     def prepare_l0(
@@ -170,6 +251,14 @@ class Engine:
     their math runs.  Exists as its own object (rather than passing the
     backend around) so cross-phase policy — streaming, async double
     buffering, multi-host merges — lands here without touching core code.
+
+    The ``n_keep`` keywords are how distribution composes in: when the
+    caller states how many winners it will keep *and* the backend merges
+    on device (``reduces_blocks``), the call returns a
+    :class:`~repro.core.sis.ReducedBlock` of O(n_keep) winners instead of
+    a block-length score vector — the host boundary carries k-sized
+    payloads, never full scores.  Callers that omit ``n_keep`` always get
+    the classic full vectors.
     """
 
     def __init__(self, backend: Backend):
@@ -179,24 +268,47 @@ class Engine:
     def name(self) -> str:
         return self.backend.name
 
+    @property
+    def reduces_blocks(self) -> bool:
+        return self.backend.reduces_blocks
+
+    def set_precision(self, precision: str) -> "Engine":
+        self.backend.set_precision(precision)
+        return self
+
     def __repr__(self) -> str:
         return f"Engine({self.backend.name})"
 
     def eval_block(self, op_id, a, b, l_bound, u_bound):
         return self.backend.eval_block(op_id, a, b, l_bound, u_bound)
 
-    def sis_scores(self, values, ctx):
-        return self.backend.sis_scores(values, ctx)
+    def sis_scores(self, values, ctx, n_keep=None, mask=None):
+        if n_keep is not None and self.backend.reduces_blocks:
+            return self.backend.sis_topk(values, ctx, n_keep, mask=mask)
+        scores = self.backend.sis_scores(values, ctx)
+        if mask is not None:
+            # honor the exclusion mask on the full-vector path too — the
+            # kwarg must mean the same thing on every backend
+            scores = np.where(np.asarray(mask, bool), scores, -np.inf)
+        return scores
 
-    def sis_scores_deferred(self, op_id, a, b, ctx, l_bound, u_bound):
+    def sis_scores_deferred(self, op_id, a, b, ctx, l_bound, u_bound,
+                            n_keep=None):
+        if n_keep is not None and self.backend.reduces_blocks:
+            return self.backend.sis_topk_deferred(
+                op_id, a, b, ctx, l_bound, u_bound, n_keep
+            )
         return self.backend.sis_scores_deferred(
             op_id, a, b, ctx, l_bound, u_bound
         )
 
-    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64):
+    def prepare_l0(self, x, y, layout, method="gram", dtype=None):
+        dtype = self.backend.compute_dtype if dtype is None else dtype
         return self.backend.prepare_l0(x, y, layout, method=method, dtype=dtype)
 
-    def l0_scores(self, prob, tuples):
+    def l0_scores(self, prob, tuples, n_keep=None):
+        if n_keep is not None and self.backend.reduces_blocks:
+            return self.backend.l0_topk(prob, tuples, n_keep)
         return self.backend.l0_scores(prob, tuples)
 
     def eval_program(self, program, x):

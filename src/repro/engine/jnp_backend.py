@@ -57,6 +57,9 @@ class JnpBackend(Backend):
         return np.asarray(fn(jnp.asarray(x, jnp.float64)), np.float64)
 
     def eval_block(self, op_id, a, b, l_bound, u_bound):
+        # deliberately fp64 at every precision: candidate *values* are the
+        # feature store's master copy and the validity rules' operand —
+        # precision selects the screening/solve dtype, not the store's
         v, valid = _eval_jit(
             int(op_id), jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64),
             float(l_bound), float(u_bound),
@@ -64,7 +67,7 @@ class JnpBackend(Backend):
         return np.asarray(v, np.float64), np.asarray(valid)
 
     def sis_scores(self, values, ctx: ScoreContext) -> np.ndarray:
-        v = jnp.asarray(values, jnp.float64)
+        v = jnp.asarray(values, self.compute_dtype)
         scores = _score_jit(
             v,
             jnp.asarray(ctx.membership, v.dtype),
@@ -72,7 +75,7 @@ class JnpBackend(Backend):
             jnp.asarray(ctx.counts, v.dtype),
             ctx.n_residuals,
         )
-        return np.asarray(scores)
+        return np.asarray(scores, np.float64)
 
     def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64):
         prob = super().prepare_l0(x, y, layout, method=method, dtype=dtype)

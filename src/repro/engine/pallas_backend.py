@@ -46,6 +46,18 @@ class PallasBackend(JnpBackend):
         # the gather path); must comfortably exceed any caller's n_keep
         self.rescore_k = int(rescore_k)
 
+    @property
+    def resolved_interpret(self) -> bool:
+        """The interpret flag with the off-TPU auto-default applied.
+
+        The distribution wrapper (engine/sharded.py) runs this backend's
+        fused kernel inside ``shard_map`` and needs the resolved value —
+        shard_map closures are cached per static config, so ``None`` must
+        collapse to a concrete bool exactly once, here.
+        """
+        return kops._interpret_default() if self.interpret is None \
+            else self.interpret
+
     def sis_scores_deferred(self, op_id, a, b, ctx: ScoreContext,
                             l_bound, u_bound):
         scores = kops.fused_gen_sis(

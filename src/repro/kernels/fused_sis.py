@@ -36,7 +36,7 @@ _EPS = 1e-12
 
 
 def _kernel(
-    a_ref, b_ref, m_ref, yt_ref, cnt_ref, out_ref,
+    a_ref, b_ref, m_ref, yt_ref, cnt_ref, nv_ref, out_ref,
     *, op_id: int, n_tasks: int, n_residuals: int,
     l_bound: float, u_bound: float,
 ):
@@ -45,6 +45,7 @@ def _kernel(
     m = m_ref[...]            # (T, s_pad)
     yt = yt_ref[...]          # (R*T, s_pad)
     cnt = cnt_ref[...]        # (1, T)
+    nv = nv_ref[0, 0]         # count of real (non-padding) candidate rows
 
     v = apply_op(op_id, a, b)                       # (B, s_pad)
     col_mask = m.sum(axis=0) > 0                    # (s_pad,)
@@ -66,6 +67,13 @@ def _kernel(
     valid = value_rules_from_moments(
         finite, max_abs, sums, sumsq, cnt, l_bound, u_bound
     ) & jnp.isfinite(score)
+    # padding rows are invalidated *in-kernel*: their global row index
+    # (grid step * block + lane) is >= n_valid, so a device-side top-k
+    # downstream can never select one (host slice-off is only a courtesy)
+    rows = pl.program_id(0) * bsz + jax.lax.broadcasted_iota(
+        jnp.int32, (bsz,), 0
+    )
+    valid = valid & (rows < nv)
     out_ref[...] = jnp.where(valid, score, -jnp.inf)[None, :]
 
 
@@ -81,11 +89,15 @@ def fused_gen_sis_pallas(
     u_bound: float,
     block_b: int = 256,
     interpret: bool = False,
+    n_valid=None,  # real candidate rows (int or traced scalar); None -> all
 ) -> jnp.ndarray:
     bp, s_pad = a.shape
     t = membership.shape[0]
     assert bp % block_b == 0 and s_pad % 128 == 0, (bp, block_b, s_pad)
     nb = bp // block_b
+    if n_valid is None:
+        n_valid = bp
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
     kern = functools.partial(
         _kernel, op_id=op_id, n_tasks=t, n_residuals=n_residuals,
         l_bound=float(l_bound), u_bound=float(u_bound),
@@ -99,9 +111,10 @@ def fused_gen_sis_pallas(
             pl.BlockSpec((t, s_pad), lambda i: (0, 0)),
             pl.BlockSpec((y_tilde.shape[0], s_pad), lambda i: (0, 0)),
             pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_b), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block_b), jnp.float32),
         interpret=interpret,
-    )(a, b, membership, y_tilde, counts)
+    )(a, b, membership, y_tilde, counts, nv)
     return out.reshape(-1)

@@ -62,7 +62,7 @@ def fused_gen_sis(
     scores = fused_gen_sis_pallas(
         op_id, a_p, b_p, m_p, yt_p, cnt,
         n_residuals=ctx.n_residuals, l_bound=l_bound, u_bound=u_bound,
-        block_b=block_b, interpret=interpret,
+        block_b=block_b, interpret=interpret, n_valid=bsz,
     )
     return scores[:bsz]
 

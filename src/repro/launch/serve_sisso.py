@@ -28,7 +28,8 @@ def main():
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--dim", type=int, default=None)
     ap.add_argument("--backend", default=None,
-                    choices=(None, "reference", "jnp", "pallas", "sharded"))
+                    choices=(None, "reference", "jnp", "pallas", "sharded",
+                             "sharded:jnp", "sharded:pallas"))
     ap.add_argument("--vary-batch", action="store_true",
                     help="randomize batch sizes to exercise shape bucketing")
     ap.add_argument("--seed", type=int, default=0)

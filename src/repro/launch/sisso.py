@@ -1,7 +1,8 @@
 """SISSO launcher: run a test case end-to-end with a restartable journal.
 
     PYTHONPATH=src python -m repro.launch.sisso --case thermal [--full] \
-        [--backend reference|jnp|pallas|sharded] [--l0-method gram|qr] \
+        [--backend reference|jnp|pallas|sharded|sharded:pallas] \
+        [--l0-method gram|qr] \
         [--journal /tmp/l0.json] [--save /tmp/model.json]
 
 Fits through the canonical :mod:`repro.api` estimator, so the reported r²
@@ -31,8 +32,12 @@ def main():
     ap.add_argument("--case", default="thermal", choices=("thermal", "kaggle"))
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--backend", default=None,
-                    choices=("reference", "jnp", "pallas", "sharded"),
-                    help="execution engine for all phases incl. predict")
+                    choices=("reference", "jnp", "pallas", "sharded",
+                             "sharded:jnp", "sharded:pallas",
+                             "sharded:reference"),
+                    help="execution engine for all phases incl. predict; "
+                         "'sharded:<inner>' composes the distribution "
+                         "wrapper over the named inner backend")
     ap.add_argument("--l0-method", "--engine", dest="l0_method",
                     default="gram", choices=("gram", "qr"),
                     help="l0 math: Gram closed form or paper-faithful QR "

@@ -19,11 +19,18 @@ _DTYPES = {
 
 
 def set_precision(name: str):
-    """Enable the requested precision; returns the jnp dtype."""
+    """Enable the requested precision; returns the jnp dtype.
+
+    x64 is enabled for *every* precision: ``name`` selects the screening /
+    solve compute dtype (``Backend.compute_dtype``), while the feature
+    store and validity rules keep an fp64 master copy regardless.  Gating
+    x64 on the fp64 mode made those pins silently truncate to fp32 in a
+    fresh fp32-configured process but hold real fp64 if any earlier code
+    had requested fp64 — results depended on process history.
+    """
     if name not in _DTYPES:
         raise ValueError(f"precision must be one of {sorted(_DTYPES)}, got {name}")
-    if name == "fp64":
-        jax.config.update("jax_enable_x64", True)
+    jax.config.update("jax_enable_x64", True)
     return _DTYPES[name]
 
 

@@ -16,7 +16,7 @@ from repro.core.l0 import l0_search
 from repro.core.sis import TaskLayout, build_score_context, sis_screen
 from repro.engine import BACKENDS, Engine, get_engine
 
-DEVICE_BACKENDS = ["jnp", "pallas", "sharded"]
+DEVICE_BACKENDS = ["jnp", "pallas", "sharded", "sharded:pallas"]
 ALL_BACKENDS = ["reference"] + DEVICE_BACKENDS
 
 
