@@ -1,0 +1,79 @@
+"""Classification-problem benchmarks (the Problem layer, ARCHITECTURE.md).
+
+Times the two classification hot paths — the 1D domain-overlap SIS screen
+and the ℓ0 overlap tuple sweep — per backend, plus an end-to-end
+``SissoClassifier`` fit on the synthetic separable case, and records the
+rows to ``BENCH_classify.json``.  The regression twin of every number is
+in ``BENCH_backends.json`` / ``BENCH_l0.json``; together they track that
+making the objective pluggable did not tax either problem.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import SissoClassifier
+from repro.core.l0 import l0_search
+from repro.core.problem import get_problem
+from repro.core.sis import TaskLayout
+from repro.data import classification_dataset
+from repro.engine import get_engine
+
+from .common import emit, reset_bench_rows, time_call, write_bench_json
+
+BACKENDS = ("reference", "jnp", "pallas", "sharded")
+
+
+def main() -> None:
+    reset_bench_rows()
+    x, labels, names = classification_dataset(n_samples=160, seed=0)
+    y = (labels == "above").astype(float)
+    s = x.shape[1]
+    layout = TaskLayout.single(s)
+    prob = get_problem("classification")
+
+    # SIS overlap screen over a block of candidate rows
+    rng = np.random.default_rng(0)
+    block = rng.uniform(0.5, 3.0, (2048, s))
+    for backend in BACKENDS:
+        eng = get_engine(backend)
+        ctx = prob.build_sis_context(np.ones((1, s)), y, layout,
+                                     dtype=eng.backend.score_ctx_dtype)
+        if backend == "reference":
+            # the host oracle is O(B·S) python loops; time a smaller block
+            secs = time_call(lambda: eng.sis_scores(block[:256], ctx))
+            emit(f"classify_sis_{backend}", secs * 1e6, "rows=256")
+        else:
+            secs = time_call(lambda: eng.sis_scores(block, ctx))
+            emit(f"classify_sis_{backend}", secs * 1e6, f"rows={len(block)}")
+
+    # ℓ0 overlap sweep (width 2 over a 24-feature subspace)
+    xs = rng.uniform(0.5, 3.0, (24, s))
+    xs[0] = x[0] * x[1]  # keep one separating feature in the subspace
+    for backend in ("jnp", "pallas", "sharded"):
+        eng = get_engine(backend)
+        secs = time_call(
+            lambda: l0_search(xs, y, layout, n_dim=2, n_keep=10, block=128,
+                              engine=eng, problem="classification"))
+        n_tuples = 24 * 23 // 2
+        emit(f"classify_l0_w2_{backend}", secs * 1e6,
+             f"tuples_per_s={n_tuples / max(secs, 1e-9):.0f}")
+
+    # end-to-end fit + compiled predict (reference and jnp, the CI pair)
+    X = x.T
+    for backend in ("reference", "jnp"):
+        clf = SissoClassifier(max_rung=1, n_dim=2, n_sis=8, n_residual=3,
+                              op_names=("add", "sub", "mul", "div"),
+                              backend=backend)
+        secs = time_call(
+            lambda: clf.fit(X[:120], labels[:120], names=names),
+            repeats=1, warmup=0)
+        acc = clf.score(X[120:], labels[120:], dim=1)
+        emit(f"classify_fit_{backend}", secs * 1e6, f"holdout_acc={acc:.3f}")
+        secs = time_call(lambda: clf.predict(X))
+        emit(f"classify_predict_{backend}", secs * 1e6, f"samples={len(X)}")
+
+    write_bench_json("classify")
+
+
+if __name__ == "__main__":
+    main()

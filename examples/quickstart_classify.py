@@ -1,0 +1,60 @@
+"""Quickstart (classification): find a separating descriptor and ship it.
+
+The classification twin of ``examples/quickstart.py``: same estimator
+conventions, but the target is a set of class labels and the search
+minimizes the class-domain *overlap* of the descriptor space
+(core/problem.py) instead of a least-squares error.  The fitted surface
+is the LDA decision boundaries of the winning descriptor::
+
+    from repro.api import SissoClassifier, load_artifact
+
+    clf = SissoClassifier(max_rung=1, n_dim=2, n_sis=20)
+    clf.fit(X_train, labels_train, names=[...])
+    clf.predict(X_test)            # class labels
+    clf.predict_proba(X_test)      # softmax class probabilities
+    clf.save("phases.json")        # same versioned artifact pipeline
+
+Run it:
+
+    PYTHONPATH=src python examples/quickstart_classify.py
+"""
+import numpy as np
+
+from repro.api import SissoClassifier, load_artifact
+from repro.data import classification_dataset
+
+# synthetic separable case: the class is decided by the *composed*
+# feature f0 * f1 against a threshold, with a margin band
+x, labels, names = classification_dataset(n_samples=160, seed=0)
+X = x.T                      # (n_samples, n_features), sklearn orientation
+
+X_train, X_test = X[:120], X[120:]
+y_train, y_test = labels[:120], labels[120:]
+
+clf = SissoClassifier(
+    max_rung=1,            # one level of operator composition
+    n_dim=2,               # up to two-term descriptors
+    n_sis=20,              # SIS subspace per dimension
+    op_names=("add", "sub", "mul", "div"),
+)
+clf.fit(X_train, y_train, names=names)
+
+model = clf.model(1)       # best 1D descriptor
+print(model)
+print(f"descriptor overlap count: {model.n_overlap}")
+print(f"held-out accuracy: {clf.score(X_test, y_test, dim=1):.4f}")
+assert model.n_overlap == 0          # the planted boundary separates
+assert clf.score(X_test, y_test, dim=1) == 1.0
+
+# class probabilities from the per-task discriminants
+proba = clf.predict_proba(X_test, dim=1)
+assert np.allclose(proba.sum(axis=1), 1.0)
+
+# persistence: save -> load -> identical predictions; the artifact
+# records the problem kind, so the regressor path refuses to load it
+path = clf.save("/tmp/quickstart_phases.json")
+reloaded = load_artifact(path)
+assert reloaded.problem == "classification"
+assert np.array_equal(reloaded.predict(X_test, dim=1),
+                      clf.predict(X_test, dim=1))
+print("recovered the separating descriptor, artifact round-trips ✓")

@@ -1,34 +1,31 @@
-"""Closing the loop: SISSO discovers the LR schedule law from training
-telemetry produced by this framework's own trainer.
+"""Closing the loop: SISSO discovers an LR-schedule law from job telemetry.
 
-Trains a small LM while logging (step, lr, grad_norm, loss), then runs
-SISSO over the telemetry table.  SISSO should identify that `lr` follows
-the warmup-cosine law — i.e. it recovers an analytic relation between the
-logged quantities, exactly the paper's "interpretable models from tabular
-data" use case applied to systems telemetry.
+Synthesizes the (step, lr, ...) telemetry a warmup-cosine training run
+logs, then runs SISSO over the telemetry table.  SISSO should identify
+that `lr` follows the warmup-cosine law — i.e. it recovers an analytic
+relation between the logged quantities, exactly the paper's
+"interpretable models from tabular data" use case applied to systems
+telemetry.
 
     PYTHONPATH=src python examples/sisso_on_telemetry.py
 """
 import numpy as np
 
 from repro.api import SissoRegressor
-from repro.configs.qwen2_1p5b import reduced
-from repro.optim import AdamWConfig, cosine_lr
-import jax.numpy as jnp
 
-# --- phase 1: produce telemetry with the real schedule --------------------
-opt = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=200)
-steps = np.arange(1, 201)
-lrs = np.asarray([float(cosine_lr(opt, jnp.asarray(s))) for s in steps])
+# --- phase 1: telemetry of a warmup-cosine schedule -----------------------
+lr_peak, min_ratio = 3e-3, 0.1
+warmup_steps, total_steps = 20, 200
+steps = np.arange(1, total_steps + 1)
 
-# features available to an observer of the training run
-warm = np.minimum(steps / opt.warmup_steps, 1.0)
-prog = np.clip((steps - opt.warmup_steps)
-               / (opt.total_steps - opt.warmup_steps), 0, 1)
+warm = np.minimum(steps / warmup_steps, 1.0)
+prog = np.clip((steps - warmup_steps) / (total_steps - warmup_steps), 0, 1)
 cosine = 0.5 * (1 + np.cos(np.pi * prog))
+lrs = lr_peak * warm * (min_ratio + (1 - min_ratio) * cosine)
 noise = np.random.default_rng(0).normal(size=len(steps)) * 1e-6
 
-x = np.stack([warm, cosine, prog, steps / opt.total_steps, noise + 1.0])
+# features available to an observer of the training run
+x = np.stack([warm, cosine, prog, steps / total_steps, noise + 1.0])
 names = ["warmup", "cosine", "progress", "frac", "jitter"]
 
 # --- phase 2: SISSO on the telemetry --------------------------------------

@@ -6,20 +6,26 @@ execution-engine layer), versioned model persistence
 (:class:`FittedSisso` / :func:`load_artifact`), and a batched serving front
 end (:class:`SissoServer`, driven by ``repro.launch.serve_sisso``).
 
+The problem layer (core/problem.py) surfaces here as one estimator per
+objective: :class:`SissoRegressor` (continuous targets, r² scoring) and
+:class:`SissoClassifier` (categorical targets, domain-overlap descriptors
+with LDA decision boundaries, ``predict_proba``/``decision_function``).
+
 The array-major core driver remains available as
 :class:`repro.core.SissoSolver` for code that works in the paper's ``(P, S)``
 value-matrix layout.
 """
 from ..core.descriptor import DescriptorProgram, compile_features
 from .artifact import (
-    ARTIFACT_FORMAT, ARTIFACT_VERSION, DescriptorModel, FittedSisso,
-    load_artifact,
+    ARTIFACT_FORMAT, ARTIFACT_READABLE_VERSIONS, ARTIFACT_VERSION,
+    DescriptorModel, FittedSisso, load_artifact,
 )
-from .estimator import NotFittedError, SissoRegressor
+from .estimator import NotFittedError, SissoClassifier, SissoRegressor
 from .serving import SissoServer
 
 __all__ = [
-    "SissoRegressor", "NotFittedError", "FittedSisso", "DescriptorModel",
+    "SissoRegressor", "SissoClassifier", "NotFittedError", "FittedSisso",
+    "DescriptorModel",
     "DescriptorProgram", "compile_features", "load_artifact", "SissoServer",
-    "ARTIFACT_FORMAT", "ARTIFACT_VERSION",
+    "ARTIFACT_FORMAT", "ARTIFACT_VERSION", "ARTIFACT_READABLE_VERSIONS",
 ]

@@ -13,6 +13,12 @@ Artifact format history:
 
 * **v1** — initial format: config, names, units, task labels,
   ``models[dim] = [{program, coefs, intercepts, sse, exprs, units}]``.
+* **v2** — problem layer: the config records ``problem``
+  (regression | classification), the document adds ``class_labels``,
+  and each model adds ``problem`` plus — for classification — the
+  decision boundaries (``coefs (T, C, n)`` / ``intercepts (T, C)``
+  per-task LDA discriminants), ``classes`` and ``n_overlap``.  v1
+  documents load as regression.
 """
 from __future__ import annotations
 
@@ -30,7 +36,9 @@ from ..core.solver import SissoConfig
 from ..core.units import Unit
 
 ARTIFACT_FORMAT = "repro-sisso-artifact"
-ARTIFACT_VERSION = 1
+ARTIFACT_VERSION = 2
+#: artifact versions this library still reads (v1 loads as regression)
+ARTIFACT_READABLE_VERSIONS = (1, 2)
 
 #: config fields that are deprecated aliases, never serialized
 _CONFIG_SKIP = {"l0_engine", "use_kernels"}
@@ -56,14 +64,24 @@ def _unit_from_dict(d: dict) -> Unit:
 
 @dataclasses.dataclass
 class DescriptorModel:
-    """One fitted model: compiled descriptor + per-task linear read-out."""
+    """One fitted model: compiled descriptor + per-task linear read-out.
+
+    Problem-tagged: regression stores one coefficient row per task
+    (``coefs (T, n)``, ``sse`` the LSQ objective); classification stores
+    the decision boundaries — per-task, per-class LDA discriminants
+    (``coefs (T, C, n)``, ``intercepts (T, C)``) plus the label set and
+    the ℓ0 overlap objective the descriptor was selected by.
+    """
 
     program: DescriptorProgram
-    coefs: np.ndarray       # (T, n)
-    intercepts: np.ndarray  # (T,)
-    sse: float
+    coefs: np.ndarray       # (T, n) regression | (T, C, n) classification
+    intercepts: np.ndarray  # (T,)   regression | (T, C)    classification
+    sse: float              # ℓ0 objective (SSE, or overlap count + tie)
     exprs: tuple            # human-readable descriptor expressions
     units: tuple            # unit strings, aligned with exprs
+    problem: str = "regression"
+    classes: Optional[tuple] = None   # class labels (classification only)
+    n_overlap: Optional[int] = None   # integer overlap count (classification)
 
     @property
     def dim(self) -> int:
@@ -76,26 +94,44 @@ class DescriptorModel:
     def equation(self) -> str:
         terms = []
         for t in range(len(self.intercepts)):
-            parts = [f"{self.intercepts[t]:+.6g}"]
-            for c, e in zip(self.coefs[t], self.exprs):
-                parts.append(f"{c:+.6g}*{e}")
             label = f"task{t}: " if len(self.intercepts) > 1 else ""
-            terms.append(label + " ".join(parts))
+            if self.problem == "classification":
+                rows = []
+                for k, cls in enumerate(self.classes):
+                    parts = [f"{self.intercepts[t][k]:+.6g}"]
+                    for c, e in zip(self.coefs[t][k], self.exprs):
+                        parts.append(f"{c:+.6g}*{e}")
+                    rows.append(f"g[{cls!r}] = " + " ".join(parts))
+                terms.append(label + "; ".join(rows))
+            else:
+                parts = [f"{self.intercepts[t]:+.6g}"]
+                for c, e in zip(self.coefs[t], self.exprs):
+                    parts.append(f"{c:+.6g}*{e}")
+                terms.append(label + " ".join(parts))
         return "\n".join(terms)
 
     def __str__(self) -> str:
-        return f"DescriptorModel(dim={self.dim}, sse={self.sse:.6g})\n" \
-               f"{self.equation()}"
+        extra = (f", n_overlap={self.n_overlap}"
+                 if self.problem == "classification" else "")
+        return f"DescriptorModel(dim={self.dim}, sse={self.sse:.6g}" \
+               f"{extra})\n{self.equation()}"
 
     def to_dict(self) -> dict:
-        return {
+        doc = {
             "program": self.program.to_dict(),
             "coefs": np.asarray(self.coefs, np.float64).tolist(),
             "intercepts": np.asarray(self.intercepts, np.float64).tolist(),
             "sse": float(self.sse),
             "exprs": list(self.exprs),
             "units": list(self.units),
+            "problem": self.problem,
         }
+        if self.problem == "classification":
+            doc["classes"] = [_py(c) for c in self.classes]
+            doc["n_overlap"] = (
+                None if self.n_overlap is None else int(self.n_overlap)
+            )
+        return doc
 
     @staticmethod
     def from_dict(d: dict) -> "DescriptorModel":
@@ -106,6 +142,11 @@ class DescriptorModel:
             sse=float(d["sse"]),
             exprs=tuple(d["exprs"]),
             units=tuple(d["units"]),
+            problem=str(d.get("problem", "regression")),
+            classes=(None if d.get("classes") is None
+                     else tuple(d["classes"])),
+            n_overlap=(None if d.get("n_overlap") is None
+                       else int(d["n_overlap"])),
         )
 
 
@@ -120,8 +161,14 @@ class FittedSisso:
     units: Optional[List[Unit]] = None
     timings: Dict[str, float] = dataclasses.field(default_factory=dict)
     library_version: str = _LIB_VERSION
+    class_labels: Optional[List[Any]] = None  # classification label set
     _engines: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+
+    @property
+    def problem(self) -> str:
+        """Problem kind this artifact was fit for (config-recorded)."""
+        return getattr(self.config, "problem", "regression")
 
     # ------------------------------------------------------------------
     # model access
@@ -207,13 +254,49 @@ class FittedSisso:
 
     def predict(self, X, *, dim: Optional[int] = None, tasks=None,
                 backend: Optional[str] = None) -> np.ndarray:
-        """Predicted targets (n_samples,) for unseen samples."""
+        """Predictions (n_samples,) for unseen samples.
+
+        Regression: predicted targets.  Classification: predicted class
+        labels (argmax over the per-task discriminants)."""
         mdl = self.model(dim)
         xp = self._primary_rows(X)
         d = self._engine(backend).eval_program(mdl.program, xp)  # (n, S)
         codes = self._task_codes(tasks, xp.shape[1])
+        if mdl.problem == "classification":
+            df = self._discriminants(mdl, d, codes)              # (S, C)
+            return np.asarray(mdl.classes)[np.argmax(df, axis=1)]
         co = mdl.coefs[codes]                                    # (S, n)
         return (co * d.T).sum(axis=1) + mdl.intercepts[codes]
+
+    # -- classification surface ----------------------------------------
+    @staticmethod
+    def _discriminants(mdl: DescriptorModel, d: np.ndarray,
+                       codes: np.ndarray) -> np.ndarray:
+        """(S, C) per-class discriminants from descriptor values (n, S)."""
+        if mdl.problem != "classification":
+            raise ValueError(
+                f"this artifact holds a {mdl.problem} model; "
+                f"class discriminants are undefined"
+            )
+        co = mdl.coefs[codes]                 # (S, C, n)
+        return (co @ d.T[..., None])[..., 0] + mdl.intercepts[codes]
+
+    def decision_function(self, X, *, dim: Optional[int] = None, tasks=None,
+                          backend: Optional[str] = None) -> np.ndarray:
+        """Per-class discriminant values (n_samples, n_classes)."""
+        mdl = self.model(dim)
+        xp = self._primary_rows(X)
+        d = self._engine(backend).eval_program(mdl.program, xp)
+        codes = self._task_codes(tasks, xp.shape[1])
+        return self._discriminants(mdl, d, codes)
+
+    def predict_proba(self, X, *, dim: Optional[int] = None, tasks=None,
+                      backend: Optional[str] = None) -> np.ndarray:
+        """Softmax class probabilities (n_samples, n_classes)."""
+        df = self.decision_function(X, dim=dim, tasks=tasks, backend=backend)
+        z = df - df.max(axis=1, keepdims=True)
+        e = np.exp(z)
+        return e / e.sum(axis=1, keepdims=True)
 
     # ------------------------------------------------------------------
     # persistence
@@ -233,6 +316,10 @@ class FittedSisso:
             "units": None if self.units is None
             else [_unit_to_dict(u) for u in self.units],
             "task_labels": [_py(t) for t in self.task_labels],
+            "class_labels": (
+                None if self.class_labels is None
+                else [_py(c) for c in self.class_labels]
+            ),
             "timings": {k: float(v) for k, v in self.timings.items()},
             "models": {
                 str(dim): [m.to_dict() for m in models]
@@ -257,10 +344,10 @@ class FittedSisso:
                 f"not a {ARTIFACT_FORMAT} document "
                 f"(format={doc.get('format')!r})"
             )
-        if int(doc.get("version", -1)) != ARTIFACT_VERSION:
+        if int(doc.get("version", -1)) not in ARTIFACT_READABLE_VERSIONS:
             raise ValueError(
                 f"unsupported artifact version {doc.get('version')!r}; "
-                f"this library reads version {ARTIFACT_VERSION}"
+                f"this library reads versions {ARTIFACT_READABLE_VERSIONS}"
             )
         cfg_fields = {f.name for f in dataclasses.fields(SissoConfig)}
         cfg_kwargs = {
@@ -281,6 +368,10 @@ class FittedSisso:
             else [_unit_from_dict(u) for u in units],
             timings=dict(doc.get("timings", {})),
             library_version=str(doc.get("library_version", "unknown")),
+            class_labels=(
+                None if doc.get("class_labels") is None
+                else list(doc["class_labels"])
+            ),
         )
 
     @staticmethod

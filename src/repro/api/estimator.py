@@ -1,4 +1,16 @@
-"""sklearn-convention SISSO estimator — the canonical user-facing surface.
+"""sklearn-convention SISSO estimators — the canonical user-facing surface.
+
+One shared base (:class:`_BaseSisso`) owns the estimator plumbing —
+parameter handling, task encoding, the core-solver handoff, descriptor
+compilation and artifact persistence — and one subclass per *problem*
+(core/problem.py) owns the target encoding and the prediction surface:
+
+* :class:`SissoRegressor` — continuous targets, SSE objective,
+  ``predict`` returns values, ``score`` is r².
+* :class:`SissoClassifier` — categorical targets, domain-overlap
+  objective with an LDA separating refit; ``predict`` returns labels,
+  ``predict_proba`` softmax class probabilities over the per-task
+  discriminants, ``score`` is accuracy.
 
 ``fit(X, y)`` takes ``(n_samples, n_features)`` tabular input (transposed
 internally to the core's ``(P, S)`` value-matrix layout), learns the usual
@@ -12,13 +24,16 @@ sklearn here), ``transform`` exposes descriptor values in the
 ``save``/``load_artifact`` round-trip a fitted model through a versioned
 JSON artifact (api/artifact.py) without the training data.
 
-    from repro.api import SissoRegressor
+    from repro.api import SissoRegressor, SissoClassifier
 
     est = SissoRegressor(max_rung=1, n_dim=2, n_sis=20)
     est.fit(X_train, y_train, names=["radius", "charge", ...])
     y_hat = est.predict(X_test)          # compiled descriptor, any backend
-    d = est.transform(X_test)            # (n_samples, n_dim) descriptor
-    est.save("law.json")                 # versioned, data-free artifact
+
+    clf = SissoClassifier(max_rung=1, n_dim=2, n_sis=20)
+    clf.fit(X_train, labels_train, names=[...])
+    clf.predict(X_test); clf.predict_proba(X_test)
+    clf.save("phases.json")              # versioned, data-free artifact
 """
 from __future__ import annotations
 
@@ -35,6 +50,7 @@ from .artifact import DescriptorModel, FittedSisso, _py
 
 try:  # optional: inherit sklearn's estimator plumbing (tags, HTML repr)
     from sklearn.base import BaseEstimator as _SkBase
+    from sklearn.base import ClassifierMixin as _SkClassifier
     from sklearn.base import RegressorMixin as _SkRegressor
 except ImportError:  # sklearn absent: the manual contract below suffices
     _SkBase = object
@@ -42,20 +58,25 @@ except ImportError:  # sklearn absent: the manual contract below suffices
     class _SkRegressor:  # type: ignore[no-redef]
         pass
 
+    class _SkClassifier:  # type: ignore[no-redef]
+        pass
+
 
 class NotFittedError(RuntimeError):
     """Raised when predict/transform/score is called before fit."""
 
 
-class SissoRegressor(_SkRegressor, _SkBase):
-    """SISSO regressor with the scikit-learn estimator conventions.
+class _BaseSisso(_SkBase):
+    """Shared estimator plumbing; subclasses fix the problem kind.
 
     Constructor parameters mirror :class:`repro.core.SissoConfig` one-to-one
-    and are stored verbatim (the sklearn contract: no logic in ``__init__``,
-    so ``clone`` and grid-search parameter sweeps behave).
+    (minus ``problem``, which the subclass owns) and are stored verbatim
+    (the sklearn contract: no logic in ``__init__``, so ``clone`` and
+    grid-search parameter sweeps behave).
     """
 
-    _estimator_type = "regressor"
+    #: problem kind this estimator class drives (core/problem.py)
+    _problem = "regression"
 
     def __init__(
         self,
@@ -102,7 +123,7 @@ class SissoRegressor(_SkRegressor, _SkBase):
     def get_params(self, deep: bool = True) -> dict:
         return {name: getattr(self, name) for name in self._get_param_names()}
 
-    def set_params(self, **params) -> "SissoRegressor":
+    def set_params(self, **params) -> "_BaseSisso":
         valid = set(self._get_param_names())
         for name, value in params.items():
             if name not in valid:
@@ -114,7 +135,7 @@ class SissoRegressor(_SkRegressor, _SkBase):
         return self
 
     @classmethod
-    def from_config(cls, config: SissoConfig) -> "SissoRegressor":
+    def from_config(cls, config: SissoConfig) -> "_BaseSisso":
         """Build an estimator from a core :class:`SissoConfig`."""
         names = set(cls._get_param_names())
         return cls(**{
@@ -123,9 +144,16 @@ class SissoRegressor(_SkRegressor, _SkBase):
         })
 
     def _config(self) -> SissoConfig:
-        return SissoConfig(**{
+        return SissoConfig(problem=self._problem, **{
             name: getattr(self, name) for name in self._get_param_names()
         })
+
+    # ------------------------------------------------------------------
+    # target encoding (the problem-specific half of fit)
+    # ------------------------------------------------------------------
+    def _encode_target(self, y: np.ndarray):
+        """(core-facing y (S,) float, class labels or None)."""
+        return np.asarray(y, np.float64), None
 
     # ------------------------------------------------------------------
     # fit
@@ -133,15 +161,15 @@ class SissoRegressor(_SkRegressor, _SkBase):
     def fit(
         self,
         X,                      # (n_samples, n_features)
-        y,                      # (n_samples,)
+        y,                      # (n_samples,) targets / class labels
         *,
         names: Optional[Sequence[str]] = None,
         units: Optional[Sequence[Unit]] = None,
         tasks=None,             # (n_samples,) task labels, any hashables
         journal=None,
-    ) -> "SissoRegressor":
+    ) -> "_BaseSisso":
         X = np.asarray(X, np.float64)
-        y = np.asarray(y, np.float64)
+        y = np.asarray(y)
         if X.ndim != 2:
             raise ValueError("X must be (n_samples, n_features)")
         if y.shape != (X.shape[0],):
@@ -152,6 +180,8 @@ class SissoRegressor(_SkRegressor, _SkBase):
         )
         if len(names) != p:
             raise ValueError("names must have one entry per X column")
+
+        y_core, class_labels = self._encode_target(y)
 
         # task labels -> contiguous codes; core wants samples grouped by task
         if tasks is None:
@@ -166,7 +196,7 @@ class SissoRegressor(_SkRegressor, _SkBase):
             order = np.argsort(codes, kind="stable")
 
         xp = np.ascontiguousarray(X[order].T)   # (P, S) core layout
-        ys = y[order]
+        ys = y_core[order]
         task_ids = codes[order] if len(labels) > 1 else None
 
         solver = SissoSolver(self._config())
@@ -190,13 +220,8 @@ class SissoRegressor(_SkRegressor, _SkBase):
                         f"for dim-{dim} model {list(program.exprs)} "
                         f"(max |Δ| = {np.abs(got - want).max():g})"
                     )
-                compiled.append(DescriptorModel(
-                    program=program,
-                    coefs=np.asarray(mdl.coefs, np.float64),
-                    intercepts=np.asarray(mdl.intercepts, np.float64),
-                    sse=float(mdl.sse),
-                    exprs=tuple(f.expr for f in mdl.features),
-                    units=tuple(str(f.unit) for f in mdl.features),
+                compiled.append(self._descriptor_model(
+                    mdl, program, class_labels
                 ))
             models_by_dim[dim] = compiled
 
@@ -207,11 +232,27 @@ class SissoRegressor(_SkRegressor, _SkBase):
             task_labels=labels,
             units=list(units) if units is not None else None,
             timings=fit.timings,
+            class_labels=(
+                None if class_labels is None
+                else [_py(c) for c in class_labels]
+            ),
         )
         self.fit_result_ = fit          # core SissoFit (fspace, raw models)
         self.n_features_in_ = p
         self.feature_names_in_ = np.asarray(names, object)
         return self
+
+    def _descriptor_model(self, mdl, program, class_labels) -> DescriptorModel:
+        """Core model -> serializable compiled model (problem-specific)."""
+        return DescriptorModel(
+            program=program,
+            coefs=np.asarray(mdl.coefs, np.float64),
+            intercepts=np.asarray(mdl.intercepts, np.float64),
+            sse=float(mdl.sse),
+            exprs=tuple(f.expr for f in mdl.features),
+            units=tuple(str(f.unit) for f in mdl.features),
+            problem=self._problem,
+        )
 
     # ------------------------------------------------------------------
     # fitted surface
@@ -233,34 +274,39 @@ class SissoRegressor(_SkRegressor, _SkBase):
         """Best fitted model of dimension ``dim`` (default: highest)."""
         return self._fitted().model(dim)
 
-    def predict(self, X, *, dim: Optional[int] = None, tasks=None,
-                backend: Optional[str] = None) -> np.ndarray:
-        return self._fitted().predict(X, dim=dim, tasks=tasks, backend=backend)
-
     def transform(self, X, *, dim: Optional[int] = None,
                   backend: Optional[str] = None) -> np.ndarray:
         """Descriptor values (n_samples, dim) — the SISTransformer role."""
         return self._fitted().transform(X, dim=dim, backend=backend)
-
-    def score(self, X, y, *, dim: Optional[int] = None, tasks=None) -> float:
-        """Coefficient of determination r² (sklearn regressor convention)."""
-        y = np.asarray(y, np.float64)
-        r = y - self.predict(X, dim=dim, tasks=tasks)
-        ss_tot = float(((y - y.mean()) ** 2).sum())
-        return 1.0 - float((r * r).sum()) / max(ss_tot, 1e-300)
 
     def save(self, path: str) -> str:
         """Persist the fitted model as a versioned JSON artifact."""
         return self._fitted().save(path)
 
     @classmethod
-    def from_artifact(cls, path: str) -> "SissoRegressor":
-        """Reconstruct a fitted estimator from a saved artifact."""
+    def from_artifact(cls, path: str) -> "_BaseSisso":
+        """Reconstruct a fitted estimator from a saved artifact.
+
+        The artifact records its problem kind; loading it into the wrong
+        estimator class fails with a clear error rather than silently
+        producing the wrong prediction surface.
+        """
         fitted = FittedSisso.load(path)
+        kind = getattr(fitted.config, "problem", "regression")
+        if kind != cls._problem:
+            other = ("SissoClassifier" if kind == "classification"
+                     else "SissoRegressor")
+            raise ValueError(
+                f"artifact at {path!r} holds a {kind} model; load it with "
+                f"repro.api.{other}.from_artifact (or the problem-agnostic "
+                f"repro.api.load_artifact)"
+            )
         est = cls.from_config(fitted.config)
         est.fitted_ = fitted
         est.n_features_in_ = fitted.n_features_in
         est.feature_names_in_ = np.asarray(fitted.names, object)
+        if kind == "classification":
+            est.classes_ = np.asarray(fitted.class_labels)
         return est
 
     def __repr__(self) -> str:
@@ -268,3 +314,91 @@ class SissoRegressor(_SkRegressor, _SkBase):
             f"{k}={getattr(self, k)!r}" for k in self._get_param_names()
         )
         return f"{type(self).__name__}({params})"
+
+
+class SissoRegressor(_SkRegressor, _BaseSisso):
+    """SISSO regressor with the scikit-learn estimator conventions."""
+
+    _estimator_type = "regressor"
+    _problem = "regression"
+
+    def predict(self, X, *, dim: Optional[int] = None, tasks=None,
+                backend: Optional[str] = None) -> np.ndarray:
+        return self._fitted().predict(X, dim=dim, tasks=tasks, backend=backend)
+
+    def score(self, X, y, *, dim: Optional[int] = None, tasks=None) -> float:
+        """Coefficient of determination r² (sklearn regressor convention).
+
+        Multi-task fits center ``y`` **per task** — the null model is the
+        per-task mean (one intercept per task), so global centering would
+        count the between-task spread in ss_tot and inflate R²; matches
+        :meth:`repro.core.SissoModel.r2`.
+        """
+        y = np.asarray(y, np.float64)
+        r = y - self.predict(X, dim=dim, tasks=tasks)
+        if tasks is None:
+            ss_tot = float(((y - y.mean()) ** 2).sum())
+        else:
+            ss_tot = sum(
+                float(((y[g] - y[g].mean()) ** 2).sum())
+                for g in (np.asarray(tasks) == t
+                          for t in np.unique(np.asarray(tasks)))
+            )
+        return 1.0 - float((r * r).sum()) / max(ss_tot, 1e-300)
+
+
+class SissoClassifier(_SkClassifier, _BaseSisso):
+    """SISSO classifier: domain-overlap descriptors + LDA read-out.
+
+    The search minimizes the class-domain overlap of the descriptor space
+    (core/problem.py); the fitted surface is the per-task linear
+    discriminants of the ℓ0 winners.  ``classes_`` holds the label set in
+    sorted order (sklearn classifier convention).
+    """
+
+    _estimator_type = "classifier"
+    _problem = "classification"
+
+    def _encode_target(self, y):
+        classes, codes = np.unique(y, return_inverse=True)
+        if len(classes) < 2:
+            raise ValueError(
+                f"classification needs >= 2 classes, got {classes!r}"
+            )
+        self.classes_ = classes
+        return codes.astype(np.float64), classes
+
+    def _descriptor_model(self, mdl, program, class_labels):
+        return DescriptorModel(
+            program=program,
+            coefs=np.asarray(mdl.coefs, np.float64),        # (T, C, n)
+            intercepts=np.asarray(mdl.intercepts, np.float64),  # (T, C)
+            sse=float(mdl.score),
+            exprs=tuple(f.expr for f in mdl.features),
+            units=tuple(str(f.unit) for f in mdl.features),
+            problem="classification",
+            classes=tuple(_py(c) for c in class_labels),
+            n_overlap=int(mdl.n_overlap),
+        )
+
+    def decision_function(self, X, *, dim: Optional[int] = None, tasks=None,
+                          backend: Optional[str] = None) -> np.ndarray:
+        """Per-class discriminant values (n_samples, n_classes)."""
+        return self._fitted().decision_function(
+            X, dim=dim, tasks=tasks, backend=backend)
+
+    def predict(self, X, *, dim: Optional[int] = None, tasks=None,
+                backend: Optional[str] = None) -> np.ndarray:
+        """Predicted class labels (n_samples,)."""
+        return self._fitted().predict(X, dim=dim, tasks=tasks, backend=backend)
+
+    def predict_proba(self, X, *, dim: Optional[int] = None, tasks=None,
+                      backend: Optional[str] = None) -> np.ndarray:
+        """Softmax class probabilities (n_samples, n_classes)."""
+        return self._fitted().predict_proba(
+            X, dim=dim, tasks=tasks, backend=backend)
+
+    def score(self, X, y, *, dim: Optional[int] = None, tasks=None) -> float:
+        """Mean accuracy (sklearn classifier convention)."""
+        pred = self.predict(X, dim=dim, tasks=tasks)
+        return float(np.mean(pred == np.asarray(y)))

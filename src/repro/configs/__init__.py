@@ -1,32 +1,6 @@
-"""Config registry: SISSO test cases (paper Table II) + assigned LM archs."""
-from __future__ import annotations
+"""Config registry: the SISSO test cases (paper Table II).
 
-from typing import Callable, Dict
-
-_ARCH_REGISTRY: Dict[str, Callable] = {}
-
-
-def register_arch(name: str):
-    def deco(fn):
-        _ARCH_REGISTRY[name] = fn
-        return fn
-    return deco
-
-
-def get_arch_config(name: str, **overrides):
-    # import for registration side effects
-    from . import (  # noqa: F401
-        mamba2_2p7b, qwen2p5_32b, nemotron4_15b, gemma2_2b, qwen2_1p5b,
-        mixtral_8x7b, phi3p5_moe, internvl2_2b, whisper_large_v3, zamba2_2p7b,
-    )
-    if name not in _ARCH_REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_REGISTRY)}")
-    return _ARCH_REGISTRY[name](**overrides)
-
-
-def list_archs():
-    from . import (  # noqa: F401
-        mamba2_2p7b, qwen2p5_32b, nemotron4_15b, gemma2_2b, qwen2_1p5b,
-        mixtral_8x7b, phi3p5_moe, internvl2_2b, whisper_large_v3, zamba2_2p7b,
-    )
-    return sorted(_ARCH_REGISTRY)
+The LM architecture configs the seed repo carried were never imported by
+the SISSO path and have been pruned; the paper cases live in
+``sisso_thermal.py`` / ``sisso_kaggle.py`` and are imported directly.
+"""

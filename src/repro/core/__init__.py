@@ -1,21 +1,27 @@
 """SISSO core: the paper's contribution as composable JAX modules."""
 from .feature_space import FeatureSpace, Feature, CandidateBlock
-from .model import SissoModel
+from .model import SissoModel, SissoClassificationModel
 from .sis import TaskLayout, sis_screen, build_score_context, score_block
 from .l0 import (
     GramStats, TupleEnumerator, compute_gram_stats, score_tuples_gram,
     score_tuples_qr, l0_search, n_models, tuple_blocks,
+)
+from .problem import (
+    ClassificationProblem, ClassStats, Problem, RegressionProblem,
+    compute_class_stats, get_problem,
 )
 from .descriptor import DescriptorProgram, Instruction, compile_features
 from .solver import SissoConfig, SissoSolver, SissoRegressor, SissoFit
 from .units import Unit
 
 __all__ = [
-    "FeatureSpace", "Feature", "CandidateBlock", "SissoModel", "TaskLayout",
+    "FeatureSpace", "Feature", "CandidateBlock", "SissoModel",
+    "SissoClassificationModel", "TaskLayout",
     "sis_screen", "build_score_context", "score_block", "GramStats",
     "compute_gram_stats", "score_tuples_gram", "score_tuples_qr", "l0_search",
     "n_models", "tuple_blocks", "TupleEnumerator", "DescriptorProgram",
-    "Instruction",
+    "Instruction", "Problem", "RegressionProblem", "ClassificationProblem",
+    "ClassStats", "compute_class_stats", "get_problem",
     "compile_features", "SissoConfig", "SissoSolver", "SissoRegressor",
     "SissoFit", "Unit",
 ]

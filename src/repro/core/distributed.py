@@ -298,6 +298,117 @@ def qr_topk_scorer(layout: TaskLayout, dtype):
     return scorer
 
 
+def overlap_topk_scorer():
+    """Traceable classification overlap scorer for :func:`make_l0_topk_fn`.
+
+    Operand order matches :func:`overlap_operands`; static loop counts
+    come from the replicated operand shapes at trace time."""
+    from .problem import ClassStats, score_tuples_overlap
+
+    def scorer(tup_blk, task_mem, class_mem, cmin, cmax, x):
+        stats = ClassStats(task_mem=task_mem, class_mem=class_mem,
+                           cmin=cmin, cmax=cmax, x=x)
+        return score_tuples_overlap(stats, tup_blk)
+
+    return scorer
+
+
+def overlap_operands(cstats) -> Tuple[jnp.ndarray, ...]:
+    return (jnp.asarray(cstats.task_mem), jnp.asarray(cstats.class_mem),
+            jnp.asarray(cstats.cmin), jnp.asarray(cstats.cmax),
+            jnp.asarray(cstats.x))
+
+
+# ---------------------------------------------------------------------------
+# classification SIS: sharded 1D class-domain overlap screen.  Candidates
+# shard over data(+pod) exactly like the regression screen; the overlap
+# score needs whole sample rows (per-class minima/maxima + in-interval
+# counts), so these paths require a sample-replicated mesh — the sharded
+# wrapper falls back to the inner backend + host merge on 'model' meshes.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _overlap_sis_fn(mesh: Mesh, topk: Optional[Tuple[int, int]]):
+    """Compiled sharded classification screen, cached per (mesh, k-config).
+
+    ``topk=None`` returns the full per-shard score vectors (host-merge
+    callers); ``topk=(k_local, k_merge)`` merges on device with the same
+    k-sized all-gather discipline as the regression screen."""
+    from .problem import overlap_scores_ops
+
+    dp = _dp_axes(mesh)
+    assert _sample_axis(mesh) is None, (
+        "classification SIS needs whole sample rows; use a "
+        "sample-replicated mesh or the inner-backend fallback"
+    )
+    out_specs = P(dp) if topk is None else (P(None), P(None))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, None), P(None, None), P(None, None), P(None, None),
+                  P(dp)),
+        out_specs=out_specs,
+        check_rep=topk is None,
+    )
+    def local(x_blk, task_mem, class_mem, masks, mask_blk):
+        scores = overlap_scores_ops(x_blk, task_mem, class_mem, masks)
+        scores = jnp.where(mask_blk, scores, -jnp.inf)
+        if topk is None:
+            return scores
+        k_local, k_merge = topk
+        vals, sel = jax.lax.top_k(scores, k_local)
+        gidx = scores.shape[0] * _shard_index(dp) + sel
+        gv = jax.lax.all_gather(vals, dp, tiled=True)
+        gi = jax.lax.all_gather(gidx, dp, tiled=True)
+        v2, s2 = jax.lax.top_k(gv, k_merge)
+        return v2, gi[s2]
+
+    return jax.jit(local)
+
+
+def overlap_sis_scores_sharded(
+    mesh: Mesh,
+    x: jnp.ndarray,                # (F, S); F % n_data_shards == 0
+    ctx: ScoreContext,
+    row_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full classification score vector (F,), features sharded over dp."""
+    fn = _overlap_sis_fn(mesh, None)
+    if row_mask is None:
+        row_mask = jnp.ones((x.shape[0],), bool)
+    return fn(
+        x,
+        jnp.asarray(ctx.membership, x.dtype),
+        jnp.asarray(ctx.class_members, x.dtype),
+        jnp.asarray(ctx.state_masks, x.dtype),
+        jnp.asarray(row_mask, bool),
+    )
+
+
+def overlap_sis_topk_sharded(
+    mesh: Mesh,
+    x: jnp.ndarray,
+    ctx: ScoreContext,
+    row_mask: jnp.ndarray,
+    n_keep: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Device-merged classification top-``n_keep`` (scores desc, indices)."""
+    f = int(x.shape[0])
+    nd = _n_dp(mesh)
+    assert f % nd == 0, (f, nd)
+    k_local = min(int(n_keep), f // nd)
+    k_merge = min(int(n_keep), nd * k_local)
+    fn = _overlap_sis_fn(mesh, (k_local, k_merge))
+    vals, idx = fn(
+        x,
+        jnp.asarray(ctx.membership, x.dtype),
+        jnp.asarray(ctx.class_members, x.dtype),
+        jnp.asarray(ctx.state_masks, x.dtype),
+        jnp.asarray(row_mask, bool),
+    )
+    return np.asarray(vals, np.float64), np.asarray(idx)
+
+
 # ---------------------------------------------------------------------------
 # fused + distributed deferred SIS: the Pallas gen+validate+score kernel
 # wrapped in shard_map (candidates shard over data(+pod); samples replicated)

@@ -302,6 +302,7 @@ def l0_search(
     dtype=None,  # None -> the engine's compute dtype (precision registry)
     prefetch_depth: int = 2,
     prob=None,
+    problem=None,
 ) -> L0Result:
     """Exhaustive n_dim-tuple search over the SIS subspace, double-buffered.
 
@@ -309,6 +310,10 @@ def l0_search(
     baseline).  ``engine`` is the execution engine (engine/) that scores
     each tuple block — this loop only owns enumeration policy, the running
     top-k merge, and journaling, so there is no per-backend branching here.
+    ``problem`` selects the tuple objective (core/problem.py; default
+    regression) — the loop itself is objective-agnostic: it merges
+    ascending "SSEs", which a problem defines as its lower-is-better
+    objective (LSQ SSE, or domain-overlap count + tie term).
     ``journal``: optional runtime.journal.WorkJournal for restartable sweeps.
     ``prob``: optionally a pre-built ``engine.prepare_l0(...)`` problem —
     repeated sweeps over the same operands (benchmarks, residual re-ranks)
@@ -331,14 +336,16 @@ def l0_search(
         method, engine = engine, None
     from ..engine import get_engine
     from ..engine.streaming import BlockPrefetcher
+    from .problem import get_problem
 
     engine = get_engine(engine)
+    kind = get_problem(problem).kind
     if dtype is None:
         dtype = engine.backend.compute_dtype
     n_dim, n_keep, block = int(n_dim), int(n_keep), int(block)
     m = int(np.asarray(x).shape[0])
     if not engine.backend.l0_ranking_exact(method, n_dim, n_keep,
-                                           layout.n_tasks, m):
+                                           layout.n_tasks, m, problem=kind):
         warnings.warn(
             f"n_keep={n_keep} exceeds the backend's exact-rescore window "
             f"(rescore_k={getattr(engine.backend, 'rescore_k', None)}); "
@@ -347,9 +354,11 @@ def l0_search(
             RuntimeWarning, stacklevel=2,
         )
     if prob is None:
-        prob = engine.prepare_l0(x, y, layout, method=method, dtype=dtype)
+        prob = engine.prepare_l0(x, y, layout, method=method, dtype=dtype,
+                                 problem=kind)
     elif (
         prob.method != method
+        or prob.problem != kind
         or prob.backend != engine.name
         or prob.dtype != dtype
         or prob.layout != layout
@@ -383,7 +392,8 @@ def l0_search(
         digest.update(prob.y.tobytes())
         digest.update(repr(layout.slices).encode())
         sweep = {"m": m, "n_dim": n_dim, "block": block, "n_keep": n_keep,
-                 "method": method, "dtype": np.dtype(dtype).name,
+                 "method": method, "problem": kind,
+                 "dtype": np.dtype(dtype).name,
                  "data": digest.hexdigest()[:16]}
     if journal is not None and journal.has_state():
         j_sse, j_tuples, j_block = journal.restore()
@@ -441,7 +451,10 @@ def l0_search(
             sses = np.asarray(res)
             if len(sses) and not (sses.min() >= best_sse[-1]):
                 k = min(n_keep, len(sses))
-                part = np.argpartition(sses, k - 1)[:k]
+                # stable selection: exact objective ties (routine for the
+                # classification overlap count) must resolve to the same
+                # winners as a device-reduced block's ordered top-k
+                part = np.argsort(sses, kind="stable")[:k]
                 blk_sse = sses[part]
                 blk_tup = np.asarray(tuples)[part].astype(np.int64)
         if blk_sse is not None:

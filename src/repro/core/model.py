@@ -42,9 +42,18 @@ class SissoModel:
         return float(np.sqrt(np.mean(r * r)))
 
     def r2(self, y: np.ndarray, feature_values: np.ndarray) -> float:
+        """Coefficient of determination, centered **per task**.
+
+        Multi-task fits use one intercept per task, so the null model is
+        the per-task mean — centering by the global mean would let the
+        between-task spread inflate (or deflate) ss_tot and with it R².
+        """
         y = np.asarray(y)
         r = self.residual(y, feature_values)
-        ss_tot = float(((y - y.mean()) ** 2).sum())
+        ss_tot = 0.0
+        for lo, hi in self.layout.slices:
+            seg = y[lo:hi]
+            ss_tot += float(((seg - seg.mean()) ** 2).sum())
         return 1.0 - float((r * r).sum()) / max(ss_tot, 1e-300)
 
     def equation(self) -> str:
@@ -59,3 +68,76 @@ class SissoModel:
 
     def __str__(self) -> str:
         return f"SissoModel(dim={self.dim}, sse={self.sse:.6g})\n{self.equation()}"
+
+
+@dataclasses.dataclass
+class SissoClassificationModel:
+    """An n-dimensional descriptor + per-task linear decision boundaries.
+
+    The ℓ0 objective selected this tuple by domain-overlap count
+    (``score`` = count + tie term, ``n_overlap`` the integer count); the
+    stored read-out is the LDA separating refit
+    (core/problem.py:fit_discriminants): per task, class ``c`` scores
+    ``coefs[t, c] · d + intercepts[t, c]`` and prediction is the argmax.
+    """
+
+    features: List[Feature]
+    classes: np.ndarray     # (C,) class labels (sorted, as seen in y)
+    coefs: np.ndarray       # (T, C, n) discriminant weights
+    intercepts: np.ndarray  # (T, C)
+    layout: TaskLayout
+    score: float            # ℓ0 objective: overlap count + tie term
+    n_overlap: int
+
+    @property
+    def dim(self) -> int:
+        return len(self.features)
+
+    @property
+    def sse(self) -> float:
+        """Objective value under the generic "lower is better" contract —
+        what regression code paths read as the SSE slot."""
+        return self.score
+
+    def decision_function(self, feature_values: np.ndarray) -> np.ndarray:
+        """Per-class discriminants (S, C); rows aligned with samples."""
+        s = feature_values.shape[1]
+        c = self.coefs.shape[1]
+        out = np.zeros((s, c))
+        for t, (lo, hi) in enumerate(self.layout.slices):
+            out[lo:hi] = (
+                feature_values[:, lo:hi].T @ self.coefs[t].T
+                + self.intercepts[t][None, :]
+            )
+        return out
+
+    def predict(self, feature_values: np.ndarray) -> np.ndarray:
+        """Predicted class labels (S,)."""
+        df = self.decision_function(feature_values)
+        return np.asarray(self.classes)[np.argmax(df, axis=1)]
+
+    def misclassified(self, y: np.ndarray,
+                      feature_values: np.ndarray) -> np.ndarray:
+        return np.asarray(self.predict(feature_values)
+                          != np.asarray(y))
+
+    def accuracy(self, y: np.ndarray, feature_values: np.ndarray) -> float:
+        return 1.0 - float(self.misclassified(y, feature_values).mean())
+
+    def equation(self) -> str:
+        terms = []
+        for t in range(self.coefs.shape[0]):
+            label = f"task{t}: " if self.coefs.shape[0] > 1 else ""
+            rows = []
+            for k, cls in enumerate(self.classes):
+                parts = [f"{self.intercepts[t, k]:+.6g}"]
+                for c, f in zip(self.coefs[t, k], self.features):
+                    parts.append(f"{c:+.6g}*{f.expr}")
+                rows.append(f"g[{cls!r}] = " + " ".join(parts))
+            terms.append(label + "; ".join(rows))
+        return "\n".join(terms)
+
+    def __str__(self) -> str:
+        return (f"SissoClassificationModel(dim={self.dim}, "
+                f"n_overlap={self.n_overlap}, score={self.score:.6g})\n"
+                f"{self.equation()}")

@@ -1,0 +1,588 @@
+"""The Problem layer: *what* SISSO optimizes, as a pluggable protocol.
+
+The engine layer (engine/) made *how* a phase executes pluggable; this
+module makes the objective itself an API.  A :class:`Problem` owns the
+three places the objective appears in the SISSO loop:
+
+* the **SIS screening score** of a candidate block given the current
+  search state — regression projects onto residuals (paper Eq. 1),
+  classification counts samples inside the 1D class-domain overlap
+  (Ouyang et al. 2017 §"classification"; Purcell et al. 2023, SISSO++);
+* the **ℓ0 tuple objective** — regression is the least-squares SSE over
+  the tuple's feature subspace (Gram/QR engines in core/l0.py),
+  classification is the misclassified-point count inside the pairwise
+  class-domain overlap of the tuple's axis-aligned boxes, tie-broken by
+  the normalized overlap volume, with an LDA-style separating refit on
+  the O(k) winners only;
+* the **state update** between dimensions — regression feeds the
+  residuals of the best models to the next SIS pass, classification
+  feeds the still-ambiguous samples (those inside a best model's
+  overlap region), mirroring the paper lineage's "residual" notion for
+  categorical targets.
+
+Backends receive the problem through tagged operand bundles — a
+:class:`~repro.core.sis.ScoreContext` with ``problem`` +
+``class_members``/``state_masks`` fields, and an
+:class:`~repro.engine.base.L0Problem` with ``problem`` + ``cstats`` —
+so core code never branches on the objective and every backend can
+accelerate or delegate per its capability flags
+(``Backend.kernel_problems``).
+
+Score conventions match the existing merges: SIS scores are
+*maximized* (classification scores are negated overlap counts), ℓ0
+objectives are *minimized* (SSE, or overlap count + tie term).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .sis import ScoreContext, TaskLayout, build_score_context
+
+_EPS = 1e-12
+#: weight of the normalized-overlap tie-break term; keeps the tie term in
+#: [0, 0.5) so it can never reorder tuples with different overlap *counts*
+_TIE_W = 0.5
+#: discriminant bias for a class absent from a task: never predicted
+_ABSENT = -1e30
+
+
+# ---------------------------------------------------------------------------
+# classification operand bundles
+# ---------------------------------------------------------------------------
+
+def class_codes(y: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(classes (C,), codes (S,) int) — classes sorted, deterministic."""
+    y = np.asarray(y)
+    classes, codes = np.unique(y, return_inverse=True)
+    return classes, codes.astype(np.intp)
+
+
+def class_membership(y: np.ndarray, s_pad: Optional[int] = None,
+                     dtype=np.float32) -> np.ndarray:
+    """0/1 class-membership matrix (C, s_pad) from per-sample labels."""
+    classes, codes = class_codes(y)
+    s = len(codes)
+    s_pad = s_pad or s
+    mem = np.zeros((len(classes), s_pad), dtype)
+    mem[codes, np.arange(s)] = 1.0
+    return mem
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-(task, class) axis-aligned domain boxes for one ℓ0 sweep.
+
+    The classification analogue of :class:`~repro.core.l0.GramStats`:
+    sufficient statistics computed once per sweep, from which every
+    tuple's objective is evaluated without touching the samples' class
+    structure again (the sample values themselves are still needed for
+    the in-box membership test).
+    """
+
+    task_mem: Any    # (T, S) 0/1 task membership
+    class_mem: Any   # (C, S) 0/1 class membership
+    cmin: Any        # (T, C, m) per-task per-class feature minima
+    cmax: Any        # (T, C, m) per-task per-class feature maxima
+    x: Any           # (m, S) feature values (the in-box test operand)
+
+    @property
+    def n_tasks(self) -> int:
+        return int(np.shape(self.task_mem)[0])
+
+    @property
+    def n_classes(self) -> int:
+        return int(np.shape(self.class_mem)[0])
+
+    @property
+    def m(self) -> int:
+        return int(np.shape(self.x)[0])
+
+
+def compute_class_stats(
+    x: np.ndarray,  # (m, S)
+    y: np.ndarray,  # (S,) class labels (any comparable values)
+    layout: TaskLayout,
+) -> ClassStats:
+    """Host-exact (fp64) class-domain statistics for an ℓ0 sweep."""
+    x = np.asarray(x, np.float64)
+    m, s = x.shape
+    task_mem = layout.membership(s, np.float64)
+    class_mem = class_membership(y, dtype=np.float64)
+    t, c = task_mem.shape[0], class_mem.shape[0]
+    cmin = np.full((t, c, m), np.inf)
+    cmax = np.full((t, c, m), -np.inf)
+    for ti in range(t):
+        for ci in range(c):
+            sel = (task_mem[ti] > 0) & (class_mem[ci] > 0)
+            if sel.any():
+                cmin[ti, ci] = x[:, sel].min(axis=1)
+                cmax[ti, ci] = x[:, sel].max(axis=1)
+    return ClassStats(task_mem=task_mem, class_mem=class_mem,
+                      cmin=cmin, cmax=cmax, x=x)
+
+
+def _pair_frac(olen, ulen, nonempty):
+    """Normalized 1D overlap length, guarded for degenerate domains.
+
+    ``olen`` is the clipped overlap length, ``ulen`` the union length,
+    ``nonempty`` whether the overlap interval exists (hi >= lo).  Works
+    elementwise for numpy and jnp operands alike.
+    """
+    xp = jnp if isinstance(olen, jnp.ndarray) else np
+    safe = olen / xp.maximum(ulen, _EPS)
+    point = xp.where(nonempty, 1.0, 0.0)  # identical single-point domains
+    return xp.where(ulen > _EPS, safe, point)
+
+
+# ---------------------------------------------------------------------------
+# SIS: 1D class-domain overlap scores (the classification screening score)
+# ---------------------------------------------------------------------------
+
+def overlap_scores_ops(values, task_mem, class_mem, state_masks):
+    """Traceable (jnp) classification SIS scores for one candidate block.
+
+    ``values (B, S)``; ``task_mem (T, S)``, ``class_mem (C, S)`` 0/1;
+    ``state_masks (R, S)`` — one mask per retained model of the previous
+    dimension (all-ones at dimension 1).  For each mask the score is
+
+        -( N_overlap + TIE_W * mean_pairs(normalized overlap length) )
+
+    where ``N_overlap`` counts masked samples of a class pair lying inside
+    the pair's 1D domain intersection; the block score is the max over
+    masks (mirroring regression's max over residuals).  Loops run over the
+    small static (R, T, C) axes; all O(B·S) work is vectorized.
+    """
+    v = values
+    big = jnp.inf
+    # sub-fp32 compute modes (bf16) keep their cast *values* — the in-box
+    # comparisons are exact on whatever the operands are — but the count
+    # accumulation must stay exact-integer and the tie term must stay
+    # below _TIE_W, so both accumulate in >= fp32 (the same guard the
+    # regression SPD solves apply in core/l0.py)
+    acc = jnp.float32 if np.dtype(v.dtype).itemsize < 4 else v.dtype
+    r_n, t_n, c_n = (int(state_masks.shape[0]), int(task_mem.shape[0]),
+                     int(class_mem.shape[0]))
+    n_pairs = t_n * (c_n * (c_n - 1) // 2)
+    best = jnp.full((v.shape[0],), -jnp.inf, acc)
+    for ri in range(r_n):
+        count = jnp.zeros((v.shape[0],), acc)
+        tie = jnp.zeros((v.shape[0],), acc)
+        for ti in range(t_n):
+            w = [task_mem[ti] * class_mem[ci] * state_masks[ri]
+                 for ci in range(c_n)]
+            mn = [jnp.min(jnp.where(w[ci] > 0, v, big), axis=1)
+                  for ci in range(c_n)]
+            mx = [jnp.max(jnp.where(w[ci] > 0, v, -big), axis=1)
+                  for ci in range(c_n)]
+            for ci in range(c_n):
+                for cj in range(ci + 1, c_n):
+                    lo = jnp.maximum(mn[ci], mn[cj])
+                    hi = jnp.minimum(mx[ci], mx[cj])
+                    pair_w = (w[ci] + w[cj]) > 0
+                    inside = (v >= lo[:, None]) & (v <= hi[:, None])
+                    count = count + (inside & pair_w[None, :]).sum(
+                        axis=1).astype(acc)
+                    olen = jnp.maximum(hi - lo, 0.0)
+                    ulen = (jnp.maximum(mx[ci], mx[cj])
+                            - jnp.minimum(mn[ci], mn[cj]))
+                    tie = tie + _pair_frac(olen, ulen, hi >= lo).astype(acc)
+        score = -(count + _TIE_W * tie / max(n_pairs, 1))
+        best = jnp.maximum(best, score)
+    return jnp.where(jnp.isfinite(best), best, -jnp.inf)
+
+
+def overlap_scores_host(values: np.ndarray, ctx: ScoreContext) -> np.ndarray:
+    """Literal numpy mirror of :func:`overlap_scores_ops` (the oracle)."""
+    v = np.asarray(values, np.float64)[:, : ctx.s]
+    task_mem = np.asarray(ctx.membership, np.float64)[:, : ctx.s]
+    class_mem = np.asarray(ctx.class_members, np.float64)[:, : ctx.s]
+    masks = np.asarray(ctx.state_masks, np.float64)[:, : ctx.s]
+    r_n, t_n, c_n = masks.shape[0], task_mem.shape[0], class_mem.shape[0]
+    n_pairs = t_n * (c_n * (c_n - 1) // 2)
+    best = np.full((len(v),), -np.inf)
+    with np.errstate(all="ignore"):
+        for ri in range(r_n):
+            count = np.zeros((len(v),))
+            tie = np.zeros((len(v),))
+            for ti in range(t_n):
+                w = [task_mem[ti] * class_mem[ci] * masks[ri]
+                     for ci in range(c_n)]
+                mn = [np.min(np.where(w[ci] > 0, v, np.inf), axis=1)
+                      for ci in range(c_n)]
+                mx = [np.max(np.where(w[ci] > 0, v, -np.inf), axis=1)
+                      for ci in range(c_n)]
+                for ci in range(c_n):
+                    for cj in range(ci + 1, c_n):
+                        lo = np.maximum(mn[ci], mn[cj])
+                        hi = np.minimum(mx[ci], mx[cj])
+                        pair_w = (w[ci] + w[cj]) > 0
+                        inside = (v >= lo[:, None]) & (v <= hi[:, None])
+                        count = count + (inside & pair_w[None, :]).sum(axis=1)
+                        olen = np.maximum(hi - lo, 0.0)
+                        ulen = (np.maximum(mx[ci], mx[cj])
+                                - np.minimum(mn[ci], mn[cj]))
+                        tie = tie + _pair_frac(olen, ulen, hi >= lo)
+            score = -(count + _TIE_W * tie / max(n_pairs, 1))
+            best = np.maximum(best, score)
+    return np.where(np.isfinite(best), best, -np.inf)
+
+
+def build_class_score_context(
+    state_masks: np.ndarray,  # (R, S) 0/1 still-ambiguous sample masks
+    y: np.ndarray,            # (S,) class labels
+    layout: TaskLayout,
+    s_pad: Optional[int] = None,
+    dtype=np.float32,
+) -> ScoreContext:
+    """Problem-tagged screening context for classification SIS."""
+    state_masks = np.atleast_2d(np.asarray(state_masks, np.float64))
+    r, s = state_masks.shape
+    s_pad = s_pad or s
+    m = np.zeros((layout.n_tasks, s_pad), dtype)
+    m[:, :s] = layout.membership(s)
+    masks = np.zeros((r, s_pad), dtype)
+    masks[:, :s] = state_masks
+    return ScoreContext(
+        membership=m,
+        y_tilde=np.zeros((0, s_pad), dtype),  # unused by this problem
+        counts=layout.counts(), n_residuals=r, s=s, s_pad=s_pad,
+        problem="classification",
+        class_members=class_membership(y, s_pad, dtype),
+        state_masks=masks,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ℓ0: n-D domain-overlap tuple objective
+# ---------------------------------------------------------------------------
+
+def score_tuples_overlap(stats: ClassStats, tuples) -> jnp.ndarray:
+    """Traceable overlap objective for (B, n) tuples (lower is better).
+
+    A sample is *in overlap* for a class pair when it belongs to the pair
+    (within its task) and lies inside the intersection of the two classes'
+    axis-aligned boxes over the tuple's feature subspace.  The objective is
+
+        N_overlap + TIE_W * mean_pairs(prod_d normalized overlap length_d)
+
+    — an integer count ranked first, with the fractional overlap volume
+    breaking ties exactly as the 1D SIS score does.
+    """
+    x = jnp.asarray(stats.x)
+    task_mem = jnp.asarray(stats.task_mem, x.dtype)
+    class_mem = jnp.asarray(stats.class_mem, x.dtype)
+    cmin = jnp.asarray(stats.cmin, x.dtype)
+    cmax = jnp.asarray(stats.cmax, x.dtype)
+    # counts/ties accumulate in >= fp32 even under bf16 compute modes —
+    # the objective's integer part and the tie-term bound must stay exact
+    acc = jnp.float32 if np.dtype(x.dtype).itemsize < 4 else x.dtype
+    t_n, c_n = int(task_mem.shape[0]), int(class_mem.shape[0])
+    n_pairs = t_n * (c_n * (c_n - 1) // 2)
+
+    def per_tuple(idx):
+        xt = x[idx]  # (n, S)
+        count = jnp.zeros((), acc)
+        tie = jnp.zeros((), acc)
+        for ti in range(t_n):
+            for ci in range(c_n):
+                for cj in range(ci + 1, c_n):
+                    lo = jnp.maximum(cmin[ti, ci][idx], cmin[ti, cj][idx])
+                    hi = jnp.minimum(cmax[ti, ci][idx], cmax[ti, cj][idx])
+                    inside = ((xt >= lo[:, None]) & (xt <= hi[:, None])).all(
+                        axis=0)
+                    pair_w = (task_mem[ti]
+                              * (class_mem[ci] + class_mem[cj])) > 0
+                    count = count + (inside & pair_w).sum().astype(acc)
+                    olen = jnp.maximum(hi - lo, 0.0)
+                    ulen = (jnp.maximum(cmax[ti, ci][idx], cmax[ti, cj][idx])
+                            - jnp.minimum(cmin[ti, ci][idx],
+                                          cmin[ti, cj][idx]))
+                    tie = tie + jnp.prod(
+                        _pair_frac(olen, ulen, hi >= lo)).astype(acc)
+        return count + _TIE_W * tie / max(n_pairs, 1)
+
+    import jax
+
+    return jax.vmap(per_tuple)(jnp.asarray(tuples))
+
+
+def score_tuples_overlap_host(stats: ClassStats,
+                              tuples: np.ndarray) -> np.ndarray:
+    """Literal numpy mirror of :func:`score_tuples_overlap` (the oracle)."""
+    x = np.asarray(stats.x, np.float64)
+    task_mem = np.asarray(stats.task_mem, np.float64)
+    class_mem = np.asarray(stats.class_mem, np.float64)
+    cmin = np.asarray(stats.cmin, np.float64)
+    cmax = np.asarray(stats.cmax, np.float64)
+    t_n, c_n = task_mem.shape[0], class_mem.shape[0]
+    n_pairs = t_n * (c_n * (c_n - 1) // 2)
+    out = np.zeros(len(tuples))
+    with np.errstate(all="ignore"):
+        for k, tup in enumerate(np.asarray(tuples)):
+            idx = list(tup)
+            xt = x[idx]
+            count, tie = 0.0, 0.0
+            for ti in range(t_n):
+                for ci in range(c_n):
+                    for cj in range(ci + 1, c_n):
+                        lo = np.maximum(cmin[ti, ci][idx], cmin[ti, cj][idx])
+                        hi = np.minimum(cmax[ti, ci][idx], cmax[ti, cj][idx])
+                        inside = ((xt >= lo[:, None])
+                                  & (xt <= hi[:, None])).all(axis=0)
+                        pair_w = (task_mem[ti]
+                                  * (class_mem[ci] + class_mem[cj])) > 0
+                        count += float((inside & pair_w).sum())
+                        olen = np.maximum(hi - lo, 0.0)
+                        ulen = (np.maximum(cmax[ti, ci][idx],
+                                           cmax[ti, cj][idx])
+                                - np.minimum(cmin[ti, ci][idx],
+                                             cmin[ti, cj][idx]))
+                        tie += float(np.prod(_pair_frac(olen, ulen, hi >= lo)))
+            out[k] = count + _TIE_W * tie / max(n_pairs, 1)
+    return out
+
+
+def overlap_region_mask(
+    d: np.ndarray,   # (n, S) descriptor values of one model
+    y: np.ndarray,   # (S,) class labels
+    layout: TaskLayout,
+) -> np.ndarray:
+    """Bool (S,): samples inside any class pair's box intersection.
+
+    The classification "residual": the still-ambiguous samples a best
+    model leaves unresolved, which the next dimension's SIS pass screens
+    against (analogous to feeding regression residuals forward).
+    """
+    stats = compute_class_stats(d, y, layout)
+    t_n, c_n = stats.n_tasks, stats.n_classes
+    s = d.shape[1]
+    mask = np.zeros((s,), bool)
+    for ti in range(t_n):
+        for ci in range(c_n):
+            for cj in range(ci + 1, c_n):
+                lo = np.maximum(stats.cmin[ti, ci], stats.cmin[ti, cj])
+                hi = np.minimum(stats.cmax[ti, ci], stats.cmax[ti, cj])
+                inside = ((d >= lo[:, None]) & (d <= hi[:, None])).all(axis=0)
+                pair_w = (stats.task_mem[ti]
+                          * (stats.class_mem[ci] + stats.class_mem[cj])) > 0
+                mask |= inside & pair_w
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# separating refit (LDA) — run on the O(k) ℓ0 winners only
+# ---------------------------------------------------------------------------
+
+def fit_discriminants(
+    d: np.ndarray,       # (n, S) descriptor values of one winner tuple
+    codes: np.ndarray,   # (S,) class codes 0..C-1
+    n_classes: int,
+    layout: TaskLayout,
+    jitter: float = 1e-8,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-task LDA read-out: (coefs (T, C, n), intercepts (T, C)).
+
+    Linear discriminant analysis with a pooled within-class covariance —
+    the closed-form separating refit the ℓ0 winners get (the exhaustive
+    sweep itself only counts overlaps; the refit runs O(k) times, never
+    O(C(m, n))).  For the binary case the bias is additionally recentered
+    to the margin midpoint when the LDA projection separates the classes
+    (SVM-style max-margin threshold): a zero-overlap descriptor then
+    classifies its training task perfectly instead of inheriting LDA's
+    variance-weighted threshold.  Classes absent from a task get an
+    ``_ABSENT`` bias so they are never predicted for that task's samples.
+    """
+    n, s = d.shape
+    t_n = layout.n_tasks
+    coefs = np.zeros((t_n, n_classes, n))
+    inters = np.full((t_n, n_classes), _ABSENT)
+    for ti, (lo, hi) in enumerate(layout.slices):
+        xt = d[:, lo:hi].T          # (S_t, n)
+        ct = codes[lo:hi]
+        st = len(ct)
+        means, counts = np.zeros((n_classes, n)), np.zeros(n_classes)
+        cov = np.zeros((n, n))
+        for k in range(n_classes):
+            rows = xt[ct == k]
+            counts[k] = len(rows)
+            if len(rows):
+                means[k] = rows.mean(axis=0)
+                r = rows - means[k]
+                cov += r.T @ r
+        present = int((counts > 0).sum())
+        cov /= max(st - present, 1)
+        cov += jitter * np.eye(n) * max(np.trace(cov) / n, 1.0)
+        prec = np.linalg.inv(cov)
+        for k in range(n_classes):
+            if counts[k] == 0:
+                continue
+            w = prec @ means[k]
+            coefs[ti, k] = w
+            inters[ti, k] = (-0.5 * means[k] @ w
+                             + np.log(counts[k] / st))
+        if n_classes == 2 and counts[0] > 0 and counts[1] > 0:
+            # margin recentering: along the LDA direction, put the
+            # decision threshold mid-gap when the projections separate
+            dw = coefs[ti, 1] - coefs[ti, 0]
+            z = xt @ dw
+            z0, z1 = z[ct == 0], z[ct == 1]
+            if z1.min() > z0.max():
+                db = inters[ti, 1] - inters[ti, 0]
+                inters[ti, 1] += -(z0.max() + z1.min()) / 2.0 - db
+    return coefs, inters
+
+
+# ---------------------------------------------------------------------------
+# the Problem protocol
+# ---------------------------------------------------------------------------
+
+class Problem(abc.ABC):
+    """What one SISSO search optimizes (see module docstring).
+
+    Instances are stateless policy objects; the solver owns the actual
+    state array (residuals / ambiguity masks) and threads it through.
+    """
+
+    kind: str = "abstract"
+
+    @abc.abstractmethod
+    def initial_state(self, y: np.ndarray, layout: TaskLayout) -> np.ndarray:
+        """State array (R, S) screened against at dimension 1."""
+
+    @abc.abstractmethod
+    def build_sis_context(self, state: np.ndarray, y: np.ndarray,
+                          layout: TaskLayout, s_pad: Optional[int] = None,
+                          dtype=np.float32) -> ScoreContext:
+        """Problem-tagged screening operands for one SIS pass."""
+
+    @abc.abstractmethod
+    def make_models(self, xs: np.ndarray, y: np.ndarray, layout: TaskLayout,
+                    result, feature_of: Callable[[int], Any],
+                    n_keep: int, dtype) -> List[Any]:
+        """Model objects for the finite ℓ0 winners, best first."""
+
+    @abc.abstractmethod
+    def update_state(self, y: np.ndarray, layout: TaskLayout,
+                     models: Sequence[Any],
+                     values_of: Callable[[Any], np.ndarray]) -> np.ndarray:
+        """Next-dimension state from the retained models (R', S)."""
+
+
+class RegressionProblem(Problem):
+    """SSE/Pearson-projection SISSO — the original objective, verbatim.
+
+    Every method reproduces the pre-Problem-layer solver logic exactly
+    (same Gram statistics, same coefficient recovery, same residual
+    stack), so regression fits are bit-identical across the redesign.
+    """
+
+    kind = "regression"
+
+    def initial_state(self, y, layout):
+        return np.asarray(y, np.float64)[None, :]  # Δ_0 = P
+
+    def build_sis_context(self, state, y, layout, s_pad=None,
+                          dtype=np.float32):
+        return build_score_context(state, layout, s_pad=s_pad, dtype=dtype)
+
+    def make_models(self, xs, y, layout, result, feature_of, n_keep, dtype):
+        from .l0 import coefficients_for, compute_gram_stats
+        from .model import SissoModel
+
+        stats = compute_gram_stats(xs, y, layout, dtype)
+        models = []
+        for k in range(min(n_keep, len(result.sses))):
+            if not np.isfinite(result.sses[k]):
+                continue
+            tup = result.tuples[k]
+            coefs, intercepts = coefficients_for(stats, tup)
+            models.append(SissoModel(
+                features=[feature_of(int(j)) for j in tup],
+                coefs=coefs, intercepts=intercepts, layout=layout,
+                sse=float(result.sses[k]),
+            ))
+        return models
+
+    def update_state(self, y, layout, models, values_of):
+        resids = [mdl.residual(y, values_of(mdl)) for mdl in models]
+        return np.stack(resids) if resids else np.asarray(y)[None, :]
+
+
+class ClassificationProblem(Problem):
+    """Convex-domain-overlap SISSO classification (paper lineage).
+
+    The target is a vector of class labels (any comparable values; the
+    api layer passes integer codes).  Screening and the exhaustive ℓ0
+    sweep both minimize domain overlap; the O(k) winners get an LDA
+    separating refit whose per-task, per-class linear discriminants are
+    the stored decision boundaries.
+    """
+
+    kind = "classification"
+
+    def initial_state(self, y, layout):
+        return np.ones((1, len(np.asarray(y))))
+
+    def build_sis_context(self, state, y, layout, s_pad=None,
+                          dtype=np.float32):
+        if y is None:
+            raise ValueError(
+                "classification screening needs the class labels: pass "
+                "y= to sis_screen alongside the state masks"
+            )
+        return build_class_score_context(state, y, layout, s_pad=s_pad,
+                                         dtype=dtype)
+
+    def make_models(self, xs, y, layout, result, feature_of, n_keep, dtype):
+        from .model import SissoClassificationModel
+
+        classes, codes = class_codes(y)
+        models = []
+        for k in range(min(n_keep, len(result.sses))):
+            if not np.isfinite(result.sses[k]):
+                continue
+            tup = result.tuples[k]
+            d = np.asarray(xs)[list(tup)]
+            coefs, intercepts = fit_discriminants(
+                d, codes, len(classes), layout)
+            models.append(SissoClassificationModel(
+                features=[feature_of(int(j)) for j in tup],
+                classes=classes, coefs=coefs, intercepts=intercepts,
+                layout=layout, score=float(result.sses[k]),
+                n_overlap=int(np.floor(result.sses[k] + 1e-9)),
+            ))
+        return models
+
+    def update_state(self, y, layout, models, values_of):
+        masks = [
+            overlap_region_mask(values_of(mdl), y, layout).astype(np.float64)
+            for mdl in models
+        ]
+        if not masks:
+            return np.ones((1, len(np.asarray(y))))
+        return np.stack(masks)
+
+
+PROBLEMS = {
+    "regression": RegressionProblem,
+    "classification": ClassificationProblem,
+}
+
+
+def get_problem(spec=None) -> Problem:
+    """Resolve a problem name / instance (None -> regression)."""
+    if spec is None:
+        return RegressionProblem()
+    if isinstance(spec, Problem):
+        return spec
+    try:
+        return PROBLEMS[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown problem {spec!r}; expected one of {sorted(PROBLEMS)}"
+        ) from None

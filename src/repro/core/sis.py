@@ -73,7 +73,15 @@ class TaskLayout:
 
 @dataclasses.dataclass
 class ScoreContext:
-    """Precomputed screening operands, padded to ``s_pad`` columns."""
+    """Precomputed screening operands, padded to ``s_pad`` columns.
+
+    Problem-tagged (core/problem.py): ``problem`` names the objective the
+    operands encode, so a backend dispatches on the *context*, never on
+    config flags.  Regression fills ``y_tilde`` (centered+normalized
+    residuals); classification fills ``class_members`` (0/1 per class)
+    and ``state_masks`` (one 0/1 still-ambiguous mask per retained model,
+    the classification analogue of the residual axis).
+    """
 
     membership: np.ndarray  # (T, s_pad)
     y_tilde: np.ndarray     # (R*T, s_pad) per-task centered+normalized residuals
@@ -81,6 +89,9 @@ class ScoreContext:
     n_residuals: int
     s: int                  # true sample count
     s_pad: int
+    problem: str = "regression"
+    class_members: Optional[np.ndarray] = None  # (C, s_pad) 0/1
+    state_masks: Optional[np.ndarray] = None    # (R, s_pad) 0/1
 
 
 def build_score_context(
@@ -203,11 +214,11 @@ class TopK:
             return
         all_scores = np.concatenate([self.scores, scores])
         all_tags = self.tags + tags
-        if len(all_scores) > self.k:
-            idx = np.argpartition(-all_scores, self.k - 1)[: self.k]
-            idx = idx[np.argsort(-all_scores[idx])]
-        else:
-            idx = np.argsort(-all_scores)
+        # stable first-occurrence tie order: exact score ties are routine
+        # for the classification problem (mirror candidates share overlap
+        # counts), and an unstable partition would let the full-vector and
+        # device-reduced merge paths pick *different* tied winners
+        idx = np.argsort(-all_scores, kind="stable")[: self.k]
         self.scores = all_scores[idx]
         self.tags = [all_tags[i] for i in idx]
 
@@ -226,13 +237,15 @@ class TopK:
 
 def sis_screen(
     fspace: FeatureSpace,
-    residuals: np.ndarray,  # (R, S)
+    residuals: np.ndarray,  # (R, S) problem state (residuals / ambiguity masks)
     layout: TaskLayout,
     n_sis: int,
     exclude: Set[int],
     batch: int = 1 << 16,
     engine=None,
     overselect: int = 2,
+    problem=None,
+    y: Optional[np.ndarray] = None,
 ) -> Tuple[List[Feature], np.ndarray]:
     """Select the top-``n_sis`` unselected features; returns (features, scores).
 
@@ -244,12 +257,19 @@ def sis_screen(
     :class:`ReducedBlock` winners and the push indexes tags lazily; every
     other backend returns full score vectors and the classic host merge
     runs.
+
+    ``problem`` selects the screening objective (core/problem.py; default
+    regression): the problem builds the tagged :class:`ScoreContext` from
+    ``residuals`` (the problem state) and, for classification, the class
+    labels ``y``.  Scores are always merged descending — problems encode
+    "lower is better" objectives as negated scores.
     """
     from ..engine import get_engine
+    from .problem import get_problem
 
     engine = get_engine(engine)
-    ctx = build_score_context(
-        residuals, layout, dtype=engine.backend.score_ctx_dtype
+    ctx = get_problem(problem).build_sis_context(
+        residuals, y, layout, dtype=engine.backend.score_ctx_dtype
     )
     x = fspace.values_matrix().astype(np.float64)
 

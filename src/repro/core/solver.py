@@ -23,8 +23,8 @@ import numpy as np
 
 from ..precision import set_precision
 from .feature_space import FeatureSpace
-from .l0 import coefficients_for, compute_gram_stats, l0_search
-from .model import SissoModel
+from .l0 import l0_search
+from .problem import get_problem
 from .sis import TaskLayout, sis_screen
 from .units import Unit
 
@@ -44,6 +44,10 @@ class SissoConfig:
     l0_block: int = 65536               # paper: ℓ0 batches ≥ 65536
     sis_batch: int = 1 << 16
     l0_method: str = "gram"             # 'gram' (TPU-native) | 'qr' (paper-faithful)
+    problem: str = "regression"         # regression | classification
+    #                                     (core/problem.py: the objective —
+    #                                     screening score, ℓ0 tuple
+    #                                     objective, state update)
     backend: str = "jnp"                # reference | jnp | pallas | sharded
     #                                     | 'sharded:<inner>' (distribution
     #                                     wrapper over jnp/pallas/reference)
@@ -79,11 +83,12 @@ class SissoConfig:
 
 @dataclasses.dataclass
 class SissoFit:
-    models_by_dim: Dict[int, List[SissoModel]]
+    models_by_dim: Dict[int, List]  # SissoModel / SissoClassificationModel
     fspace: FeatureSpace
     timings: Dict[str, float]
+    problem: str = "regression"
 
-    def best(self, dim: Optional[int] = None) -> SissoModel:
+    def best(self, dim: Optional[int] = None):
         if not self.models_by_dim:
             raise RuntimeError("SissoFit holds no models (empty fit)")
         if dim is None:
@@ -164,18 +169,25 @@ class SissoSolver:
         )
 
         # ---- phases 2+3: SIS / ℓ0 over dimensions ---------------------
+        # The objective is owned by the Problem (core/problem.py): it
+        # builds the screening context, defines the ℓ0 tuple objective,
+        # turns winners into model objects, and produces the next state
+        # (residuals / ambiguity masks).  This loop owns only phase
+        # sequencing, the subspace bookkeeping and timings.
+        problem = get_problem(cfg.problem)
         subspace: List[int] = []  # fids, in selection order
         selected: set = set()
-        models_by_dim: Dict[int, List[SissoModel]] = {}
-        residuals = y[None, :]  # Δ_0 = P
+        models_by_dim: Dict[int, List] = {}
+        state = problem.initial_state(y, layout)  # Δ_0
         timings["sis"] = 0.0
         timings["l0"] = 0.0
 
         for dim in range(1, cfg.n_dim + 1):
             t0 = time.perf_counter()
             feats, scores = sis_screen(
-                fspace, residuals, layout, cfg.n_sis, selected,
+                fspace, state, layout, cfg.n_sis, selected,
                 batch=cfg.sis_batch, engine=self.engine,
+                problem=problem, y=y,
             )
             timings["sis"] += time.perf_counter() - t0
             for f in feats:
@@ -191,13 +203,11 @@ class SissoSolver:
             t0 = time.perf_counter()
             xmat = fspace.values_matrix()
             xs = xmat[[fspace.features[fid].row for fid in subspace]]
-            # standardize for conditioning (coefficients recovered below from
-            # raw-value Gram stats, so this is internal only)
             res = l0_search(
                 xs, y, layout, n_dim=dim, n_keep=cfg.n_residual,
                 block=cfg.l0_block, method=cfg.l0_method,
                 engine=self.engine, journal=journal,
-                dtype=self.dtype,
+                dtype=self.dtype, problem=problem,
             )
             if journal is not None:
                 # this dim's sweep is complete; stale state would otherwise be
@@ -205,20 +215,11 @@ class SissoSolver:
                 journal.clear()
             timings["l0"] += time.perf_counter() - t0
 
-            stats = compute_gram_stats(xs, y, layout, self.dtype)
-            models = []
-            for k in range(min(cfg.n_residual, len(res.sses))):
-                if not np.isfinite(res.sses[k]):
-                    continue
-                tup = res.tuples[k]
-                coefs, intercepts = coefficients_for(stats, tup)
-                models.append(
-                    SissoModel(
-                        features=[fspace.features[subspace[j]] for j in tup],
-                        coefs=coefs, intercepts=intercepts, layout=layout,
-                        sse=float(res.sses[k]),
-                    )
-                )
+            models = problem.make_models(
+                xs, y, layout, res,
+                feature_of=lambda j: fspace.features[subspace[j]],
+                n_keep=cfg.n_residual, dtype=self.dtype,
+            )
             models_by_dim[dim] = models
             if not models:
                 log.warning(
@@ -228,18 +229,21 @@ class SissoSolver:
                     dim, res.n_evaluated, dim,
                 )
             log.info(
-                "dim %d ℓ0: %d models evaluated, best SSE %.6g",
+                "dim %d ℓ0: %d models evaluated, best objective %.6g",
                 dim, res.n_evaluated, res.sses[0],
             )
 
-            # residuals of the best n_residual models feed the next SIS
-            resids = []
-            for mdl in models[: cfg.n_residual]:
-                rows = [fspace.features[f.fid].row for f in mdl.features]
-                resids.append(mdl.residual(y, xmat[rows]))
-            residuals = np.stack(resids) if resids else y[None, :]
+            # the best n_residual models feed the next SIS pass (residuals
+            # for regression, still-ambiguous sample masks for classification)
+            state = problem.update_state(
+                y, layout, models[: cfg.n_residual],
+                values_of=lambda mdl: xmat[
+                    [fspace.features[f.fid].row for f in mdl.features]
+                ],
+            )
 
-        return SissoFit(models_by_dim=models_by_dim, fspace=fspace, timings=timings)
+        return SissoFit(models_by_dim=models_by_dim, fspace=fspace,
+                        timings=timings, problem=problem.kind)
 
 
 class SissoRegressor(SissoSolver):

@@ -1,3 +1,3 @@
-from .synthetic import TokenStream, tabular_dataset
+from .synthetic import TokenStream, classification_dataset, tabular_dataset
 
-__all__ = ["TokenStream", "tabular_dataset"]
+__all__ = ["TokenStream", "classification_dataset", "tabular_dataset"]

@@ -49,3 +49,28 @@ def tabular_dataset(n_features: int, n_samples: int, seed: int = 0,
     y = y + noise * rng.normal(size=n_samples)
     names = [f"f{i}" for i in range(n_features)]
     return x, y, names
+
+
+def classification_dataset(n_features: int = 5, n_samples: int = 160,
+                           seed: int = 0, margin: float = 0.35,
+                           threshold: float = 2.2):
+    """Synthetic separable classification case with a planted boundary.
+
+    The class is decided by a *composed* feature — ``x0 * x1`` against
+    ``threshold`` — with a ``margin``-wide exclusion band around the
+    boundary, so SISSO classification should find a 1D descriptor whose
+    class domains do not overlap (n_overlap = 0) and a perfectly
+    separating read-out.  Returns ``(x (P, S), labels (S,), names)`` in
+    the core's array-major layout.
+    """
+    rng = np.random.default_rng(seed)
+    cols = []
+    while sum(c.shape[1] for c in cols) < n_samples:
+        x = rng.uniform(0.5, 3.0, size=(n_features, 4 * n_samples))
+        keep = np.abs(x[0] * x[1 % n_features] - threshold) > margin
+        cols.append(x[:, keep])
+    x = np.concatenate(cols, axis=1)[:, :n_samples]
+    labels = np.where(x[0] * x[1 % n_features] > threshold,
+                      "above", "below")
+    names = [f"f{i}" for i in range(n_features)]
+    return x, labels, names

@@ -39,18 +39,23 @@ from ..core.l0 import GramStats
 class L0Problem:
     """One ℓ0 sweep's operands, prepared once and scored block-by-block.
 
-    ``stats`` (Gram sufficient statistics) and per-problem jit caches are
-    filled in by the backend's :meth:`Backend.prepare_l0`.
+    Problem-tagged (core/problem.py): ``problem`` names the tuple
+    objective.  Regression fills ``stats`` (Gram sufficient statistics);
+    classification fills ``cstats`` (per-task per-class domain boxes).
+    Per-problem jit caches are filled in by the backend's
+    :meth:`Backend.prepare_l0`.
     """
 
     x: np.ndarray            # (m, S) subspace feature values
-    y: np.ndarray            # (S,)
+    y: np.ndarray            # (S,) target (regression) or class labels
     layout: TaskLayout
     method: str              # 'gram' (closed form) | 'qr' (paper-faithful)
     dtype: Any
     stats: Optional[GramStats] = None
     cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
     backend: str = ""        # name of the backend that prepared this problem
+    problem: str = "regression"
+    cstats: Any = None       # core.problem.ClassStats (classification only)
 
     @property
     def m(self) -> int:
@@ -75,6 +80,13 @@ class Backend(abc.ABC):
       ``*_topk`` entry points return a
       :class:`~repro.core.sis.ReducedBlock` of O(k) winners instead of a
       full block-length vector (engine/sharded.py).
+    * ``kernel_problems`` — problem kinds (core/problem.py) the backend's
+      *native* fast paths cover; a problem-tagged context/L0Problem whose
+      kind is outside this set routes to the generic jnp / compose
+      implementations instead (e.g. the Pallas fused-SIS and Gram-gather
+      kernels are regression-only, so ``PallasBackend`` declares
+      ``("regression",)`` and classification falls through to its jnp
+      parent — semantics stay canonical, only the acceleration differs).
     * ``bit_exact_oracle`` — results define the parity baseline.
 
     Precision: ``compute_dtype`` (set via :meth:`set_precision` from the
@@ -90,6 +102,7 @@ class Backend(abc.ABC):
     reduces_blocks: bool = False
     bit_exact_oracle: bool = False
     compute_dtype: Any = np.float64
+    kernel_problems: Tuple[str, ...] = ("regression", "classification")
 
     def set_precision(self, precision: str) -> "Backend":
         """Select the compute dtype by registry name (bf16 | fp32 | fp64).
@@ -197,7 +210,7 @@ class Backend(abc.ABC):
             self.l0_scores(prob, tuples), n_keep, largest=False
         )
 
-    # -- phase 3: ℓ0 regression ----------------------------------------
+    # -- phase 3: ℓ0 tuple search --------------------------------------
     def prepare_l0(
         self,
         x: np.ndarray,
@@ -205,18 +218,29 @@ class Backend(abc.ABC):
         layout: TaskLayout,
         method: str = "gram",
         dtype: Any = np.float64,
+        problem: str = "regression",
     ) -> L0Problem:
-        return L0Problem(
+        prob = L0Problem(
             x=np.asarray(x, np.float64), y=np.asarray(y, np.float64),
             layout=layout, method=method, dtype=dtype, backend=self.name,
+            problem=problem,
         )
+        if problem == "classification":
+            from ..core.problem import compute_class_stats
+
+            prob.cstats = compute_class_stats(prob.x, prob.y, layout)
+        return prob
 
     @abc.abstractmethod
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
-        """Total SSE (B,) of the per-task LSQ fits for (B, n) tuples."""
+        """Tuple objectives (B,), ascending-is-better, for (B, n) tuples.
+
+        Regression: total SSE of the per-task LSQ fits; classification:
+        domain-overlap count + tie term (core/problem.py)."""
 
     def l0_ranking_exact(self, method: str, n_dim: int, n_keep: int,
-                         n_tasks: int, m: int) -> bool:
+                         n_tasks: int, m: int,
+                         problem: str = "regression") -> bool:
         """Would a top-``n_keep`` merged from :meth:`l0_scores` blocks rank
         on exact fp64 SSEs for this sweep?
 
@@ -302,9 +326,11 @@ class Engine:
             op_id, a, b, ctx, l_bound, u_bound
         )
 
-    def prepare_l0(self, x, y, layout, method="gram", dtype=None):
+    def prepare_l0(self, x, y, layout, method="gram", dtype=None,
+                   problem="regression"):
         dtype = self.backend.compute_dtype if dtype is None else dtype
-        return self.backend.prepare_l0(x, y, layout, method=method, dtype=dtype)
+        return self.backend.prepare_l0(x, y, layout, method=method,
+                                       dtype=dtype, problem=problem)
 
     def l0_scores(self, prob, tuples, n_keep=None):
         if n_keep is not None and self.backend.reduces_blocks:

@@ -17,6 +17,9 @@ import numpy as np
 
 from ..core.l0 import compute_gram_stats, score_tuples_gram, score_tuples_qr
 from ..core.operators import apply_op
+from ..core.problem import (
+    ClassStats, overlap_scores_ops, score_tuples_overlap,
+)
 from ..core.sis import ScoreContext, scores_from_reductions
 from ..core.validity import value_rules_jnp
 from .base import Backend, L0Problem
@@ -34,6 +37,11 @@ def _score_jit(values, membership, y_tilde, counts, n_residuals):
     sumsq = (values * values) @ membership.T
     dots = values @ y_tilde.T
     return scores_from_reductions(sums, sumsq, dots, counts, n_residuals)
+
+
+#: classification SIS: jit per (B, S, T, C, R) shape combination — same
+#: caching discipline as the regression screen above
+_overlap_score_jit = jax.jit(overlap_scores_ops)
 
 
 class JnpBackend(Backend):
@@ -68,6 +76,14 @@ class JnpBackend(Backend):
 
     def sis_scores(self, values, ctx: ScoreContext) -> np.ndarray:
         v = jnp.asarray(values, self.compute_dtype)
+        if ctx.problem == "classification":
+            scores = _overlap_score_jit(
+                v,
+                jnp.asarray(ctx.membership, v.dtype),
+                jnp.asarray(ctx.class_members, v.dtype),
+                jnp.asarray(ctx.state_masks, v.dtype),
+            )
+            return np.asarray(scores, np.float64)
         scores = _score_jit(
             v,
             jnp.asarray(ctx.membership, v.dtype),
@@ -77,9 +93,22 @@ class JnpBackend(Backend):
         )
         return np.asarray(scores, np.float64)
 
-    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64):
-        prob = super().prepare_l0(x, y, layout, method=method, dtype=dtype)
-        if method == "gram":
+    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64,
+                   problem="regression"):
+        prob = super().prepare_l0(x, y, layout, method=method, dtype=dtype,
+                                  problem=problem)
+        if problem == "classification":
+            # device-resident domain boxes (the host stats were built by the
+            # base class); the in-box test operand x stays in compute dtype
+            cs = prob.cstats
+            prob.cstats = ClassStats(
+                task_mem=jnp.asarray(cs.task_mem, dtype),
+                class_mem=jnp.asarray(cs.class_mem, dtype),
+                cmin=jnp.asarray(cs.cmin, dtype),
+                cmax=jnp.asarray(cs.cmax, dtype),
+                x=jnp.asarray(cs.x, dtype),
+            )
+        elif method == "gram":
             prob.stats = compute_gram_stats(
                 jnp.asarray(prob.x), jnp.asarray(prob.y), layout, dtype
             )
@@ -89,7 +118,11 @@ class JnpBackend(Backend):
         with self._l0_cache_lock:
             fn = prob.cache.get("jnp_l0")
             if fn is None:
-                if prob.method == "gram":
+                if prob.problem == "classification":
+                    fn = jax.jit(
+                        lambda tt: score_tuples_overlap(prob.cstats, tt)
+                    )
+                elif prob.method == "gram":
                     fn = jax.jit(lambda tt: score_tuples_gram(prob.stats, tt))
                 else:
                     xs = jnp.asarray(prob.x, prob.dtype)

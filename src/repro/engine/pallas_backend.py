@@ -36,6 +36,9 @@ class PallasBackend(JnpBackend):
     name = "pallas"
     fused_deferred = True
     l0_widths = (2, 3, 4)
+    # the fused-SIS and Gram-gather kernels encode the regression math;
+    # classification contexts route to the inherited jnp implementations
+    kernel_problems = ("regression",)
 
     def __init__(self, interpret: Optional[bool] = None, block_b: int = 256,
                  rescore_k: int = 512):
@@ -60,6 +63,11 @@ class PallasBackend(JnpBackend):
 
     def sis_scores_deferred(self, op_id, a, b, ctx: ScoreContext,
                             l_bound, u_bound):
+        if ctx.problem not in self.kernel_problems:
+            # eval -> (jnp) overlap score -> mask compose path
+            return super().sis_scores_deferred(
+                op_id, a, b, ctx, l_bound, u_bound
+            )
         scores = kops.fused_gen_sis(
             int(op_id),
             jnp.asarray(a, jnp.float32),
@@ -69,10 +77,13 @@ class PallasBackend(JnpBackend):
         )
         return np.asarray(scores)
 
-    def l0_ranking_exact(self, method, n_dim, n_keep, n_tasks, m):
+    def l0_ranking_exact(self, method, n_dim, n_keep, n_tasks, m,
+                         problem="regression"):
         """Mirrors :meth:`_l0_scores_gather` dispatch: only the width-3/4
-        gram path within the VMEM budget runs the fp32 pre-pass, and its
-        exactness window is ``rescore_k`` per block."""
+        regression gram path within the VMEM budget runs the fp32
+        pre-pass, and its exactness window is ``rescore_k`` per block."""
+        if problem not in self.kernel_problems:
+            return True  # delegated problems score on the exact jnp path
         if method != "gram" or n_dim < 3 or n_dim not in self.l0_widths:
             return True  # exact fp64 paths (pairs, jnp delegation, QR)
         if kops.gram_pack_nbytes(n_tasks, m) > kops.GRAM_VMEM_BUDGET:
@@ -84,8 +95,8 @@ class PallasBackend(JnpBackend):
 
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
         width = int(tuples.shape[1])
-        if len(tuples) == 0 or prob.method != "gram" \
-                or width not in self.l0_widths:
+        if len(tuples) == 0 or prob.problem not in self.kernel_problems \
+                or prob.method != "gram" or width not in self.l0_widths:
             return super().l0_scores(prob, tuples)
         if width == 2:
             return np.asarray(

@@ -30,8 +30,15 @@ class ReferenceBackend(Backend):
         return v, value_rules_host(v, l_bound, u_bound)
 
     def sis_scores(self, values, ctx: ScoreContext) -> np.ndarray:
-        """Literal Eq. 1: per-task two-pass Pearson r, mean over tasks,
-        max over residuals."""
+        """Literal screening score for the tagged problem.
+
+        Regression: Eq. 1 — per-task two-pass Pearson r, mean over tasks,
+        max over residuals.  Classification: negated 1D class-domain
+        overlap count (+ tie term), max over state masks."""
+        if ctx.problem == "classification":
+            from ..core.problem import overlap_scores_host
+
+            return overlap_scores_host(values, ctx)
         v = np.asarray(values, np.float64)[:, : ctx.s]
         yt = np.asarray(ctx.y_tilde, np.float64)  # (R*T, s_pad) unit-norm
         t = ctx.membership.shape[0]
@@ -53,11 +60,17 @@ class ReferenceBackend(Backend):
         return np.where(np.isfinite(scores), scores, -np.inf)
 
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
-        """Per-tuple per-task ``np.linalg.lstsq`` with intercept.
+        """Per-tuple oracle objective for the tagged problem.
 
-        O(B·T) host solves — the paper-faithful oracle, not a fast path;
-        use on reduced cases only.
+        Regression: per-task ``np.linalg.lstsq`` with intercept — O(B·T)
+        host solves, the paper-faithful oracle, not a fast path; use on
+        reduced cases only.  Classification: literal numpy domain-overlap
+        count over the tuple's subspace.
         """
+        if prob.problem == "classification":
+            from ..core.problem import score_tuples_overlap_host
+
+            return score_tuples_overlap_host(prob.cstats, tuples)
         tuples = np.asarray(tuples)
         out = np.zeros(len(tuples))
         for k, tup in enumerate(tuples):

@@ -36,8 +36,10 @@ from jax.sharding import Mesh
 
 from ..core.distributed import (
     _dp_axes, _sample_axis, fused_sis_topk_sharded, gram_operands,
-    gram_topk_scorer, l0_pair_sses_sharded, make_l0_topk_fn, qr_topk_scorer,
-    sis_scores_sharded, sis_topk_sharded,
+    gram_topk_scorer, l0_pair_sses_sharded, make_l0_topk_fn,
+    overlap_operands, overlap_sis_scores_sharded, overlap_sis_topk_sharded,
+    overlap_topk_scorer, qr_topk_scorer, sis_scores_sharded,
+    sis_topk_sharded,
 )
 from ..core.l0 import compute_gram_stats
 from ..core.sis import ReducedBlock, ScoreContext
@@ -93,6 +95,9 @@ class ShardedExecution(Backend):
         self.fused_deferred = inner.fused_deferred
         self.l0_widths = inner.l0_widths if inner.l0_widths is None \
             else tuple(sorted(set(inner.l0_widths) | {2}))
+        # the wrapper shards both problems natively (regression matmul
+        # screen, classification overlap screen + the generic ℓ0 reducer)
+        self.kernel_problems = ("regression", "classification")
         self.mesh = mesh if mesh is not None else default_mesh()
         dp = _dp_axes(self.mesh)
         if not dp:
@@ -116,9 +121,12 @@ class ShardedExecution(Backend):
     def eval_program(self, program, x):
         return self.inner.eval_program(program, x)
 
-    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64):
-        prob = self.inner.prepare_l0(x, y, layout, method=method, dtype=dtype)
-        if method == "gram" and prob.stats is None:
+    def prepare_l0(self, x, y, layout, method="gram", dtype=np.float64,
+                   problem="regression"):
+        prob = self.inner.prepare_l0(x, y, layout, method=method, dtype=dtype,
+                                     problem=problem)
+        if problem == "regression" and method == "gram" \
+                and prob.stats is None:
             # inner backends without a Gram cache (reference) still shard
             # through the closed-form scorer
             prob.stats = compute_gram_stats(
@@ -141,8 +149,16 @@ class ShardedExecution(Backend):
     def sis_scores(self, values, ctx: ScoreContext) -> np.ndarray:
         if len(values) == 0:
             return np.zeros((0,))
+        if ctx.problem == "classification" \
+                and _sample_axis(self.mesh) is not None:
+            # the overlap score needs whole sample rows; sample-sharded
+            # meshes fall back to the inner backend (host merge upstream)
+            return self.inner.sis_scores(values, ctx)
         vp, row_mask, f = self._padded_values(values, None)
-        scores = sis_scores_sharded(self.mesh, vp, ctx, row_mask)
+        if ctx.problem == "classification":
+            scores = overlap_sis_scores_sharded(self.mesh, vp, ctx, row_mask)
+        else:
+            scores = sis_scores_sharded(self.mesh, vp, ctx, row_mask)
         return np.asarray(scores, np.float64)[:f]
 
     def sis_topk(self, values, ctx: ScoreContext, n_keep: int,
@@ -152,8 +168,18 @@ class ShardedExecution(Backend):
                 indices=np.zeros((0,), np.int64), scores=np.zeros((0,)),
                 n_source=0,
             )
+        if ctx.problem == "classification" \
+                and _sample_axis(self.mesh) is not None:
+            return ReducedBlock.reduce_host(
+                self.inner.sis_scores(values, ctx), n_keep, mask=mask,
+                largest=True,
+            )
         vp, row_mask, f = self._padded_values(values, mask)
-        vals, idx = sis_topk_sharded(self.mesh, vp, ctx, row_mask, n_keep)
+        if ctx.problem == "classification":
+            vals, idx = overlap_sis_topk_sharded(
+                self.mesh, vp, ctx, row_mask, n_keep)
+        else:
+            vals, idx = sis_topk_sharded(self.mesh, vp, ctx, row_mask, n_keep)
         keep = vals > -np.inf
         return ReducedBlock(
             indices=idx[keep].astype(np.int64), scores=vals[keep], n_source=f
@@ -168,7 +194,8 @@ class ShardedExecution(Backend):
 
     def sis_topk_deferred(self, op_id, a, b, ctx, l_bound, u_bound,
                           n_keep) -> ReducedBlock:
-        if self.inner.fused_deferred and _sample_axis(self.mesh) is None:
+        if self.inner.fused_deferred and _sample_axis(self.mesh) is None \
+                and ctx.problem in self.inner.kernel_problems:
             vals, idx = fused_sis_topk_sharded(
                 self.mesh, op_id, jnp.asarray(a), jnp.asarray(b), ctx,
                 n_keep, l_bound, u_bound,
@@ -186,7 +213,8 @@ class ShardedExecution(Backend):
     # -- ℓ0: sharded scoring -------------------------------------------
     def l0_scores(self, prob: L0Problem, tuples: np.ndarray) -> np.ndarray:
         tuples = np.asarray(tuples)
-        if len(tuples) == 0 or tuples.shape[1] != 2 or prob.method != "gram":
+        if len(tuples) == 0 or tuples.shape[1] != 2 \
+                or prob.problem != "regression" or prob.method != "gram":
             # widths the pair shard-map doesn't cover run on the inner
             # backend (full-vector callers only; the reduced path below
             # shards every width)
@@ -211,7 +239,10 @@ class ShardedExecution(Backend):
         with self._cache_lock:
             entry = prob.cache.get(key)
             if entry is None:
-                if prob.method == "gram":
+                if prob.problem == "classification":
+                    scorer = overlap_topk_scorer()
+                    operands = overlap_operands(prob.cstats)
+                elif prob.method == "gram":
                     scorer = gram_topk_scorer(prob.m)
                     operands = gram_operands(prob.stats)
                 else:

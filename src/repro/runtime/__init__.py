@@ -1,6 +1,3 @@
 from .journal import WorkJournal
-from .monitor import StepMonitor
-from .trainer import Trainer, TrainerConfig, PreemptionError
 
-__all__ = ["WorkJournal", "StepMonitor", "Trainer", "TrainerConfig",
-           "PreemptionError"]
+__all__ = ["WorkJournal"]

@@ -87,6 +87,34 @@ def main() -> int:
                 np.sort(res.sses), np.sort(ref.sses), rtol=1e-6, atol=1e-8)
     print("L0 widths 2-3 sharded(8) == reference winners: OK")
 
+    # ---- classification problem on the 8-device mesh: the overlap SIS
+    # screen + generic ℓ0 reducer shard like regression, winners parity ----
+    from repro.core.problem import get_problem
+
+    yc = (xs[0] * xs[1] > np.median(xs[0] * xs[1])).astype(float)
+    cprob = get_problem("classification")
+    cctx = cprob.build_sis_context(np.ones((1, s)), yc, lay,
+                                   dtype=eng_sh.backend.score_ctx_dtype)
+    xcand = rng.uniform(0.5, 3.0, (53, s))  # 53 % 8 != 0: padding masks
+    serial_c = np.asarray(get_engine("jnp").sis_scores(xcand, cctx))
+    want_c = set(np.argsort(-serial_c, kind="stable")[:6])
+    for eng in (eng_sh, eng_shp):
+        rb = eng.sis_scores(xcand, cctx, n_keep=6)
+        assert isinstance(rb, ReducedBlock) and set(rb.indices) == want_c
+        np.testing.assert_allclose(rb.scores, serial_c[rb.indices],
+                                   rtol=1e-9, atol=1e-12)
+        full = eng.sis_scores(xcand, cctx)
+        np.testing.assert_allclose(full, serial_c, rtol=1e-9, atol=1e-12)
+    ref_c = l0_search(xs, yc, lay, n_dim=2, n_keep=5, block=13,
+                      engine=get_engine("reference"),
+                      problem="classification")
+    for eng in (eng_sh, eng_shp):
+        res_c = l0_search(xs, yc, lay, n_dim=2, n_keep=5, block=13,
+                          engine=eng, problem="classification")
+        assert np.array_equal(res_c.tuples, ref_c.tuples)
+        np.testing.assert_allclose(res_c.sses, ref_c.sses, atol=1e-9)
+    print("classification SIS+L0 sharded(8) == reference winners: OK")
+
     # ---- reduced-block contract: O(k), in-range, sorted ----
     prob = eng_sh.prepare_l0(xs, y, lay)
     tuples = np.asarray(

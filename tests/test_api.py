@@ -15,7 +15,7 @@ import pytest
 
 from repro.api import (
     ARTIFACT_FORMAT, ARTIFACT_VERSION, FittedSisso, NotFittedError,
-    SissoRegressor, SissoServer, load_artifact,
+    SissoClassifier, SissoRegressor, SissoServer, load_artifact,
 )
 from repro.configs.sisso_thermal import thermal_conductivity_case
 from repro.core import SissoConfig, SissoFit
@@ -54,10 +54,15 @@ def test_get_set_params_roundtrip():
 
 
 def test_params_cover_config_fields():
-    """Estimator params mirror SissoConfig one-to-one (aliases excluded)."""
+    """Estimator params mirror SissoConfig one-to-one (aliases excluded;
+    ``problem`` is owned by the estimator *class* — SissoRegressor vs
+    SissoClassifier — not by a constructor parameter)."""
     cfg_fields = {f.name for f in dataclasses.fields(SissoConfig)}
-    cfg_fields -= {"l0_engine", "use_kernels"}   # deprecated aliases
+    cfg_fields -= {"l0_engine", "use_kernels", "problem"}
     assert set(SissoRegressor._get_param_names()) == cfg_fields
+    assert set(SissoClassifier._get_param_names()) == cfg_fields
+    assert SissoRegressor()._config().problem == "regression"
+    assert SissoClassifier()._config().problem == "classification"
 
 
 def test_sklearn_clone_compatibility():
@@ -303,3 +308,122 @@ def test_config_aliases_warn_and_apply():
 def test_core_regressor_shim_warns():
     with pytest.warns(DeprecationWarning, match="repro.api.SissoRegressor"):
         CoreSissoRegressor(SissoConfig(max_rung=1, n_dim=1, n_sis=5))
+
+
+# ---------------------------------------------------------------------------
+# the classification estimator (problem layer surfaced in the api)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def class_fit():
+    from repro.data import classification_dataset
+
+    x, labels, names = classification_dataset(n_samples=150, seed=1)
+    X = x.T
+    clf = SissoClassifier(max_rung=1, n_dim=2, n_sis=8, n_residual=3,
+                          op_names=("add", "sub", "mul", "div"))
+    clf.fit(X[:120], labels[:120], names=names)
+    return clf, X, labels
+
+
+def test_classifier_fit_predict_score(class_fit):
+    clf, X, labels = class_fit
+    assert list(clf.classes_) == ["above", "below"]
+    best = clf.model(1)
+    assert best.problem == "classification" and best.n_overlap == 0
+    # the planted boundary is on f0*f1: held-out accuracy is perfect
+    assert clf.score(X[120:], labels[120:], dim=1) == 1.0
+    pred = clf.predict(X[120:], dim=1)
+    assert set(pred) <= {"above", "below"}
+
+
+def test_classifier_predict_proba_and_decision_function(class_fit):
+    clf, X, labels = class_fit
+    proba = clf.predict_proba(X[120:])
+    assert proba.shape == (len(X) - 120, 2)
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0)
+    assert (proba >= 0).all()
+    df = clf.decision_function(X[120:])
+    # argmax of discriminants == predict
+    lab = np.asarray(clf.classes_)[np.argmax(df, axis=1)]
+    np.testing.assert_array_equal(lab, clf.predict(X[120:]))
+
+
+def test_classifier_artifact_roundtrip(class_fit, tmp_path):
+    clf, X, labels = class_fit
+    path = clf.save(str(tmp_path / "clf.json"))
+    doc = json.load(open(path))
+    assert doc["version"] == ARTIFACT_VERSION
+    assert doc["config"]["problem"] == "classification"
+    assert doc["class_labels"] == ["above", "below"]
+    re = SissoClassifier.from_artifact(path)
+    np.testing.assert_array_equal(re.predict(X), clf.predict(X))
+    np.testing.assert_allclose(re.predict_proba(X), clf.predict_proba(X))
+    # problem-agnostic load works too and knows its kind
+    agn = load_artifact(path)
+    assert agn.problem == "classification"
+    np.testing.assert_array_equal(agn.predict(X), clf.predict(X))
+
+
+def test_classification_artifact_rejected_by_regressor(class_fit, tmp_path):
+    clf, X, labels = class_fit
+    path = clf.save(str(tmp_path / "clf.json"))
+    with pytest.raises(ValueError, match="holds a classification model"):
+        SissoRegressor.from_artifact(path)
+
+
+def test_regression_artifact_rejected_by_classifier(quick_fit, tmp_path):
+    est, X, y = quick_fit
+    path = est.save(str(tmp_path / "reg.json"))
+    with pytest.raises(ValueError, match="holds a regression model"):
+        SissoClassifier.from_artifact(path)
+
+
+def test_v1_artifact_loads_as_regression(quick_fit, tmp_path):
+    """Pre-problem-layer artifacts (v1, no ``problem`` key) stay loadable."""
+    est, X, y = quick_fit
+    path = est.save(str(tmp_path / "reg.json"))
+    doc = json.load(open(path))
+    doc["version"] = 1
+    del doc["config"]["problem"]
+    del doc["class_labels"]
+    for models in doc["models"].values():
+        for m in models:
+            del m["problem"]
+    p1 = str(tmp_path / "reg_v1.json")
+    json.dump(doc, open(p1, "w"))
+    old = load_artifact(p1)
+    assert old.problem == "regression"
+    np.testing.assert_array_equal(old.predict(X), est.predict(X))
+    re = SissoRegressor.from_artifact(p1)
+    np.testing.assert_array_equal(re.predict(X), est.predict(X))
+
+
+def test_score_centers_per_task(rng):
+    """Estimator r² centers y per task, matching SissoModel.r2 — global
+    centering would let the between-task offset inflate the score."""
+    X = rng.uniform(0.5, 3.0, (60, 4))
+    t = np.repeat([0, 1], 30)
+    y = 2.0 * X[:, 0] * X[:, 1] + np.where(t == 0, 0.0, 100.0)
+    est = SissoRegressor(max_rung=1, n_dim=1, n_sis=8,
+                         op_names=("mul", "add"))
+    est.fit(X, y, names=list("abcd"), tasks=t)
+    r2 = est.score(X, y, tasks=t)
+    assert 0.99 < r2 <= 1.0
+    # identical to the core model's per-task-centered r² on the same data
+    mdl = est.fit_result_.best()
+    xm = est.fit_result_.fspace.values_matrix()
+    rows = [est.fit_result_.fspace.features[f.fid].row for f in mdl.features]
+    ys = y[np.argsort(t, kind="stable")]
+    assert r2 == pytest.approx(mdl.r2(ys, xm[rows]), abs=1e-9)
+    # a per-task-mean null model must not look predictive
+    null = y - np.where(t == 0, y[:30].mean(), y[30:].mean())
+    ss_tot = sum(((y[t == k] - y[t == k].mean()) ** 2).sum() for k in (0, 1))
+    assert 1.0 - (null ** 2).sum() / ss_tot == pytest.approx(0.0, abs=1e-12)
+
+
+def test_classifier_rejects_single_class():
+    clf = SissoClassifier(max_rung=1, n_dim=1, n_sis=4)
+    X = np.random.default_rng(0).uniform(1, 2, (20, 3))
+    with pytest.raises(ValueError, match=">= 2 classes"):
+        clf.fit(X, np.zeros(20))

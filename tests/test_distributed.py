@@ -32,12 +32,6 @@ def test_distributed_sis_l0_3d_pod_mesh():
     assert "L0 distributed == serial: OK" in out
 
 
-def test_sharded_step_and_elastic_checkpoint():
-    out = _run("check_elastic_ckpt.py")
-    assert "sharded step == single-device step: OK" in out
-    assert "elastic checkpoint reshard (4x1 -> 2x1): OK" in out
-
-
 def test_sharded_execution_engine_8dev():
     """ShardedExecution over jnp and pallas(interpret) on a forced 8-device
     mesh: SIS, fused deferred SIS, ℓ0 widths 2–3 winner-set parity plus the
@@ -46,6 +40,7 @@ def test_sharded_execution_engine_8dev():
     assert "SIS sharded(8) == serial winners: OK" in out
     assert "deferred SIS fused+sharded(8) == pallas winners: OK" in out
     assert "L0 widths 2-3 sharded(8) == reference winners: OK" in out
+    assert "classification SIS+L0 sharded(8) == reference winners: OK" in out
     assert "reduced-block contract (O(k) winners): OK" in out
 
 

@@ -10,7 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs.sisso_thermal import thermal_conductivity_case
-from repro.core import SissoSolver, compile_features, operators as om
+from repro.core import SissoConfig, SissoSolver, compile_features, \
+    operators as om
 from repro.core.feature_space import FeatureSpace
 from repro.core.l0 import l0_search
 from repro.core.sis import TaskLayout, build_score_context, sis_screen
@@ -206,6 +207,87 @@ def test_full_fit_parity_thermal(case, backend):
         mr, mb = fit_ref.best(dim), fit.best(dim)
         assert {f.expr for f in mr.features} == {f.expr for f in mb.features}
         assert mb.sse == pytest.approx(mr.sse, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# classification problem parity (core/problem.py): the same synthetic
+# linearly-separable case must produce identical SIS winner sets and
+# identical ℓ0 descriptors on every backend — the Problem-layer analogue
+# of the regression rows above.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def class_case():
+    from repro.data import classification_dataset
+
+    x, labels, names = classification_dataset(n_samples=90, seed=7)
+    y = (labels == "above").astype(float)
+    return x, y, names
+
+
+def _class_fspace(x, names):
+    return FeatureSpace(
+        x, names, None, op_names=("add", "sub", "mul", "div"),
+        max_rung=1, on_the_fly_last_rung=True,
+    ).generate()
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_sis_classification_winner_parity(class_case, backend):
+    """Identical classification SIS winner sets (materialized + deferred
+    candidates) on every backend."""
+    x, y, names = class_case
+    layout = TaskLayout.single(x.shape[1])
+    state = np.ones((1, x.shape[1]))
+    f_ref, s_ref = sis_screen(
+        _class_fspace(x, names), state, layout, n_sis=12, exclude=set(),
+        engine=get_engine("reference"), problem="classification", y=y,
+    )
+    f_b, s_b = sis_screen(
+        _class_fspace(x, names), state, layout, n_sis=12, exclude=set(),
+        engine=get_engine(backend), problem="classification", y=y,
+    )
+    assert {f.expr for f in f_b} == {f.expr for f in f_ref}
+    np.testing.assert_allclose(sorted(s_b), sorted(s_ref), atol=1e-9)
+    # the planted separating product must be among the winners, overlap-free
+    assert any("f0 * f1" in f.expr for f in f_b)
+    assert s_b[0] == pytest.approx(0.0, abs=1e-12)
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+@pytest.mark.parametrize("width", [1, 2, 3])
+def test_l0_classification_descriptor_parity(class_case, backend, width):
+    """Identical ℓ0 winner tuples for the overlap objective, every width."""
+    x, y, _ = class_case
+    layout = TaskLayout.from_task_ids(
+        np.repeat([0, 1], [40, x.shape[1] - 40]))
+    ref = l0_search(x[:6], y, layout, n_dim=width, n_keep=5, block=7,
+                    engine=get_engine("reference"), problem="classification")
+    res = l0_search(x[:6], y, layout, n_dim=width, n_keep=5, block=7,
+                    engine=get_engine(backend), problem="classification")
+    assert np.array_equal(res.tuples, ref.tuples)
+    np.testing.assert_allclose(res.sses, ref.sses, atol=1e-9)
+    assert res.n_evaluated == ref.n_evaluated
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_full_fit_classification_parity(class_case, backend):
+    """End-to-end classification fit: identical descriptors, overlap
+    objectives and decision boundaries on every backend."""
+    x, y, names = class_case
+    cfg = SissoConfig(max_rung=1, n_dim=2, n_sis=8, n_residual=3,
+                      problem="classification", backend="reference",
+                      op_names=("add", "sub", "mul", "div"))
+    import dataclasses
+    fit_ref = SissoSolver(cfg).fit(x, y, names)
+    fit_b = SissoSolver(
+        dataclasses.replace(cfg, backend=backend)).fit(x, y, names)
+    for dim in fit_ref.models_by_dim:
+        mr, mb = fit_ref.best(dim), fit_b.best(dim)
+        assert {f.expr for f in mr.features} == {f.expr for f in mb.features}
+        assert mb.n_overlap == mr.n_overlap
+        assert mb.score == pytest.approx(mr.score, abs=1e-9)
+        np.testing.assert_allclose(mb.coefs, mr.coefs, rtol=1e-9, atol=1e-12)
 
 
 @pytest.mark.parametrize("backend", ALL_BACKENDS)

@@ -1,13 +1,10 @@
-"""Tests for the loop-aware HLO analyzer and the dry-run cell logic."""
+"""Tests for the loop-aware HLO analyzer (launch/hlo_analysis.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as ha
-from repro.launch.specs import effective_config, input_specs, params_spec
-from repro.models import SHAPE_CASES, cell_applicable, shape_case
-from repro.models.base import LMConfig
 
 
 def _compile_text(fn, *args):
@@ -66,56 +63,3 @@ def test_shape_parsing():
     assert ha._shape_bytes("(s32[], f32[4,128])") == 4 + 4 * 128 * 4
     assert ha._shape_dims("f32[4,64]{1,0}") == [4, 64]
     assert ha._shape_dims("pred[]") == []
-
-
-# ---------------------------------------------------------------------------
-# dry-run cell logic
-# ---------------------------------------------------------------------------
-
-def _dense_cfg(**kw):
-    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
-                n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256)
-    base.update(kw)
-    return LMConfig(**base)
-
-
-def test_long_500k_applicability():
-    full = _dense_cfg()
-    sub = _dense_cfg(sub_quadratic=True)
-    case = shape_case("long_500k")
-    assert not cell_applicable(full, case)[0]
-    assert cell_applicable(sub, case)[0]
-    for c in SHAPE_CASES:
-        if c.name != "long_500k":
-            assert cell_applicable(full, c)[0]
-
-
-def test_input_specs_shapes_per_kind():
-    cfg = _dense_cfg()
-    train = input_specs(cfg, shape_case("train_4k"))
-    assert train["tokens"].shape == (256, 4097)
-    pre = input_specs(cfg, shape_case("prefill_32k"))
-    assert pre["tokens"].shape == (32, 32768)
-    dec = input_specs(cfg, shape_case("decode_32k"))
-    assert dec["token"].shape == (128, 1)
-    assert dec["pos"] == 32767
-    # cache leaves sized by the case seq_len
-    k = dec["cache"]["k"]
-    assert k.shape == (2, 128, 32768, 2, 16)
-
-
-def test_whisper_decode_cell_resizes_cache():
-    cfg = _dense_cfg(family="audio", is_encoder_decoder=True, n_enc_layers=2,
-                     n_kv_heads=4, max_target_len=448)
-    ecfg = effective_config(cfg, shape_case("decode_32k"))
-    assert ecfg.max_target_len == 32768  # "KV cache of seq_len" per task spec
-    assert effective_config(cfg, shape_case("train_4k")).max_target_len == 448
-
-
-def test_params_spec_no_allocation():
-    cfg = _dense_cfg()
-    tpl = params_spec(cfg, shape_case("train_4k"))
-    for leaf in jax.tree.leaves(tpl):
-        assert isinstance(leaf, jax.ShapeDtypeStruct)
-    # padded vocab shows up in the embed table
-    assert tpl["embed"]["table"].shape == (256, 64)
