@@ -62,6 +62,8 @@ def _wall(fn):
 
 def main(samples: int = 400, m: int = 256, quick: bool = False):
     reset_bench_rows()
+    if quick:
+        m, samples = min(m, 128), min(samples, 200)
     rng = np.random.default_rng(0)
     x = rng.uniform(0.5, 3.0, (m, samples))
     y = 2 * x[3] * x[10] + rng.normal(0, 0.3, samples)
@@ -70,7 +72,7 @@ def main(samples: int = 400, m: int = 256, quick: bool = False):
     stats = compute_gram_stats(xs, ys, layout)
     pairs_all = np.stack(np.triu_indices(m, 1), 1).astype(np.int32)
 
-    for batch in (4096, 16384, 32640):
+    for batch in (4096,) if quick else (4096, 16384, 32640):
         if batch > len(pairs_all):
             continue
         pairs = jnp.asarray(pairs_all[:batch])
@@ -137,6 +139,37 @@ def main(samples: int = 400, m: int = 256, quick: bool = False):
          f"{total3 / t_stream:.0f} tuples/s incl. enumeration "
          f"(unrank + double-buffer + merge-skip; "
          f"{t_legacy / t_stream:.2f}x vs legacy)")
+
+    # ---- reduced top-k epilogue vs full SSE vector (Gram-gather kernel) --
+    # same tuples, same kernel math; the reduced path emits (k_pad,) winner
+    # panels per tile + a device merge instead of the full (B,) SSE vector
+    mr = 24 if quick else 32
+    xr = rng.uniform(0.5, 3.0, (mr, samples))
+    yr = 2 * xr[3] - xr[10] + rng.normal(0, 0.3, samples)
+    stats_r = compute_gram_stats(jnp.asarray(xr), jnp.asarray(yr), layout)
+    pack_r = kops.pack_gram_fp32(stats_r)
+    tuples_r = np.asarray(
+        list(itertools.combinations(range(mr), 3)), np.int32)
+    br, block_t, k_epi = len(tuples_r), 512, 64
+    t_full = time_call(
+        lambda t: kops.l0_score_tuples(pack_r, t, block_t=block_t,
+                                       interpret=True),
+        jnp.asarray(tuples_r), repeats=1)
+    t_redu = time_call(
+        lambda t: kops.l0_topk_tuples(pack_r, t, n_keep=10, block_t=block_t,
+                                      epilogue_k=k_epi, interpret=True),
+        jnp.asarray(tuples_r), repeats=1)
+    k_pad = ((max(k_epi, 128) + 127) // 128) * 128
+    ntiles = -(-br // block_t)
+    full_bpt = 4.0  # one fp32 SSE per tuple out of the kernel
+    red_bpt = ntiles * k_pad * 8 / br  # (val f32 + idx i32) panels
+    emit(f"l0_gather_w3_full_b{br}", t_full * 1e6,
+         f"{br / t_full:.0f} models/s, full SSE vector "
+         f"({full_bpt:.2f} B/tuple out, interpret)")
+    emit(f"l0_gather_w3_reduced_b{br}", t_redu * 1e6,
+         f"{br / t_redu:.0f} models/s incl. device top-10 merge "
+         f"({red_bpt:.2f} B/tuple out, {full_bpt / red_bpt:.1f}x less "
+         "traffic, interpret)")
 
     # width 3/4 on the Pallas Gram-gather backend (interpret on CPU: slow
     # by construction — the row tracks correctness-path throughput only)

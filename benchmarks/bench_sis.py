@@ -4,6 +4,13 @@ Features/second for the Pearson screen: materialized matmul path vs the
 fused generate+score path (never materializes candidate values in HBM),
 over candidate-batch sizes (the paper tunes 50–100 M on GPUs; scaled to
 CPU-feasible sizes here — the shape of the curve is the point).
+
+The ``*_reduced`` rows time the same fused kernel with the in-kernel
+top-k epilogue (kernels/topk.py): each grid step emits a (k_pad,) winner
+panel instead of a (block_b,) score row, and a device tree merge leaves an
+O(k) payload.  ``bytes/cand`` is kernel output bytes per candidate — the
+traffic the epilogue removes — computed from shapes, not measured.
+Recorded to ``BENCH_sis.json``.
 """
 from __future__ import annotations
 
@@ -13,18 +20,22 @@ import jax.numpy as jnp
 from repro.core import operators as om
 from repro.core.sis import TaskLayout, build_score_context, score_block
 from repro.kernels import ops as kops
-from .common import emit, time_call
+from .common import emit, reset_bench_rows, time_call, write_bench_json
 
 
-def main(samples: int = 156):
+def main(samples: int = 156, quick: bool = False):
+    reset_bench_rows()
     rng = np.random.default_rng(0)
     nf = 400
+    # block_b >> k_pad is where the epilogue pays: the winner panel is
+    # lane-padded to 128, so a 1024-row block writes 1 B/cand vs 4 B/cand
+    n_keep, block_b, k_epi = 50, 1024, 64
     x = rng.uniform(0.5, 3.0, (nf, samples))
     layout = TaskLayout.from_task_ids(np.repeat([0, 1], samples // 2))
     resid = rng.normal(size=(10, samples))  # paper: ten residuals
     ctx = build_score_context(resid, layout)
 
-    for batch in (8192, 32768, 131072):
+    for batch in (8192,) if quick else (8192, 32768, 131072):
         ia = rng.integers(0, nf, batch)
         ib = rng.integers(0, nf, batch)
         vals = jnp.asarray(x[ia] * x[ib], jnp.float64)  # pre-materialized
@@ -34,11 +45,44 @@ def main(samples: int = 156):
         t_fused = time_call(
             lambda aa, bb: kops.fused_gen_sis(om.MUL, aa, bb, ctx, 1e-5, 1e8),
             a, b)
+        t_red = time_call(
+            lambda aa, bb: kops.fused_gen_sis_topk(
+                om.MUL, aa, bb, ctx, 1e-5, 1e8, n_keep=n_keep,
+                block_b=block_b, epilogue_k=k_epi),
+            a, b)
+        # kernel output bytes per candidate: full path writes one fp32
+        # score per row; the reduced path writes (val f32 + idx i32) panels
+        # of k_pad lanes per block_b rows
+        k_pad = ((max(k_epi, 128) + 127) // 128) * 128
+        nb = -(-batch // block_b)
+        full_bpc = 4.0
+        red_bpc = nb * k_pad * 8 / batch
         emit(f"sis_materialized_batch{batch}", t_mat * 1e6,
              f"{batch / t_mat:.0f} feats/s")
         emit(f"sis_fused_otf_batch{batch}", t_fused * 1e6,
              f"{batch / t_fused:.0f} feats/s incl. generation "
-             "(values never reach HBM)")
+             f"(values never reach HBM; {full_bpc:.2f} B/cand out)")
+        emit(f"sis_fused_reduced_batch{batch}", t_red * 1e6,
+             f"{batch / t_red:.0f} feats/s incl. generation + top-{n_keep} "
+             f"({red_bpc:.2f} B/cand out, {full_bpc / red_bpc:.1f}x less "
+             "traffic than full scores)")
+
+    # bf16-native operand generation (MXU-native matmuls, fp32 accumulate)
+    batch = 8192
+    ia = rng.integers(0, nf, batch)
+    ib = rng.integers(0, nf, batch)
+    for dt, tag in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16")):
+        a = jnp.asarray(x[ia], dt)
+        b = jnp.asarray(x[ib], dt)
+        t = time_call(
+            lambda aa, bb: kops.fused_gen_sis_topk(
+                om.MUL, aa, bb, ctx, 1e-5, 1e8, n_keep=n_keep,
+                block_b=block_b, epilogue_k=k_epi, dtype=dt),
+            a, b)
+        emit(f"sis_fused_reduced_{tag}_batch{batch}", t * 1e6,
+             f"{batch / t:.0f} feats/s ({tag} operands, fp32 accumulate)")
+
+    write_bench_json("sis")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ push — the machine-readable perf trajectory — without paying for the full
 sweep.
 """
 import argparse
+import inspect
 
 import jax
 
@@ -22,7 +23,7 @@ from . import (bench_backends, bench_classify, bench_e2e_kaggle,
 
 #: fast modules that record BENCH_*.json — the CI smoke set
 SMOKE_MODULES = (bench_precision, bench_backends, bench_serve,
-                 bench_classify)
+                 bench_classify, bench_sis, bench_l0)
 
 ALL_MODULES = (bench_feature_gen, bench_sis, bench_l0, bench_precision,
                bench_backends, bench_serve, bench_classify,
@@ -32,7 +33,10 @@ ALL_MODULES = (bench_feature_gen, bench_sis, bench_l0, bench_precision,
 def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     for mod in (SMOKE_MODULES if smoke else ALL_MODULES):
-        mod.main()
+        kwargs = {}
+        if smoke and "quick" in inspect.signature(mod.main).parameters:
+            kwargs["quick"] = True
+        mod.main(**kwargs)
 
 
 if __name__ == "__main__":

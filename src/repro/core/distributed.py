@@ -269,6 +269,39 @@ def make_l0_topk_fn(mesh: Mesh, scorer, k_local: int, k_merge: int,
     return jax.jit(local)
 
 
+def make_l0_topk_reduced_fn(mesh: Mesh, reducer, k_local: int, k_merge: int,
+                            n_operands: int):
+    """Reduced-epilogue variant of :func:`make_l0_topk_fn`.
+
+    ``reducer(tuples_blk, valid_blk, *operands) -> (sse (k_local,), local_idx
+    (k_local,))`` runs a *kernel-side* top-k (e.g. the Pallas Gram-gather
+    reduced epilogue via ``Backend.l0_device_reducer``) so the full per-shard
+    SSE vector never reaches HBM — only k-sized panels.  The reducer masks
+    its own padding (valid rows form a global prefix, so each shard derives
+    its live count from ``valid_blk``) and returns ascending fp32 SSEs with
+    ``+inf`` sentinels; indices are shard-local and lifted to global row
+    numbers here before the all-gather merge.  Because the reducer is an
+    fp32 prescreen, the caller rescores the merged survivors in fp64.
+    """
+    dp = _dp_axes(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(dp, None), P(dp)) + (P(),) * n_operands,
+        out_specs=(P(None), P(None)),
+        check_rep=False,
+    )
+    def local(tup_blk, vld_blk, *ops):
+        sse, lidx = reducer(tup_blk, vld_blk, *ops)
+        gidx = tup_blk.shape[0] * _shard_index(dp) + lidx
+        gv = jax.lax.all_gather(-sse, dp, tiled=True)
+        gi = jax.lax.all_gather(gidx, dp, tiled=True)
+        n2, s2 = jax.lax.top_k(gv, k_merge)
+        return -n2, gi[s2]
+
+    return jax.jit(local)
+
+
 def gram_topk_scorer(m: int):
     """Traceable Gram-closed-form scorer for :func:`make_l0_topk_fn`.
 
@@ -417,17 +450,20 @@ def overlap_sis_topk_sharded(
 @functools.lru_cache(maxsize=None)
 def _fused_sis_topk_fn(mesh: Mesh, op_id: int, n_residuals: int,
                        k_local: int, k_merge: int, l_bound: float,
-                       u_bound: float, block_b: int, interpret: bool):
+                       u_bound: float, block_b: int, interpret: bool,
+                       epilogue_k: int = 64):
     """Compiled shard_map-wrapped fused SIS kernel with device merge.
 
-    Each shard runs the Pallas fused gen+validate+score kernel
-    (kernels/fused_sis.py) on its candidate slice — values live only in
-    that shard's VMEM — masks its padding rows in-kernel (``n_valid``),
-    takes a local top-k and joins the k-sized all-gather merge.  This is
-    the ROADMAP "fused sharded kernel": the deferred screen is fused *and*
-    distributed.
+    Each shard runs the *reduced-epilogue* Pallas fused gen+validate+score
+    kernel (kernels/fused_sis.py) on its candidate slice — values live only
+    in that shard's VMEM, padding rows die in-kernel (``n_valid``) and each
+    grid step emits only its top-k panel.  The shard flattens its panels,
+    takes a local top-``k_local`` and joins the k-sized all-gather merge:
+    no full per-shard score vector exists at any point.  This is the
+    ROADMAP "fused sharded kernel": the deferred screen is fused *and*
+    distributed, end-to-end O(k).
     """
-    from ..kernels.fused_sis import fused_gen_sis_pallas
+    from ..kernels.fused_sis import fused_gen_sis_topk_pallas
 
     dp = _dp_axes(mesh)
 
@@ -439,15 +475,19 @@ def _fused_sis_topk_fn(mesh: Mesh, op_id: int, n_residuals: int,
         check_rep=False,
     )
     def local(a_blk, b_blk, m_blk, yt_blk, cnt, nv_blk):
-        scores = fused_gen_sis_pallas(
+        vals, gidx = fused_gen_sis_topk_pallas(
             op_id, a_blk, b_blk, m_blk, yt_blk, cnt,
             n_residuals=n_residuals, l_bound=l_bound, u_bound=u_bound,
-            block_b=block_b, interpret=interpret, n_valid=nv_blk[0],
+            epilogue_k=epilogue_k, block_b=block_b, interpret=interpret,
+            n_valid=nv_blk[0],
         )
-        vals, sel = jax.lax.top_k(scores, k_local)
-        gidx = scores.shape[0] * _shard_index(dp) + sel
-        gv = jax.lax.all_gather(vals, dp, tiled=True)
-        gi = jax.lax.all_gather(gidx, dp, tiled=True)
+        v1, sel = jax.lax.top_k(vals.reshape(-1), k_local)
+        li = gidx.reshape(-1)[sel]
+        # kernel indices are shard-local; lift to global row numbers
+        # (sentinel lanes are -inf-valued and filtered by the caller)
+        gi1 = a_blk.shape[0] * _shard_index(dp) + li
+        gv = jax.lax.all_gather(v1, dp, tiled=True)
+        gi = jax.lax.all_gather(gi1, dp, tiled=True)
         v2, s2 = jax.lax.top_k(gv, k_merge)
         return v2, gi[s2]
 
@@ -465,6 +505,8 @@ def fused_sis_topk_sharded(
     u_bound: float,
     block_b: int = 256,
     interpret: bool = True,
+    epilogue_k: int = 64,
+    dtype=None,        # kernel compute dtype; None -> fp32
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-``n_keep`` (scores desc, indices) of a deferred candidate block,
     fused (Pallas) and distributed (shard_map), merged on device.
@@ -480,6 +522,7 @@ def fused_sis_topk_sharded(
         "fused sharded SIS requires sample-replicated meshes; use the "
         "compose path (eval + sis_topk_sharded) on sample-sharded meshes"
     )
+    dtype = jnp.float32 if dtype is None else jnp.dtype(dtype)
     bsz, s = a.shape
     nd = _n_dp(mesh)
     s_pad = ((max(s, 128) + 127) // 128) * 128
@@ -488,8 +531,8 @@ def fused_sis_topk_sharded(
     b_local = b_pad // nd
 
     def pad2(v, rows, cols, fill):
-        out = jnp.full((rows, cols), fill, jnp.float32)
-        return out.at[: v.shape[0], : v.shape[1]].set(v.astype(jnp.float32))
+        out = jnp.full((rows, cols), fill, dtype)
+        return out.at[: v.shape[0], : v.shape[1]].set(v.astype(dtype))
 
     a_p = pad2(jnp.asarray(a), b_pad, s_pad, 1.0)
     b_p = pad2(jnp.asarray(b), b_pad, s_pad, 1.0)
@@ -501,9 +544,13 @@ def fused_sis_topk_sharded(
 
     k_local = min(int(n_keep), b_local)
     k_merge = min(int(n_keep), nd * k_local)
+    # every grid step's window must cover k_local or a shard whose winners
+    # cluster in one block would lose some before its local merge
+    k_epi = min(block_b, max(int(epilogue_k), min(k_local, block_b)))
     fn = _fused_sis_topk_fn(
         mesh, int(op_id), ctx.n_residuals, k_local, k_merge,
         float(l_bound), float(u_bound), int(block_b), bool(interpret),
+        int(k_epi),
     )
     vals, idx = fn(a_p, b_p, m_p, yt_p, cnt, jnp.asarray(nv))
     return np.asarray(vals, np.float64), np.asarray(idx)

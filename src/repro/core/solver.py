@@ -143,6 +143,12 @@ class SissoSolver:
         journal=None,
     ) -> SissoFit:
         cfg = self.cfg
+        if journal is not None and getattr(journal, "path", None):
+            # tuned launch configs persist next to the work journal so a
+            # resumed / repeated fit skips the first-batch timing sweep
+            from ..kernels import autotune
+
+            autotune.set_cache_path(journal.path + ".autotune")
         y = np.asarray(y, np.float64)
         s = y.shape[0]
         layout = (

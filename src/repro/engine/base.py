@@ -210,6 +210,24 @@ class Backend(abc.ABC):
             self.l0_scores(prob, tuples), n_keep, largest=False
         )
 
+    def l0_device_reducer(self, prob: "L0Problem", width: int,
+                          k_local: int):
+        """Optional traceable per-shard reducer for composed distribution.
+
+        A backend whose ℓ0 kernel has a reduced top-k epilogue returns
+        ``(reducer, operands)`` where ``reducer(tup_blk, vld_blk,
+        *operands)`` is jit/shard_map-traceable and yields ``(sse
+        (k_local,) ascending fp32 with +inf sentinels, local_idx (k_local,)
+        int32)`` — the distribution wrapper (engine/sharded.py) then merges
+        the O(k) winner panels across shards without ever materializing a
+        per-shard SSE vector.  ``None`` (the default) means "no device
+        reducer for this problem/width"; the wrapper falls back to its
+        full-vector scorer + per-shard ``top_k``.  Reducer outputs are a
+        fp32 prescreen: the wrapper must rescore the merged survivors in
+        fp64 before final ranking.
+        """
+        return None
+
     # -- phase 3: ℓ0 tuple search --------------------------------------
     def prepare_l0(
         self,

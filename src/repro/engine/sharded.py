@@ -37,7 +37,8 @@ from jax.sharding import Mesh
 from ..core.distributed import (
     _dp_axes, _sample_axis, fused_sis_topk_sharded, gram_operands,
     gram_topk_scorer, l0_pair_sses_sharded, make_l0_topk_fn,
-    overlap_operands, overlap_sis_scores_sharded, overlap_sis_topk_sharded,
+    make_l0_topk_reduced_fn, overlap_operands, overlap_sis_scores_sharded,
+    overlap_sis_topk_sharded,
     overlap_topk_scorer, qr_topk_scorer, sis_scores_sharded,
     sis_topk_sharded,
 )
@@ -201,6 +202,8 @@ class ShardedExecution(Backend):
                 n_keep, l_bound, u_bound,
                 block_b=getattr(self.inner, "block_b", 256),
                 interpret=self.inner.resolved_interpret,
+                epilogue_k=getattr(self.inner, "epilogue_k", 64),
+                dtype=getattr(self.inner, "kernel_dtype", None),
             )
             keep = vals > -np.inf
             return ReducedBlock(
@@ -233,25 +236,46 @@ class ShardedExecution(Backend):
         )
         return np.asarray(sses, np.float64)[:b]
 
-    def _l0_reducer(self, prob: L0Problem, width: int, k_local: int,
-                    k_merge: int):
-        key = ("sharded_l0_topk", width, k_local, k_merge)
+    def _l0_reducer(self, prob: L0Problem, width: int, n_keep: int,
+                    b_shard: int):
+        """Compiled sharded ℓ0 reducer for one (width, n_keep, shard) shape.
+
+        Prefers the inner backend's device-side reduced epilogue
+        (``Backend.l0_device_reducer``, e.g. the Pallas Gram-gather top-k
+        panels) with a 2×``n_keep`` prescreen margin — the kernel screen is
+        fp32, so the wrapper rescores merged survivors in fp64 before the
+        final ranking.  Falls back to the full-vector traceable scorers
+        (overlap / Gram closed form / QR) when the inner backend has none.
+        Returns ``(fn, operands, prescreen, k_merge)``.
+        """
+        key = ("sharded_l0_topk", width, int(n_keep), int(b_shard))
         with self._cache_lock:
             entry = prob.cache.get(key)
             if entry is None:
-                if prob.problem == "classification":
-                    scorer = overlap_topk_scorer()
-                    operands = overlap_operands(prob.cstats)
-                elif prob.method == "gram":
-                    scorer = gram_topk_scorer(prob.m)
-                    operands = gram_operands(prob.stats)
+                k_local = min(2 * int(n_keep), b_shard)
+                dev = self.inner.l0_device_reducer(prob, width, k_local)
+                if dev is not None:
+                    reducer, operands = dev
+                    k_merge = min(2 * int(n_keep), self._nd * k_local)
+                    fn = make_l0_topk_reduced_fn(
+                        self.mesh, reducer, k_local, k_merge, len(operands))
+                    entry = prob.cache[key] = (fn, operands, True, k_merge)
                 else:
-                    scorer = qr_topk_scorer(prob.layout, prob.dtype)
-                    operands = (jnp.asarray(prob.x, prob.dtype),
-                                jnp.asarray(prob.y, prob.dtype))
-                fn = make_l0_topk_fn(self.mesh, scorer, k_local, k_merge,
-                                     len(operands))
-                entry = prob.cache[key] = (fn, operands)
+                    if prob.problem == "classification":
+                        scorer = overlap_topk_scorer()
+                        operands = overlap_operands(prob.cstats)
+                    elif prob.method == "gram":
+                        scorer = gram_topk_scorer(prob.m)
+                        operands = gram_operands(prob.stats)
+                    else:
+                        scorer = qr_topk_scorer(prob.layout, prob.dtype)
+                        operands = (jnp.asarray(prob.x, prob.dtype),
+                                    jnp.asarray(prob.y, prob.dtype))
+                    k_local = min(int(n_keep), b_shard)
+                    k_merge = min(int(n_keep), self._nd * k_local)
+                    fn = make_l0_topk_fn(self.mesh, scorer, k_local, k_merge,
+                                         len(operands))
+                    entry = prob.cache[key] = (fn, operands, False, k_merge)
         return entry
 
     def l0_topk(self, prob: L0Problem, tuples, n_keep: int) -> ReducedBlock:
@@ -270,15 +294,23 @@ class ShardedExecution(Backend):
             tuples = jnp.concatenate([tuples, fill], axis=0)
         valid = np.zeros((bp,), bool)
         valid[:b] = True
-        k_local = min(int(n_keep), bp // self._nd)
-        k_merge = min(int(n_keep), self._nd * k_local)
-        fn, operands = self._l0_reducer(prob, width, k_local, k_merge)
+        fn, operands, prescreen, _ = self._l0_reducer(
+            prob, width, int(n_keep), bp // self._nd)
         sses, idx = fn(tuples, jnp.asarray(valid), *operands)
         sses = np.asarray(sses, np.float64)
         idx = np.asarray(idx)
         keep = np.isfinite(sses)
+        sses, idx = sses[keep], idx[keep]
+        if prescreen and len(idx):
+            # the device screen is fp32; rescore the O(k) survivors in fp64
+            # and re-rank.  Candidates sort by global index first so exact-
+            # SSE ties resolve to the lowest index (stable-merge semantics).
+            gidx = np.sort(np.unique(idx))
+            exact = self.inner._exact_rescore(prob, tuples[jnp.asarray(gidx)])
+            order = np.argsort(exact, kind="stable")[: int(n_keep)]
+            sses, idx = exact[order], gidx[order]
         return ReducedBlock(
-            indices=idx[keep].astype(np.int64), scores=sses[keep], n_source=b
+            indices=idx.astype(np.int64), scores=sses, n_source=b
         )
 
 

@@ -15,11 +15,20 @@ Layout (one grid step = one block of `block_b` candidates):
     compute:              V = op(A,B)                     VPU
                           sums/sumsq/dots = V @ {M,Yt}ᵀ   MXU
                           epilogue: r, |r| mean/max, validity -> score
-    VMEM -> HBM:          scores (1, block_b)
+    VMEM -> HBM:          scores (1, block_b)           [full variant]
+                          top-k (vals, idx) (1, k_pad)  [reduced variant]
 
 Tiles are (8·k, 128·k)-aligned; the sample axis is padded to a multiple of
 128 with neutral values (1.0 for children — safe for every operator domain —
 and 0 rows in M/Yt so padding never contributes).
+
+Compute dtype: A/B/M/Yt arrive in the backend's kernel dtype (bf16 under
+``precision="bf16"``, fp32 otherwise).  Child generation and the MXU
+operands stay in that dtype; every matmul accumulates in fp32 via
+``preferred_element_type`` and the score epilogue is pure fp32.  bf16 shares
+fp32's exponent range, so validity/overflow behaviour is unchanged; only
+mantissa noise differs, and the fp64 two-phase rescore downstream pins final
+rankings.
 """
 from __future__ import annotations
 
@@ -31,27 +40,25 @@ from jax.experimental import pallas as pl
 
 from ..core.operators import apply_op
 from ..core.validity import value_rules_from_moments
+from .topk import block_topk
 
 _EPS = 1e-12
+#: rsqrt guard by compute dtype.  bf16 products carry ~1e-2..1e-3 relative
+#: noise into the fp32-accumulated moments, so the fp32-era epsilon would
+#: let pure-noise variances pass through the normalization as huge scores.
+_EPS_BY_DTYPE = {"float32": 1e-12, "bfloat16": 1e-6}
 
 
-def _kernel(
-    a_ref, b_ref, m_ref, yt_ref, cnt_ref, nv_ref, out_ref,
-    *, op_id: int, n_tasks: int, n_residuals: int,
-    l_bound: float, u_bound: float,
+def _block_scores(
+    a, b, m, yt, cnt, nv, *, op_id: int, n_tasks: int, n_residuals: int,
+    l_bound: float, u_bound: float, first_row,
 ):
-    a = a_ref[...]
-    b = b_ref[...]
-    m = m_ref[...]            # (T, s_pad)
-    yt = yt_ref[...]          # (R*T, s_pad)
-    cnt = cnt_ref[...]        # (1, T)
-    nv = nv_ref[0, 0]         # count of real (non-padding) candidate rows
-
-    v = apply_op(op_id, a, b)                       # (B, s_pad)
+    """Masked (B,) fp32 score row for one block; -inf marks invalid rows."""
+    v = apply_op(op_id, a, b)                       # (B, s_pad), compute dtype
     col_mask = m.sum(axis=0) > 0                    # (s_pad,)
     finite = jnp.where(col_mask[None, :], jnp.isfinite(v), True).all(axis=1)
     vm = jnp.where(col_mask[None, :] & jnp.isfinite(v), v, 0.0)
-    max_abs = jnp.abs(vm).max(axis=1)               # (B,)
+    max_abs = jnp.abs(vm).max(axis=1).astype(jnp.float32)        # (B,)
 
     f32 = jnp.float32
     sums = jnp.dot(vm, m.T, preferred_element_type=f32)          # (B, T)
@@ -59,7 +66,8 @@ def _kernel(
     dots = jnp.dot(vm, yt.T, preferred_element_type=f32)         # (B, R*T)
 
     var = jnp.maximum(sumsq - sums * sums / cnt, 0.0)            # (B, T)
-    inv_norm = jax.lax.rsqrt(var + _EPS)
+    eps = _EPS_BY_DTYPE.get(str(v.dtype), _EPS)
+    inv_norm = jax.lax.rsqrt(var + eps)
     bsz = sums.shape[0]
     r = dots.reshape(bsz, n_residuals, n_tasks) * inv_norm[:, None, :]
     score = jnp.abs(r).sum(axis=2).max(axis=1) / n_tasks
@@ -68,22 +76,52 @@ def _kernel(
         finite, max_abs, sums, sumsq, cnt, l_bound, u_bound
     ) & jnp.isfinite(score)
     # padding rows are invalidated *in-kernel*: their global row index
-    # (grid step * block + lane) is >= n_valid, so a device-side top-k
-    # downstream can never select one (host slice-off is only a courtesy)
-    rows = pl.program_id(0) * bsz + jax.lax.broadcasted_iota(
-        jnp.int32, (bsz,), 0
-    )
+    # (grid step * block + lane) is >= n_valid, so the in-kernel top-k
+    # epilogue / a device-side top-k downstream can never select one
+    rows = first_row + jax.lax.broadcasted_iota(jnp.int32, (bsz,), 0)
     valid = valid & (rows < nv)
-    out_ref[...] = jnp.where(valid, score, -jnp.inf)[None, :]
+    return jnp.where(valid, score, -jnp.inf)
+
+
+def _kernel(
+    a_ref, b_ref, m_ref, yt_ref, cnt_ref, nv_ref, out_ref,
+    *, op_id: int, n_tasks: int, n_residuals: int,
+    l_bound: float, u_bound: float,
+):
+    bsz = a_ref.shape[0]
+    score = _block_scores(
+        a_ref[...], b_ref[...], m_ref[...], yt_ref[...], cnt_ref[...],
+        nv_ref[0, 0], op_id=op_id, n_tasks=n_tasks, n_residuals=n_residuals,
+        l_bound=l_bound, u_bound=u_bound,
+        first_row=pl.program_id(0) * bsz,
+    )
+    out_ref[...] = score[None, :]
+
+
+def _kernel_topk(
+    a_ref, b_ref, m_ref, yt_ref, cnt_ref, nv_ref, val_ref, idx_ref,
+    *, op_id: int, n_tasks: int, n_residuals: int,
+    l_bound: float, u_bound: float, k: int, k_pad: int,
+):
+    bsz = a_ref.shape[0]
+    base = pl.program_id(0) * bsz
+    score = _block_scores(
+        a_ref[...], b_ref[...], m_ref[...], yt_ref[...], cnt_ref[...],
+        nv_ref[0, 0], op_id=op_id, n_tasks=n_tasks, n_residuals=n_residuals,
+        l_bound=l_bound, u_bound=u_bound, first_row=base,
+    )
+    vals, pos = block_topk(score[None, :], k, k_pad, largest=True)
+    val_ref[...] = vals
+    idx_ref[...] = jnp.where(pos >= 0, base + pos, -1)
 
 
 def fused_gen_sis_pallas(
     op_id: int,
-    a: jnp.ndarray,          # (B_pad, s_pad) fp32, B_pad % block_b == 0
+    a: jnp.ndarray,          # (B_pad, s_pad) compute dtype, B_pad % block_b == 0
     b: jnp.ndarray,
     membership: jnp.ndarray,  # (T, s_pad)
     y_tilde: jnp.ndarray,     # (R*T, s_pad)
-    counts: jnp.ndarray,      # (1, T)
+    counts: jnp.ndarray,      # (1, T) fp32
     n_residuals: int,
     l_bound: float,
     u_bound: float,
@@ -118,3 +156,63 @@ def fused_gen_sis_pallas(
         interpret=interpret,
     )(a, b, membership, y_tilde, counts, nv)
     return out.reshape(-1)
+
+
+def fused_gen_sis_topk_pallas(
+    op_id: int,
+    a: jnp.ndarray,          # (B_pad, s_pad) compute dtype, B_pad % block_b == 0
+    b: jnp.ndarray,
+    membership: jnp.ndarray,  # (T, s_pad)
+    y_tilde: jnp.ndarray,     # (R*T, s_pad)
+    counts: jnp.ndarray,      # (1, T) fp32
+    n_residuals: int,
+    l_bound: float,
+    u_bound: float,
+    epilogue_k: int,
+    block_b: int = 256,
+    interpret: bool = False,
+    n_valid=None,
+):
+    """Reduced-epilogue variant: each grid step writes only its top-k.
+
+    Returns ``(vals (nb, k_pad) fp32, gidx (nb, k_pad) int32)`` — per-block
+    winner panels with *global* candidate indices, ready for
+    :func:`..kernels.topk.merge_block_topk`.  HBM writes drop from
+    O(block_b) to O(k_pad) per grid step; invalid and padding rows are -inf
+    in-kernel and can never be selected.
+    """
+    bp, s_pad = a.shape
+    t = membership.shape[0]
+    assert bp % block_b == 0 and s_pad % 128 == 0, (bp, block_b, s_pad)
+    nb = bp // block_b
+    k = max(1, min(int(epilogue_k), block_b))
+    k_pad = ((k + 127) // 128) * 128
+    if n_valid is None:
+        n_valid = bp
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
+    kern = functools.partial(
+        _kernel_topk, op_id=op_id, n_tasks=t, n_residuals=n_residuals,
+        l_bound=float(l_bound), u_bound=float(u_bound), k=k, k_pad=k_pad,
+    )
+    vals, gidx = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((t, s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((y_tilde.shape[0], s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nb, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nb, k_pad), jnp.int32),
+        ),
+        interpret=interpret,
+    )(a, b, membership, y_tilde, counts, nv)
+    return vals, gidx

@@ -6,7 +6,9 @@ widths ≥ 3 the tuple space is C(m, n) ≫ m², so the economics flip: the full
 per-task Gram statistics (G = X Xᵀ, s = X·1, b = X·y — a few hundred KB for
 SIS-sized subspaces) fit **resident in VMEM** and each tuple's least-squares
 problem is a *gather* of an (n+1)×(n+1) SPD system from them, O(n³) per
-tuple with zero O(S) work (core/l0.py engine-2 math, blocked).
+tuple with zero O(S) work (core/l0.py engine-2 math, blocked).  The gather
+and the unrolled SPD elimination are parameterized over the width ``n`` —
+any n ≥ 3 works; VMEM, not the kernel, is the practical ceiling.
 
 Per grid step (one tile of ``block_t`` tuples):
 
@@ -18,16 +20,20 @@ Per grid step (one tile of ``block_t`` tuples):
                      (n+1)×(n+1) solve + SSE        VPU  (unrolled
                                                     Gaussian elimination,
                                                     ref.eliminate_spd_sse)
-    VMEM → HBM:      per-tuple SSE (1, block_t) fp32
+    VMEM → HBM:      per-tuple SSE (1, block_t) fp32   [full variant]
+                     top-k (vals, idx) (1, k_pad)      [reduced variant]
 
 Gathering by one-hot matmul instead of dynamic indexing keeps the kernel
 Mosaic-lowerable (TPU has no fast arbitrary gather) and turns the hot loop
 into n dense (m_pad × m_pad)·(m_pad × block_t) matmuls per task — MXU work
 proportional to tuples scored, independent of sample count.
 
-Outputs are fp32; the backend runs the existing two-phase exact rescore
-(top candidates re-scored from fp64 Gram stats) so final rankings match
-``reference`` bit-for-bit on the parity suite.
+Compute dtype: the Gram pack (G, s, b) may arrive in bf16 — one-hots are
+built in the pack's dtype so the gather matmuls run native on the MXU, with
+fp32 accumulation via ``preferred_element_type``; the elimination and SSE
+stay fp32 (scalars are always fp32).  The backend runs the existing
+two-phase exact rescore (top candidates re-scored from fp64 Gram stats) so
+final rankings match ``reference`` bit-for-bit on the parity suite.
 """
 from __future__ import annotations
 
@@ -38,37 +44,62 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .ref import eliminate_spd_sse, gathered_system
+from .topk import block_topk
 
 
-def _kernel(
-    tup_ref,    # (n, block_t) int32 tuple tile (transposed: lanes = tuples)
-    gram_ref,   # (T, m_pad, m_pad) fp32
-    fsum_ref,   # (T, m_pad)
-    b_ref,      # (T, m_pad)
-    scal_ref,   # (T, 8): [n_samples, ysum, yty, 0, ...]
-    sse_out,    # (1, block_t)
-    *, n: int, n_tasks: int, m_pad: int, block_t: int,
-):
-    tup = tup_ref[...]
+def _tile_sse(tup, gram, fsum, bvec, scal, *, n: int, n_tasks: int):
+    """(1, block_t) fp32 total SSE for one tile of width-n tuples."""
+    m_pad, block_t = gram.shape[1], tup.shape[1]
     iota = jax.lax.broadcasted_iota(jnp.int32, (m_pad, block_t), 0)
     onehots = [
-        (iota == tup[p : p + 1, :]).astype(jnp.float32) for p in range(n)
+        (iota == tup[p : p + 1, :]).astype(gram.dtype) for p in range(n)
     ]
-    fsum = fsum_ref[...]
-    bvec = b_ref[...]
     total = jnp.zeros((1, block_t), jnp.float32)
     for t in range(n_tasks):  # static unroll over tasks
-        g = gram_ref[t]
+        g = gram[t]
         g_cols = [
             jnp.dot(g, oh, preferred_element_type=jnp.float32)
             for oh in onehots
         ]
         a, rhs = gathered_system(
             g_cols, onehots, fsum[t : t + 1, :], bvec[t : t + 1, :],
-            scal_ref[t, 0], scal_ref[t, 1],
+            scal[t, 0], scal[t, 1],
         )
-        total = total + eliminate_spd_sse(a, rhs, scal_ref[t, 2])
-    sse_out[...] = total
+        total = total + eliminate_spd_sse(a, rhs, scal[t, 2])
+    return total
+
+
+def _kernel(
+    tup_ref,    # (n, block_t) int32 tuple tile (transposed: lanes = tuples)
+    gram_ref,   # (T, m_pad, m_pad) compute dtype
+    fsum_ref,   # (T, m_pad)
+    b_ref,      # (T, m_pad)
+    scal_ref,   # (T, 8) fp32: [n_samples, ysum, yty, 0, ...]
+    sse_out,    # (1, block_t)
+    *, n: int, n_tasks: int, m_pad: int, block_t: int,
+):
+    sse_out[...] = _tile_sse(
+        tup_ref[...], gram_ref[...], fsum_ref[...], b_ref[...], scal_ref[...],
+        n=n, n_tasks=n_tasks,
+    )
+
+
+def _kernel_topk(
+    tup_ref, gram_ref, fsum_ref, b_ref, scal_ref, nv_ref, val_ref, idx_ref,
+    *, n: int, n_tasks: int, m_pad: int, block_t: int, k: int, k_pad: int,
+):
+    base = pl.program_id(0) * block_t
+    total = _tile_sse(
+        tup_ref[...], gram_ref[...], fsum_ref[...], b_ref[...], scal_ref[...],
+        n=n, n_tasks=n_tasks,
+    )
+    # padding tuples are killed *in-kernel*: global tile position >= n_valid
+    # becomes +inf, so the top-k epilogue can never select one
+    rows = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_t), 1)
+    total = jnp.where(rows < nv_ref[0, 0], total, jnp.inf)
+    vals, pos = block_topk(total, k, k_pad, largest=False)
+    val_ref[...] = vals
+    idx_ref[...] = jnp.where(pos >= 0, base + pos, -1)
 
 
 @functools.partial(
@@ -76,10 +107,10 @@ def _kernel(
 )
 def l0_gather_tuples_pallas(
     tuples_t: jnp.ndarray,   # (n, b_pad) int32, b_pad % block_t == 0
-    gram: jnp.ndarray,       # (T, m_pad, m_pad) fp32, m_pad % 128 == 0
+    gram: jnp.ndarray,       # (T, m_pad, m_pad), m_pad % 128 == 0
     fsum: jnp.ndarray,       # (T, m_pad)
     bvec: jnp.ndarray,       # (T, m_pad)
-    scal: jnp.ndarray,       # (T, 8)
+    scal: jnp.ndarray,       # (T, 8) fp32
     n: int,
     block_t: int = 256,
     interpret: bool = False,
@@ -107,3 +138,58 @@ def l0_gather_tuples_pallas(
         interpret=interpret,
     )(tuples_t, gram, fsum, bvec, scal)
     return sse.reshape(-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "k", "block_t", "interpret")
+)
+def l0_gather_topk_pallas(
+    tuples_t: jnp.ndarray,   # (n, b_pad) int32, b_pad % block_t == 0
+    gram: jnp.ndarray,       # (T, m_pad, m_pad), m_pad % 128 == 0
+    fsum: jnp.ndarray,       # (T, m_pad)
+    bvec: jnp.ndarray,       # (T, m_pad)
+    scal: jnp.ndarray,       # (T, 8) fp32
+    nv,                      # real tuple count (int or traced scalar)
+    n: int,
+    k: int,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Reduced-epilogue variant: each tile writes only its k best (lowest
+    SSE) tuples as ``(vals (ntiles, k_pad) fp32, gidx (ntiles, k_pad)
+    int32)`` winner panels for :func:`..kernels.topk.merge_block_topk`
+    (``largest=False``).  Padding tuples (tile position >= ``nv``) are +inf
+    in-kernel and can never be selected."""
+    t, m_pad, _ = gram.shape
+    b_pad = tuples_t.shape[1]
+    assert b_pad % block_t == 0 and m_pad % 128 == 0
+    ntiles = b_pad // block_t
+    k = max(1, min(int(k), block_t))
+    k_pad = ((k + 127) // 128) * 128
+    nv_arr = jnp.asarray(nv, jnp.int32).reshape(1, 1)
+    kern = functools.partial(
+        _kernel_topk, n=n, n_tasks=t, m_pad=m_pad, block_t=block_t,
+        k=k, k_pad=k_pad,
+    )
+    vals, gidx = pl.pallas_call(
+        kern,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((n, block_t), lambda i: (0, i)),
+            pl.BlockSpec((t, m_pad, m_pad), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((t, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((t, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((ntiles, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((ntiles, k_pad), jnp.int32),
+        ),
+        interpret=interpret,
+    )(tuples_t, gram, fsum, bvec, scal, nv_arr)
+    return vals, gidx

@@ -15,10 +15,11 @@ import numpy as np
 
 from ..core.l0 import GramStats
 from ..core.sis import ScoreContext, TaskLayout
-from .fused_sis import fused_gen_sis_pallas
-from .l0_gather import l0_gather_tuples_pallas
+from .fused_sis import fused_gen_sis_pallas, fused_gen_sis_topk_pallas
+from .l0_gather import l0_gather_topk_pallas, l0_gather_tuples_pallas
 from .l0_tile import l0_pairs_tiled_pallas
 from .ref import solve3_sse
+from .topk import merge_block_topk
 
 
 def _interpret_default() -> bool:
@@ -33,6 +34,24 @@ def _pad_to(n: int, mult: int) -> int:
 # fused generation + SIS
 # ---------------------------------------------------------------------------
 
+def _sis_operands(a, b, ctx, block_b, dtype):
+    """Pad/cast the fused-SIS operand set to kernel layout in ``dtype``."""
+    bsz, s = a.shape
+    s_pad = _pad_to(max(s, 128), 128)
+    b_pad = _pad_to(max(bsz, block_b), block_b)
+
+    def pad2(x, rows, cols, fill):
+        out = jnp.full((rows, cols), fill, dtype)
+        return out.at[: x.shape[0], : x.shape[1]].set(x.astype(dtype))
+
+    a_p = pad2(a, b_pad, s_pad, 1.0)   # 1.0 is domain-safe for all operators
+    b_p = pad2(b, b_pad, s_pad, 1.0)
+    m_p = pad2(jnp.asarray(ctx.membership), ctx.membership.shape[0], s_pad, 0.0)
+    yt_p = pad2(jnp.asarray(ctx.y_tilde), ctx.y_tilde.shape[0], s_pad, 0.0)
+    cnt = jnp.asarray(ctx.counts, jnp.float32)[None, :]
+    return a_p, b_p, m_p, yt_p, cnt
+
+
 def fused_gen_sis(
     op_id: int,
     a: jnp.ndarray,   # (B, S) child-1 values
@@ -42,22 +61,13 @@ def fused_gen_sis(
     u_bound: float,
     block_b: int = 256,
     interpret: Optional[bool] = None,
+    dtype=None,       # kernel compute dtype; None -> fp32
 ) -> jnp.ndarray:
     """Scores (B,) for a same-operator candidate block; invalid -> -inf."""
     interpret = _interpret_default() if interpret is None else interpret
-    bsz, s = a.shape
-    s_pad = _pad_to(max(s, 128), 128)
-    b_pad = _pad_to(max(bsz, block_b), block_b)
-
-    def pad2(x, rows, cols, fill):
-        out = jnp.full((rows, cols), fill, jnp.float32)
-        return out.at[: x.shape[0], : x.shape[1]].set(x.astype(jnp.float32))
-
-    a_p = pad2(a, b_pad, s_pad, 1.0)   # 1.0 is domain-safe for all operators
-    b_p = pad2(b, b_pad, s_pad, 1.0)
-    m_p = pad2(jnp.asarray(ctx.membership), ctx.membership.shape[0], s_pad, 0.0)
-    yt_p = pad2(jnp.asarray(ctx.y_tilde), ctx.y_tilde.shape[0], s_pad, 0.0)
-    cnt = jnp.asarray(ctx.counts, jnp.float32)[None, :]
+    dtype = jnp.float32 if dtype is None else jnp.dtype(dtype)
+    bsz = a.shape[0]
+    a_p, b_p, m_p, yt_p, cnt = _sis_operands(a, b, ctx, block_b, dtype)
 
     scores = fused_gen_sis_pallas(
         op_id, a_p, b_p, m_p, yt_p, cnt,
@@ -65,6 +75,48 @@ def fused_gen_sis(
         block_b=block_b, interpret=interpret, n_valid=bsz,
     )
     return scores[:bsz]
+
+
+def fused_gen_sis_topk(
+    op_id: int,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    ctx: ScoreContext,
+    l_bound: float,
+    u_bound: float,
+    n_keep: int,
+    block_b: int = 256,
+    epilogue_k: int = 64,
+    interpret: Optional[bool] = None,
+    dtype=None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Reduced-epilogue fused SIS: top-``n_keep`` winners, O(k) transfer.
+
+    The kernel emits per-block top-``k`` panels (k grows to cover
+    ``n_keep`` so the top-k-of-union identity holds) which a device merge
+    reduces to the global winners; only those cross the host boundary.
+    Returns ``(scores (k',) f64 best-first, indices (k',) i64)`` with
+    k' <= n_keep (invalid/padding rows can never appear).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    dtype = jnp.float32 if dtype is None else jnp.dtype(dtype)
+    bsz = a.shape[0]
+    a_p, b_p, m_p, yt_p, cnt = _sis_operands(a, b, ctx, block_b, dtype)
+
+    # per-block window must cover n_keep, else a single block could hold
+    # more than k of the global winners and the merge would drop some
+    k_epi = min(block_b, max(int(epilogue_k), min(int(n_keep), block_b)))
+    vals, gidx = fused_gen_sis_topk_pallas(
+        op_id, a_p, b_p, m_p, yt_p, cnt,
+        n_residuals=ctx.n_residuals, l_bound=l_bound, u_bound=u_bound,
+        epilogue_k=k_epi, block_b=block_b, interpret=interpret, n_valid=bsz,
+    )
+    k_merge = min(int(n_keep), vals.shape[0] * k_epi, bsz)
+    v, i = merge_block_topk(vals, gidx, k=k_merge, largest=True)
+    v = np.asarray(v, np.float64)
+    i = np.asarray(i)
+    keep = np.isfinite(v)
+    return v[keep], i[keep].astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -95,25 +147,31 @@ def l0_score_pairs(stats: GramStats, pairs: jnp.ndarray) -> jnp.ndarray:
 # ℓ0 generic-width scoring (Gram-gather kernel, widths >= 3)
 # ---------------------------------------------------------------------------
 
-#: VMEM budget for the resident Gram statistics (fp32 bytes).  SIS-sized
+#: VMEM budget for the resident Gram statistics (bytes).  SIS-sized
 #: subspaces (m ≲ 1000) fit easily; beyond this the backend falls back to
 #: the fp64 XLA-gather path rather than thrash VMEM.
 GRAM_VMEM_BUDGET = 8 * 1024 * 1024
 
 
-def gram_pack_nbytes(n_tasks: int, m: int) -> int:
-    """fp32 bytes :func:`pack_gram_fp32` would occupy — computable *before*
-    building the pack, so over-budget subspaces never pay the allocation."""
+def gram_pack_nbytes(n_tasks: int, m: int, itemsize: int = 4) -> int:
+    """Bytes :func:`pack_gram` would occupy at the given element size —
+    computable *before* building the pack, so over-budget subspaces never
+    pay the allocation.  (The (T, 8) scalar array is always fp32; counting
+    it at ``itemsize`` keeps this a conservative-enough estimate.)"""
     m_pad = _pad_to(max(m, 128), 128)
-    return 4 * n_tasks * (m_pad * m_pad + 2 * m_pad + 8)
+    return itemsize * n_tasks * (m_pad * m_pad + 2 * m_pad + 8)
 
 
-def pack_gram_fp32(stats: GramStats) -> dict:
-    """Pad Gram statistics to lane-aligned fp32 arrays for the gather kernel.
+def pack_gram(stats: GramStats, dtype=jnp.float32) -> dict:
+    """Pad Gram statistics to lane-aligned arrays for the gather kernel.
 
-    Zero padding is inert: tuples only ever index real features, and padded
-    Gram rows/columns are never touched by their one-hot gathers.
+    ``dtype`` is the kernel compute dtype for G/s/b (bf16 halves the VMEM
+    residency and runs the gather matmuls MXU-native); the scalar array
+    stays fp32 because the elimination epilogue is fp32.  Zero padding is
+    inert: tuples only ever index real features, and padded Gram
+    rows/columns are never touched by their one-hot gathers.
     """
+    dtype = jnp.dtype(dtype)
     t = stats.n_tasks
     m = stats.m
     m_pad = _pad_to(max(m, 128), 128)
@@ -128,11 +186,16 @@ def pack_gram_fp32(stats: GramStats) -> dict:
     scal[:, 1] = np.asarray(stats.ysum, np.float32)
     scal[:, 2] = np.asarray(stats.yty, np.float32)
     return {
-        "gram": jnp.asarray(gram), "fsum": jnp.asarray(fsum),
-        "bvec": jnp.asarray(bvec), "scal": jnp.asarray(scal),
-        "m": m, "m_pad": m_pad,
-        "vmem_bytes": gram_pack_nbytes(t, m),
+        "gram": jnp.asarray(gram, dtype), "fsum": jnp.asarray(fsum, dtype),
+        "bvec": jnp.asarray(bvec, dtype), "scal": jnp.asarray(scal),
+        "m": m, "m_pad": m_pad, "dtype": str(dtype),
+        "vmem_bytes": gram_pack_nbytes(t, m, dtype.itemsize),
     }
+
+
+def pack_gram_fp32(stats: GramStats) -> dict:
+    """fp32 :func:`pack_gram` (the historical default)."""
+    return pack_gram(stats, jnp.float32)
 
 
 def l0_score_tuples(
@@ -161,6 +224,43 @@ def l0_score_tuples(
         n=n, block_t=block_t, interpret=interpret,
     )
     return sse[:b]
+
+
+def l0_topk_tuples(
+    pack: dict,
+    tuples: jnp.ndarray,     # (B, n) int32 — may live on device (unrank.py)
+    n_keep: int,
+    block_t: int = 256,
+    epilogue_k: int = 64,
+    interpret: Optional[bool] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Reduced-epilogue Gram-gather: the ``n_keep`` lowest-SSE tuples.
+
+    Per-tile top-k panels (window grown to cover ``n_keep``) merged on
+    device; only the O(k) winners cross the host boundary.  Returns
+    ``(sses (k',) f64 ascending, indices (k',) i64)`` — indices are
+    positions into ``tuples``; padding tuples can never appear.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    tuples = jnp.asarray(tuples, jnp.int32)
+    b, n = tuples.shape
+    b_pad = _pad_to(max(b, block_t), block_t)
+    if b_pad != b:
+        fill = jnp.broadcast_to(
+            jnp.arange(n, dtype=jnp.int32)[None, :], (b_pad - b, n)
+        )
+        tuples = jnp.concatenate([tuples, fill], axis=0)
+    k_epi = min(block_t, max(int(epilogue_k), min(int(n_keep), block_t)))
+    vals, gidx = l0_gather_topk_pallas(
+        tuples.T, pack["gram"], pack["fsum"], pack["bvec"], pack["scal"],
+        b, n=n, k=k_epi, block_t=block_t, interpret=interpret,
+    )
+    k_merge = min(int(n_keep), vals.shape[0] * k_epi, b)
+    v, i = merge_block_topk(vals, gidx, k=k_merge, largest=False)
+    v = np.asarray(v, np.float64)
+    i = np.asarray(i)
+    keep = np.isfinite(v)
+    return v[keep], i[keep].astype(np.int64)
 
 
 def _task_padded_layout(

@@ -102,8 +102,9 @@ def eliminate_spd_sse(a, rhs, yty, rel_jitter=1e-6, eps=1e-30):
     ``a`` is a k×k nested list and ``rhs`` a length-k list of mutually
     broadcastable arrays — each entry is one coefficient *vectorized over a
     tile of tuples*, so every operation below is an elementwise VPU op and
-    the loops unroll statically (k = n_dim+1 ≤ 5).  Shared by the Pallas
-    gather kernel and its pure-jnp oracle.
+    the loops unroll statically (k = n_dim+1, any width the backend lists
+    in ``l0_widths``).  Shared by the Pallas gather kernel and its
+    pure-jnp oracle.
 
     A scale-relative diagonal jitter keeps fp32 elimination stable (the
     absolute 1e-10 jitter of the fp64 path vanishes in fp32); degenerate

@@ -1,0 +1,93 @@
+"""Launch-config autotuner: timing protocol, caching, persistence."""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuner_state():
+    autotune.clear_cache()
+    autotune.set_cache_path(None)
+    yield
+    autotune.clear_cache()
+    autotune.set_cache_path(None)
+
+
+def test_pick_config_times_real_work_and_caches():
+    calls = []
+
+    def run(cand):
+        calls.append(cand)
+        # returns a device value: the timed region must block on it
+        return jnp.ones((cand,)).sum()
+
+    key = ("k", "dev", (128, 128), "float32")
+    best = autotune.pick_config(key, (8, 16), run, repeats=1)
+    assert best in (8, 16)
+    n_first = len(calls)
+    assert n_first == 4  # 2 candidates x (warmup + 1 timed)
+
+    # cached: the second call must not invoke run at all
+    again = autotune.pick_config(key, (8, 16), run, repeats=1)
+    assert again == best
+    assert len(calls) == n_first
+
+
+def test_pick_config_unsupported_candidates_fall_back():
+    def run(cand):
+        if cand != 32:
+            raise ValueError("shape unsupported")
+        return jnp.zeros(())
+
+    # one survivor -> it wins even if listed last
+    assert autotune.pick_config(("a", "d", (1,), "f32"), (8, 32), run) == 32
+    # nothing survives -> first candidate, so the caller's real invocation
+    # surfaces the underlying error with full context
+    def bad(cand):
+        raise RuntimeError("vmem")
+
+    assert autotune.pick_config(("b", "d", (1,), "f32"), (8, 16), bad) == 8
+
+
+def test_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "journal.autotune")
+    autotune.set_cache_path(path)
+    calls = []
+
+    def run(cand):
+        calls.append(cand)
+        return jnp.zeros(())
+
+    key = ("fused_sis_topk", "dev", (256, 128), "bfloat16")
+    best = autotune.pick_config(key, ((256, 64), (512, 32)), run, repeats=1)
+    assert tuple(best) in ((256, 64), (512, 32))
+    # sidecar is valid JSON with the frozen key
+    entries = json.load(open(path))
+    assert len(entries) == 1
+
+    # fresh process simulation: empty cache, load from the sidecar
+    autotune.clear_cache()
+    n = len(calls)
+    autotune.set_cache_path(path)
+    assert autotune.pick_config(key, ((256, 64), (512, 32)), run) == tuple(best)
+    assert len(calls) == n  # loaded winner short-circuits the sweep
+
+
+def test_corrupt_sidecar_is_tolerated(tmp_path):
+    path = str(tmp_path / "bad.autotune")
+    with open(path, "w") as f:
+        f.write("{not json")
+    autotune.set_cache_path(path)  # must not raise
+    best = autotune.pick_config(("k", "d", (1,), "f32"), (4,),
+                                lambda c: jnp.zeros(()))
+    assert best == 4
+    # retuned winner overwrites the corrupt file
+    assert json.load(open(path))
+
+
+def test_device_kind_is_string():
+    assert isinstance(autotune.device_kind(), str)

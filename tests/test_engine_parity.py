@@ -176,6 +176,113 @@ def test_l0_search_winners_parity(rng, backend, method):
     assert res.sses[0] < 1e-6
 
 
+@pytest.mark.parametrize("backend", ["pallas", "sharded:pallas"])
+def test_sis_reduced_block_matches_full_reduction(case, backend):
+    """The reduced-epilogue deferred screen must return exactly the
+    ReducedBlock a host reduction of the full score vector yields — same
+    winners, same order, same tie resolution — without ever materializing
+    that vector on the kernel backends."""
+    from repro.core.sis import ReducedBlock
+
+    fs = _fspace(case)
+    layout = TaskLayout.from_task_ids(case.task_ids)
+    ctx = build_score_context(case.y[None, :], layout)
+    x = fs.values_matrix().astype(np.float64)
+    eng = get_engine(backend)
+    assert eng.backend.reduces_blocks
+    blk = next(fs.iter_candidate_batches(512))
+    full = get_engine("reference").sis_scores_deferred(
+        blk.op_id, x[blk.child_a], x[blk.child_b], ctx, fs.l_bound, fs.u_bound)
+    want = ReducedBlock.reduce_host(full, 25)
+    got = eng.backend.sis_topk_deferred(
+        blk.op_id, x[blk.child_a], x[blk.child_b], ctx, fs.l_bound,
+        fs.u_bound, 25)
+    assert np.array_equal(got.indices, want.indices)
+    np.testing.assert_allclose(got.scores, want.scores, atol=5e-5)
+    assert got.n_source == len(blk.child_a)
+    assert len(got.indices) <= 25  # O(k) payload, not O(B)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "sharded:pallas"])
+@pytest.mark.parametrize("width", [3, 5])
+def test_l0_reduced_block_matches_full_reduction(rng, backend, width):
+    """ℓ0 reduced top-k (device epilogue + merge + fp64 rescore) returns the
+    stable-sort winners of the full SSE vector with fp64-exact values."""
+    import itertools
+
+    m, s = 11, 90
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2.0 * x[3] - x[7] + 0.1 * rng.normal(size=s)
+    layout = TaskLayout.from_task_ids(np.repeat([0, 1], 45))
+    tuples = np.asarray(list(itertools.combinations(range(m), width)),
+                        np.int32)
+    ref = get_engine("reference")
+    full = ref.l0_scores(ref.prepare_l0(x, y, layout), tuples)
+    order = np.argsort(full, kind="stable")[:8]
+    eng = get_engine(backend)
+    prob = eng.backend.prepare_l0(x, y, layout)
+    got = eng.backend.l0_topk(prob, tuples, 8)
+    assert np.array_equal(got.indices, order)
+    # fp64 Gram rescore vs the lstsq oracle: same precision, different
+    # factorization — agreement to fp64 conditioning, not bitwise
+    np.testing.assert_allclose(got.scores, full[order], rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_l0_search_ranking_parity_width5(rng, backend):
+    """Full ℓ0 sweep at width 5 (the generalized Gram-gather kernel on the
+    pallas backends, generic scorers elsewhere): bit-identical winners."""
+    m, s = 10, 70
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = (1.2 * x[1] - 2.0 * x[4] + 0.7 * x[8] + 0.5 * x[2]
+         + 0.3 * rng.normal(size=s))
+    layout = TaskLayout.single(s)
+    ref = l0_search(x, y, layout, n_dim=5, n_keep=6, block=53,
+                    engine=get_engine("reference"))
+    res = l0_search(x, y, layout, n_dim=5, n_keep=6, block=53,
+                    engine=get_engine(backend))
+    assert np.array_equal(res.tuples, ref.tuples)
+    np.testing.assert_allclose(res.sses, ref.sses, rtol=1e-6, atol=1e-8)
+
+
+def test_bf16_sis_winner_set_tolerance(case):
+    """bf16 SIS screening: the winner *set* stays within a 2x-margin
+    superset of the fp64 winners (exact ranking is not promised — the
+    dtype-policy table documents the bf16 screen as approximate)."""
+    layout = TaskLayout.from_task_ids(case.task_ids)
+    f64, _ = sis_screen(
+        _fspace(case), case.y[None, :], layout, n_sis=10, exclude=set(),
+        engine=get_engine("reference"),
+    )
+    eng16 = get_engine("pallas")
+    eng16.set_precision("bf16")
+    f16, _ = sis_screen(
+        _fspace(case), case.y[None, :], layout, n_sis=20, exclude=set(),
+        engine=eng16,
+    )
+    missed = {f.expr for f in f64} - {f.expr for f in f16}
+    assert not missed, f"bf16 screen lost fp64 winners: {missed}"
+
+
+@pytest.mark.parametrize("width", [3, 4])
+def test_bf16_l0_ranking_bit_identical_after_rescore(rng, width):
+    """Under bf16 precision the ℓ0 prescreen stays pinned fp32 and the
+    fp64 rescore rebuilds statistics from the master arrays, so the final
+    ℓ0 ranking is bit-identical to an fp64-precision run."""
+    m, s = 12, 80
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 1.5 * x[5] - 2.5 * x[9] + 0.8 * x[2] + 0.4 * rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    res64 = l0_search(x, y, layout, n_dim=width, n_keep=7, block=61,
+                      engine=get_engine("pallas"))
+    eng16 = get_engine("pallas")
+    eng16.set_precision("bf16")
+    res16 = l0_search(x, y, layout, n_dim=width, n_keep=7, block=61,
+                      engine=eng16)
+    assert np.array_equal(res16.tuples, res64.tuples)
+    np.testing.assert_array_equal(res16.sses, res64.sses)  # bitwise
+
+
 def test_l0_search_ranking_parity_partial_rescore(rng):
     """The two-phase contract under *partial* rescoring: with blocks much
     larger than rescore_k, phase 1's fp32 ranking actually selects the

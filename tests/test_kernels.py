@@ -4,6 +4,7 @@ Per instructions: sweep shapes/dtypes per kernel and assert_allclose against
 the ref.py pure-jnp oracle.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -172,6 +173,8 @@ def test_l0_search_tiled_exact_topk(rng, m, s, tasks, block):
     (14, 60, 2, 4, 128),     # width 4
     (20, 90, 1, 4, 256),     # bigger tile
     (12, 333, 3, 3, 128),    # unaligned samples, 3 tasks
+    (12, 60, 1, 5, 128),     # width 5 (generic unrolled elimination)
+    (10, 50, 2, 6, 128),     # width 6, multi-task
 ])
 def test_l0_gather_kernel_matches_oracle(rng, m, s, tasks, width, block_t):
     from repro.kernels.ref import l0_gather_sse_ref
@@ -217,6 +220,135 @@ def test_l0_gather_padding_is_inert(rng):
     ragged = np.asarray(kops.l0_score_tuples(pack, jnp.asarray(tuples[:131]),
                                              block_t=128, interpret=True))
     np.testing.assert_array_equal(ragged, full[:131])
+
+
+# ---------------------------------------------------------------------------
+# reduced top-k epilogues (kernels/topk.py + the *_topk wrappers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("largest", [True, False])
+def test_block_topk_matches_stable_sort(rng, largest):
+    from repro.kernels.topk import block_topk
+
+    scores = rng.normal(size=(1, 256)).astype(np.float32)
+    scores[0, 77] = scores[0, 13]  # exact tie -> lowest position must win
+    k, k_pad = 9, 128
+    vals, pos = jax.jit(block_topk, static_argnums=(1, 2, 3))(
+        jnp.asarray(scores), k, k_pad, largest)
+    vals, pos = np.asarray(vals)[0], np.asarray(pos)[0]
+    key = -scores[0] if largest else scores[0]
+    want = np.argsort(key, kind="stable")[:k]
+    assert np.array_equal(pos[:k], want)
+    np.testing.assert_array_equal(vals[:k], scores[0][want])
+    # sentinel lanes: +-inf values, pos -1
+    assert np.all(np.isinf(vals[k:]))
+    assert np.all(pos[k:] == -1)
+
+
+def test_merge_block_topk_tie_order():
+    from repro.kernels.topk import merge_block_topk
+
+    # two blocks with an exact cross-block tie: lower global index must win
+    vals = jnp.asarray([[5.0, 3.0, -np.inf], [5.0, 4.0, -np.inf]], jnp.float32)
+    idx = jnp.asarray([[10, 11, -1], [20, 21, -1]], jnp.int32)
+    v, i = merge_block_topk(vals, idx, 3, largest=True)
+    assert list(np.asarray(i)) == [10, 20, 21]
+    np.testing.assert_array_equal(np.asarray(v), [5.0, 5.0, 4.0])
+
+
+def test_fused_sis_topk_matches_reduce_host(rng):
+    from repro.core.sis import ReducedBlock
+
+    b, s, nf = 300, 156, 30
+    x = rng.uniform(0.5, 3.0, (nf, s))
+    ia, ib = rng.integers(0, nf, b), rng.integers(0, nf, b)
+    layout = TaskLayout.from_task_ids(np.repeat([0, 1], [75, 81]))
+    ctx = build_score_context(rng.normal(size=(2, s)), layout)
+    a1 = jnp.asarray(x[ia], jnp.float32)
+    b1 = jnp.asarray(x[ib], jnp.float32)
+    full = np.array(kops.fused_gen_sis(om.MUL, a1, b1, ctx, 1e-5, 1e8,
+                                       block_b=128))
+    ref = ReducedBlock.reduce_host(full, 25)
+    vals, idx = kops.fused_gen_sis_topk(om.MUL, a1, b1, ctx, 1e-5, 1e8,
+                                        n_keep=25, block_b=128, epilogue_k=32)
+    assert np.array_equal(idx, ref.indices)
+    np.testing.assert_allclose(vals, ref.scores, rtol=1e-6)
+    assert np.all(np.isfinite(vals))
+
+
+def test_fused_sis_topk_padding_never_selected(rng):
+    """131 rows over block_b=128: padding rows must not reach the winners."""
+    b, s, nf = 131, 100, 12
+    x = rng.uniform(0.5, 3.0, (nf, s))
+    ia, ib = rng.integers(0, nf, b), rng.integers(0, nf, b)
+    ctx = build_score_context(rng.normal(size=(1, s)), TaskLayout.single(s))
+    vals, idx = kops.fused_gen_sis_topk(
+        om.ADD, jnp.asarray(x[ia], jnp.float32), jnp.asarray(x[ib], jnp.float32),
+        ctx, 1e-5, 1e8, n_keep=131, block_b=128, epilogue_k=128)
+    assert np.all((idx >= 0) & (idx < b))
+    assert np.all(np.isfinite(vals))
+
+
+@pytest.mark.parametrize("width", [3, 5])
+def test_l0_topk_tuples_matches_full(rng, width):
+    m, s = 12, 70
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = 2.0 * x[3] - x[7] + 0.1 * rng.normal(size=s)
+    layout = TaskLayout.single(s)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y), layout)
+    pack = kops.pack_gram_fp32(stats)
+    tuples = np.asarray(
+        list(__import__("itertools").combinations(range(m), width)), np.int32)
+    full = np.asarray(kops.l0_score_tuples(pack, jnp.asarray(tuples),
+                                           block_t=128, interpret=True))
+    order = np.argsort(full, kind="stable")[:10]
+    sses, idx = kops.l0_topk_tuples(pack, jnp.asarray(tuples), n_keep=10,
+                                    block_t=128, epilogue_k=32, interpret=True)
+    # same fp32 math but a different XLA fusion graph: indices must agree
+    # exactly, values up to FMA/fusion ulp noise (fp64 rescore is phase 2)
+    assert np.array_equal(idx, order)
+    np.testing.assert_allclose(sses, full[order], rtol=1e-4)
+    # padding tuples (131 over block_t=128) must never surface as winners
+    sses2, idx2 = kops.l0_topk_tuples(pack, jnp.asarray(tuples[:131]),
+                                      n_keep=131, block_t=128,
+                                      epilogue_k=128, interpret=True)
+    assert np.all((idx2 >= 0) & (idx2 < 131))
+    assert np.all(np.isfinite(sses2))
+
+
+def test_fused_sis_topk_bf16_winner_overlap(rng):
+    """bf16 operand generation: winner *set* stays close to fp32 (the
+    backend's fp64 rescore pins exact ranking downstream)."""
+    b, s, nf = 256, 128, 20
+    x = rng.uniform(0.5, 3.0, (nf, s))
+    ia, ib = rng.integers(0, nf, b), rng.integers(0, nf, b)
+    ctx = build_score_context(rng.normal(size=(2, s)), TaskLayout.single(s))
+    a1, b1 = jnp.asarray(x[ia]), jnp.asarray(x[ib])
+    _, idx32 = kops.fused_gen_sis_topk(
+        om.MUL, a1, b1, ctx, 1e-5, 1e8, n_keep=10, block_b=128,
+        dtype=jnp.float32)
+    _, idx16 = kops.fused_gen_sis_topk(
+        om.MUL, a1, b1, ctx, 1e-5, 1e8, n_keep=20, block_b=128,
+        dtype=jnp.bfloat16)
+    assert np.all((idx16 >= 0) & (idx16 < b))
+    # fp32 top-10 contained in bf16 top-20 (rank noise < 2x margin)
+    assert len(set(idx32.tolist()) - set(idx16.tolist())) == 0
+
+
+def test_pack_gram_dtype_variants(rng):
+    m, s = 10, 64
+    x = rng.uniform(0.5, 3.0, (m, s))
+    y = rng.normal(size=s)
+    stats = compute_gram_stats(jnp.asarray(x), jnp.asarray(y),
+                               TaskLayout.single(s))
+    p32 = kops.pack_gram(stats, jnp.float32)
+    p16 = kops.pack_gram(stats, jnp.bfloat16)
+    assert p32["dtype"] == "float32" and p16["dtype"] == "bfloat16"
+    assert p16["gram"].dtype == jnp.bfloat16
+    # scal stays fp32 in both: the solve epilogue accumulates in fp32
+    assert p16["scal"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(p16["gram"], np.float32),
+                               np.asarray(p32["gram"]), rtol=2e-2, atol=1e-2)
 
 
 def test_l0_search_tiled_planted(rng):
