@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core import FeatureSpace
@@ -23,6 +24,7 @@ def main():
         t0 = time.perf_counter()
         fs = FeatureSpace(x, [f"f{i}" for i in range(p)], op_names=ops,
                           max_rung=2, on_the_fly_last_rung=True).generate()
+        jax.block_until_ready(fs.values_matrix())  # RL002: sync the store
         dt = time.perf_counter() - t0
         n = fs.n_total
         emit(f"fc_rung2_{name}", dt * 1e6,

@@ -9,7 +9,6 @@ psum over samples + one k-sized gather per phase).
 """
 from __future__ import annotations
 
-from repro.core.l0 import n_models
 from .common import emit, reset_bench_rows, write_bench_json
 
 

@@ -26,7 +26,7 @@ import dataclasses
 import json
 import os
 from fractions import Fraction
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 

@@ -95,6 +95,7 @@ class _BaseSisso(_SkBase):
         precision: str = "fp64",
         max_pairs_per_op: Optional[int] = None,
         seed: int = 0,
+        debug_checks: Optional[bool] = None,
     ):
         self.max_rung = max_rung
         self.n_dim = n_dim
@@ -111,6 +112,9 @@ class _BaseSisso(_SkBase):
         self.precision = precision
         self.max_pairs_per_op = max_pairs_per_op
         self.seed = seed
+        # runtime contract sanitizer (repro.debug); None defers to the
+        # REPRO_DEBUG environment variable
+        self.debug_checks = debug_checks
 
     # ------------------------------------------------------------------
     # sklearn parameter plumbing

@@ -17,7 +17,7 @@ import concurrent.futures as cf
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import numpy as np

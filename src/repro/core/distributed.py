@@ -19,7 +19,7 @@ try:  # jax >= 0.5 re-exports shard_map at top level
     from jax import shard_map
 except ImportError:  # jax 0.4.x keeps it in experimental
     from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .sis import ScoreContext, TaskLayout, scores_from_reductions
 

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 

@@ -25,7 +25,7 @@ feature generation (paper P3) so last-rung values never touch HBM.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -56,6 +56,10 @@ class SissoConfig:
     #                                     dtype (SIS matmuls, ℓ0 solves)
     max_pairs_per_op: Optional[int] = None
     seed: int = 0
+    debug_checks: Optional[bool] = None  # None: honor REPRO_DEBUG env;
+    #                                      True/False: force the runtime
+    #                                      contract sanitizer (repro.debug)
+    #                                      on/off for this solver
     # deprecated aliases (pre-engine-layer configs)
     l0_engine: Optional[str] = None     # -> l0_method
     use_kernels: Optional[bool] = None  # True -> backend='pallas'
@@ -132,6 +136,11 @@ class SissoSolver:
         # their screening matmuls / ℓ0 solves at this dtype (the reference
         # oracle stays literal fp64)
         self.engine.set_precision(config.precision)
+        # runtime contract sanitizer (repro.debug): config.debug_checks
+        # wins; otherwise REPRO_DEBUG=1/2 enables it
+        from ..debug import maybe_wrap_engine
+
+        self.engine = maybe_wrap_engine(self.engine, config.debug_checks)
 
     def fit(
         self,

@@ -9,9 +9,8 @@ On a real cluster each host materializes only its data shard
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,0 +1,27 @@
+"""Runtime contract sanitizer for the Backend protocol.
+
+Enable with ``SissoConfig(debug_checks=True)`` or ``REPRO_DEBUG=1``
+(``REPRO_DEBUG=2`` adds full-vector cross-checks of every reduced
+top-k).  Static counterparts live in tools/reprolint.
+"""
+from .sanitizer import (
+    ContractViolation,
+    DebugBackend,
+    LEVEL_OFF,
+    LEVEL_STRUCTURAL,
+    LEVEL_VERIFY,
+    env_level,
+    maybe_wrap_engine,
+    wrap_backend,
+)
+
+__all__ = [
+    "ContractViolation",
+    "DebugBackend",
+    "LEVEL_OFF",
+    "LEVEL_STRUCTURAL",
+    "LEVEL_VERIFY",
+    "env_level",
+    "maybe_wrap_engine",
+    "wrap_backend",
+]

@@ -179,7 +179,9 @@ class PallasBackend(JnpBackend):
             block_b=block_b, epilogue_k=k_epi, interpret=self.interpret,
             dtype=self.kernel_dtype,
         )
-        return ReducedBlock(indices=gidx, scores=scores,
+        # finiteness filter lives in kops.fused_gen_sis_topk (ops.py): the
+        # epilogue's ±inf sentinel lanes are dropped before return.
+        return ReducedBlock(indices=gidx, scores=scores,  # reprolint: disable=RL007
                             n_source=a.shape[0])
 
     def _tuned_sis_cfg(self, op_id, a, b, ctx, l_bound, u_bound, n_keep):

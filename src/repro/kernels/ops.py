@@ -6,7 +6,6 @@ same calls lower to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

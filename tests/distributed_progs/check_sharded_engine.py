@@ -18,7 +18,7 @@ jax.config.update("jax_enable_x64", True)
 from repro.core import operators as om
 from repro.core.l0 import l0_search
 from repro.core.sis import ReducedBlock, TaskLayout, build_score_context
-from repro.engine import ShardedExecution, get_engine
+from repro.engine import get_engine
 
 
 def main() -> int:

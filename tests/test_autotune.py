@@ -1,7 +1,6 @@
 """Launch-config autotuner: timing protocol, caching, persistence."""
 import json
 
-import numpy as np
 import jax.numpy as jnp
 import pytest
 

@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 _DIR = os.path.join(os.path.dirname(__file__), "distributed_progs")
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -11,7 +11,7 @@ from repro.core import SissoConfig, SissoSolver, get_problem
 from repro.core.model import SissoModel
 from repro.core.problem import (
     ClassificationProblem, RegressionProblem, build_class_score_context,
-    class_membership, compute_class_stats, fit_discriminants,
+    compute_class_stats, fit_discriminants,
     overlap_region_mask, overlap_scores_host, score_tuples_overlap,
     score_tuples_overlap_host,
 )

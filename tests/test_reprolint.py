@@ -1,0 +1,469 @@
+"""Per-rule fixture pairs for tools/reprolint.
+
+Each rule gets (at least) one snippet that must fire and one adjacent
+snippet — same construct, invariant honored — that must stay silent.
+The adjacency is the point: a rule that cannot tell the fixed idiom from
+the bug is a rule nobody will keep enabled.  Closing test: the real
+tree (src/ + benchmarks/) is lint-clean, which is also the CI gate.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.reprolint import RULES, lint_paths, lint_source  # noqa: E402
+
+
+def ids_of(findings):
+    return sorted({f.rule_id for f in findings})
+
+
+def run(src, path="snippet.py", only=None):
+    return lint_source(textwrap.dedent(src), path=path, only=only)
+
+
+# ---------------------------------------------------------------------------
+# RL001 — stable selection
+# ---------------------------------------------------------------------------
+
+def test_rl001_fires_on_argpartition():
+    findings = run(
+        """
+        import numpy as np
+        def pick(scores, k):
+            return np.argpartition(scores, k - 1)[:k]
+        """
+    )
+    assert ids_of(findings) == ["RL001"]
+
+
+def test_rl001_fires_on_default_argsort():
+    findings = run(
+        """
+        import numpy as np
+        def rank(scores):
+            return np.argsort(scores)
+        """
+    )
+    assert ids_of(findings) == ["RL001"]
+
+
+def test_rl001_silent_on_stable_argsort():
+    findings = run(
+        """
+        import numpy as np
+        import jax.numpy as jnp
+        def rank(scores):
+            order = np.argsort(scores, kind="stable")
+            return order, jnp.argsort(scores)
+        """
+    )
+    assert findings == []
+
+
+def test_rl001_fires_on_jnp_stable_false():
+    findings = run(
+        """
+        import jax.numpy as jnp
+        def rank(scores):
+            return jnp.argsort(scores, stable=False)
+        """
+    )
+    assert ids_of(findings) == ["RL001"]
+
+
+# ---------------------------------------------------------------------------
+# RL002 — timed regions block (scoped to benchmarks/ + kernels/autotune.py)
+# ---------------------------------------------------------------------------
+
+_UNBLOCKED_SPAN = """
+    import time
+    import jax
+    def bench(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+"""
+
+_BLOCKED_SPAN = """
+    import time
+    import jax
+    def bench(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+"""
+
+
+def test_rl002_fires_on_unblocked_span_in_benchmarks():
+    findings = run(_UNBLOCKED_SPAN, path="benchmarks/bench_x.py")
+    assert ids_of(findings) == ["RL002"]
+
+
+def test_rl002_silent_when_span_blocks():
+    assert run(_BLOCKED_SPAN, path="benchmarks/bench_x.py") == []
+
+
+def test_rl002_out_of_scope_paths_are_ignored():
+    # core timings (phase bookkeeping, not published numbers) are not in
+    # the rule's scope
+    assert run(_UNBLOCKED_SPAN, path="src/repro/core/solver.py") == []
+
+
+def test_rl002_applies_to_autotune():
+    findings = run(_UNBLOCKED_SPAN, path="src/repro/kernels/autotune.py")
+    assert ids_of(findings) == ["RL002"]
+
+
+# ---------------------------------------------------------------------------
+# RL003 — kernel dtype policy (kernel-context only)
+# ---------------------------------------------------------------------------
+
+def test_rl003_fires_on_kernel_fp64_and_bare_matmul():
+    findings = run(
+        """
+        import jax.numpy as jnp
+        def _kernel(a_ref, o_ref):
+            acc = a_ref[...].astype(jnp.float64)
+            o_ref[...] = acc @ acc.T
+        """,
+        path="src/repro/kernels/bad.py",
+    )
+    assert ids_of(findings) == ["RL003"]
+    assert len(findings) == 2  # fp64 literal + bare '@'
+
+
+def test_rl003_fires_on_dot_without_preferred_element_type():
+    findings = run(
+        """
+        import jax.numpy as jnp
+        def _kernel(a_ref, b_ref, o_ref):
+            o_ref[...] = jnp.dot(a_ref[...], b_ref[...])
+        """,
+        path="src/repro/kernels/bad.py",
+    )
+    assert ids_of(findings) == ["RL003"]
+
+
+def test_rl003_silent_on_policy_conformant_kernel():
+    findings = run(
+        """
+        import jax.numpy as jnp
+        def _kernel(a_ref, b_ref, o_ref):
+            o_ref[...] = jnp.dot(
+                a_ref[...], b_ref[...],
+                preferred_element_type=jnp.float32,
+            )
+        """,
+        path="src/repro/kernels/good.py",
+    )
+    assert findings == []
+
+
+def test_rl003_ignores_host_oracles_outside_kernel_context():
+    # same construct, not a kernel body: the fp64 host oracle is the
+    # *point* of kernels/ref.py
+    findings = run(
+        """
+        import numpy as np
+        def fused_ref(a, b):
+            return (a @ b.T).astype(np.float64)
+        """,
+        path="src/repro/kernels/ref.py",
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL004 — no host sync on traced values
+# ---------------------------------------------------------------------------
+
+def test_rl004_fires_in_kernel_body():
+    findings = run(
+        """
+        import numpy as np
+        def _kernel(a_ref, o_ref):
+            host = np.asarray(a_ref[...])
+            o_ref[...] = host
+        """,
+        path="src/repro/kernels/bad.py",
+    )
+    assert ids_of(findings) == ["RL004"]
+
+
+def test_rl004_fires_in_shardmap_body():
+    findings = run(
+        """
+        import functools
+        from jax.experimental.shard_map import shard_map
+        def build(mesh):
+            @functools.partial(shard_map, mesh=mesh, in_specs=None,
+                               out_specs=None)
+            def local(x):
+                return float(x.sum())
+            return local
+        """
+    )
+    assert ids_of(findings) == ["RL004"]
+
+
+def test_rl004_silent_on_host_helpers():
+    # same calls outside traced context: fine (this is every np helper
+    # in core/)
+    findings = run(
+        """
+        import numpy as np
+        def summarize(x):
+            return float(np.asarray(x).sum())
+        """
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL005 — lru_cache key coverage
+# ---------------------------------------------------------------------------
+
+def test_rl005_fires_on_closure_capture():
+    findings = run(
+        """
+        import functools
+        def factory(mesh, epilogue_k):
+            @functools.lru_cache(maxsize=None)
+            def cached(n):
+                return n + epilogue_k
+            return cached
+        """
+    )
+    assert ids_of(findings) == ["RL005"]
+
+
+def test_rl005_fires_on_global_capability_read():
+    findings = run(
+        """
+        import functools
+        def cfg():
+            return 64
+        epilogue_k = cfg()
+        @functools.lru_cache(maxsize=None)
+        def cached(n):
+            return n + epilogue_k
+        """
+    )
+    assert ids_of(findings) == ["RL005"]
+
+
+def test_rl005_silent_when_key_covers_capabilities():
+    findings = run(
+        """
+        import functools
+        @functools.lru_cache(maxsize=None)
+        def cached(mesh, n_residuals, k_local, k_merge, epilogue_k=64):
+            return (mesh, n_residuals, k_local, k_merge, epilogue_k)
+        """
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL006 — Mosaic lowerability
+# ---------------------------------------------------------------------------
+
+def test_rl006_fires_on_sort_and_dynamic_where_in_kernel():
+    findings = run(
+        """
+        import jax.numpy as jnp
+        def _kernel(s_ref, o_ref):
+            order = jnp.argsort(s_ref[...])
+            idx = jnp.where(s_ref[...] > 0)
+            o_ref[...] = order
+        """,
+        path="src/repro/kernels/bad.py",
+    )
+    assert "RL006" in ids_of(findings)
+    assert sum(f.rule_id == "RL006" for f in findings) == 2
+
+
+def test_rl006_fires_on_lax_top_k_in_kernel():
+    findings = run(
+        """
+        import jax
+        def _kernel(s_ref, o_ref):
+            vals, idx = jax.lax.top_k(s_ref[...], 8)
+            o_ref[...] = vals
+        """,
+        path="src/repro/kernels/bad.py",
+    )
+    assert ids_of(findings) == ["RL006"]
+
+
+def test_rl006_silent_on_iterative_extraction_and_jit_top_k():
+    # the actual kernels/topk.py shape: masked max + 3-arg where in
+    # kernel, lax.top_k only in the *jitted host-side* merge
+    findings = run(
+        """
+        import jax
+        import jax.numpy as jnp
+        def _kernel(s_ref, o_ref):
+            s = s_ref[...]
+            best = jnp.max(s)
+            o_ref[...] = jnp.where(s == best, -jnp.inf, s)
+        def merge(scores, k):
+            return jax.lax.top_k(scores, k)
+        """,
+        path="src/repro/kernels/good.py",
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL007 — ReducedBlock sentinel discipline
+# ---------------------------------------------------------------------------
+
+def test_rl007_fires_without_finiteness_filter():
+    findings = run(
+        """
+        from repro.core.sis import ReducedBlock
+        def produce(scores, idx, n):
+            return ReducedBlock(indices=idx, scores=scores, n_source=n)
+        """
+    )
+    assert ids_of(findings) == ["RL007"]
+
+
+def test_rl007_silent_with_isfinite_filter():
+    findings = run(
+        """
+        import numpy as np
+        from repro.core.sis import ReducedBlock
+        def produce(scores, idx, n):
+            keep = np.isfinite(scores)
+            return ReducedBlock(indices=idx[keep], scores=scores[keep],
+                                n_source=n)
+        """
+    )
+    assert findings == []
+
+
+def test_rl007_silent_with_inf_comparison():
+    findings = run(
+        """
+        import numpy as np
+        from repro.core.sis import ReducedBlock
+        def produce(scores, idx, n):
+            keep = scores > -np.inf
+            return ReducedBlock(indices=idx[keep], scores=scores[keep],
+                                n_source=n)
+        """
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL008 — effects_barrier is not a sync
+# ---------------------------------------------------------------------------
+
+def test_rl008_fires_on_effects_barrier():
+    findings = run(
+        """
+        import jax
+        def flush():
+            jax.effects_barrier()
+        """
+    )
+    assert ids_of(findings) == ["RL008"]
+
+
+def test_rl008_silent_on_block_until_ready():
+    findings = run(
+        """
+        import jax
+        def flush(x):
+            return jax.block_until_ready(x)
+        """
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# escape hatch + output formats + the real tree
+# ---------------------------------------------------------------------------
+
+def test_disable_comment_suppresses_only_that_line():
+    findings = run(
+        """
+        import numpy as np
+        def pick(scores, k):
+            a = np.argpartition(scores, k)[:k]  # reprolint: disable=RL001
+            b = np.argpartition(scores, k)[:k]
+            return a, b
+        """
+    )
+    assert len(findings) == 1 and findings[0].rule_id == "RL001"
+
+
+def test_disable_file_comment_suppresses_whole_file():
+    findings = run(
+        """
+        # reprolint: disable-file=RL001
+        import numpy as np
+        def pick(scores, k):
+            a = np.argpartition(scores, k)[:k]
+            b = np.argpartition(scores, k)[:k]
+            return a, b
+        """
+    )
+    assert findings == []
+
+
+def test_github_format_annotation():
+    findings = run(
+        """
+        import numpy as np
+        def pick(scores, k):
+            return np.argpartition(scores, k)[:k]
+        """,
+        path="benchmarks/bench_x.py",
+    )
+    line = findings[0].format("github")
+    assert line.startswith("::error file=benchmarks/bench_x.py,line=")
+    assert "title=reprolint RL001" in line
+
+
+def test_every_rule_has_id_name_and_rationale():
+    assert len(RULES) == 8
+    for rule in RULES:
+        assert rule.id.startswith("RL") and len(rule.id) == 5
+        assert rule.doc and rule.id in rule.doc
+
+
+def test_real_tree_is_clean():
+    findings = lint_paths([str(REPO / "src"), str(REPO / "benchmarks")])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_entry_point_clean_run():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", "src", "benchmarks"],
+        cwd=str(REPO), capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_reports_findings_with_nonzero_exit(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import numpy as np\n"
+        "def pick(s, k):\n"
+        "    return np.argpartition(s, k)[:k]\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", str(bad),
+         "--format=github"],
+        cwd=str(REPO), capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "::error file=" in proc.stdout and "RL001" in proc.stdout

@@ -1,8 +1,6 @@
 """Tests for the loop-aware HLO analyzer (launch/hlo_analysis.py)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hlo_analysis as ha
 

@@ -6,8 +6,6 @@ Kaggle band-gap setup with a 50k SIS subspace.  These system tests run the
 same *shapes of computation* (multi-task, on-the-fly last rung, rung>1,
 larger sample axis) at laptop scale and assert the full pipeline behaves.
 """
-import numpy as np
-import pytest
 
 from repro.core import SissoConfig, SissoSolver, n_models
 from repro.configs.sisso_thermal import thermal_conductivity_case

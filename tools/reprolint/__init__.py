@@ -1,0 +1,55 @@
+"""reprolint — project-specific static analysis for this repository.
+
+Eight AST rules, each codifying an invariant that a real shipped bug
+motivated (stable-sort tie determinism, blocking timed regions, the
+kernel dtype policy, ...).  Run as ``python -m tools.reprolint src
+benchmarks``; see rules.py for the rule catalog and the per-line
+``# reprolint: disable=RLxxx`` escape hatch.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+from .analysis import FileCtx, Finding, Project, collect_py_files
+from .rules import RULES, Rule
+
+__all__ = [
+    "FileCtx", "Finding", "Project", "Rule", "RULES",
+    "lint_files", "lint_paths", "lint_source",
+]
+
+
+def _run_rules(
+    files: List[FileCtx], only: Optional[Iterable[str]] = None
+) -> List[Finding]:
+    project = Project(files)
+    wanted = set(only) if only is not None else None
+    findings: List[Finding] = []
+    for fctx in files:
+        for rule in RULES:
+            if wanted is not None and rule.id not in wanted:
+                continue
+            for finding in rule.check(fctx, project):
+                if not fctx.is_disabled(finding.rule_id, finding.line):
+                    findings.append(finding)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    return findings
+
+
+def lint_files(paths: Iterable[str], only=None) -> List[Finding]:
+    """Lint already-collected ``.py`` file paths."""
+    files = []
+    for path in paths:
+        with open(path, "r", encoding="utf-8") as fh:
+            files.append(FileCtx(path, fh.read()))
+    return _run_rules(files, only)
+
+
+def lint_paths(paths: Iterable[str], only=None) -> List[Finding]:
+    """Lint files and directories (recursively)."""
+    return lint_files(collect_py_files(paths), only)
+
+
+def lint_source(source: str, path: str = "snippet.py", only=None) -> List[Finding]:
+    """Lint a single in-memory source string (test fixtures)."""
+    return _run_rules([FileCtx(path, source)], only)

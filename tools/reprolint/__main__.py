@@ -1,0 +1,66 @@
+"""CLI entry point: ``python -m tools.reprolint [paths] [--format=github]``.
+
+Exit status 0 when clean, 1 when any finding survives the disable
+comments, 2 on usage error.  ``--format=github`` emits GitHub Actions
+``::error`` workflow commands so CI failures annotate file:line in the
+PR diff view; ``--list-rules`` prints the rule catalog with rationale.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import RULES, lint_paths
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="Project-specific invariant lint (see tools/reprolint/rules.py).",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "benchmarks"],
+        help="files or directories to lint (default: src benchmarks)",
+    )
+    parser.add_argument(
+        "--format", choices=("text", "github"), default="text",
+        help="finding format; 'github' emits ::error workflow annotations",
+    )
+    parser.add_argument(
+        "--select", action="append", default=None, metavar="RLxxx",
+        help="run only these rule IDs (repeatable)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            summary = (rule.doc or "").strip().splitlines()[0]
+            print(f"{rule.id}  {rule.name:<26} {summary}")
+        return 0
+
+    known = {r.id for r in RULES}
+    if args.select:
+        unknown = sorted(set(args.select) - known)
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    findings = lint_paths(args.paths, only=args.select)
+    for finding in findings:
+        print(finding.format(args.format))
+    if findings:
+        print(
+            f"reprolint: {len(findings)} finding(s) in "
+            f"{len({f.path for f in findings})} file(s)",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,323 @@
+"""Shared AST analysis for the reprolint rules.
+
+Everything here is *project-shaped*: the helpers know the idioms this
+repository actually uses (``import jax.numpy as jnp``, Pallas kernel
+bodies handed to ``pl.pallas_call`` via ``functools.partial``,
+``shard_map`` applied as a ``functools.partial`` decorator) and resolve
+them statically.  The rules in rules.py consume three artifacts:
+
+* :class:`FileCtx` — one parsed file: AST, source lines, import alias
+  maps, and the ``# reprolint: disable=RLxxx`` comment index.
+* :class:`Project` — the linted file set plus the two *traced-context*
+  function sets rules RL003/RL004/RL006 scope to:
+
+  - ``kernel_ctx`` — functions whose code runs **inside** a Pallas
+    kernel: bodies passed to ``pallas_call`` (directly or through
+    ``functools.partial``), anything named ``_kernel*`` in a kernels/
+    module, and the transitive closure of project-local calls out of
+    those (``block_topk``, ``eliminate_spd_sse``, ... — cross-file via
+    relative-import resolution).
+  - ``shardmap_ctx`` — functions mapped by ``shard_map`` (decorator or
+    direct call), whose bodies are likewise traced code.
+
+Detection is best-effort by design: a helper the resolver cannot see
+(dynamic dispatch, attribute calls) is simply not in the context set.
+The escape hatch for the converse — a function the resolver *wrongly*
+pulls in — is the same per-line disable comment every rule honors.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+_DISABLE_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9,\s]+)")
+_DISABLE_FILE_RE = re.compile(r"#\s*reprolint:\s*disable-file=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str
+    line: int
+    col: int
+    rule_id: str
+    message: str
+
+    def format(self, style: str = "text") -> str:
+        if style == "github":
+            # GitHub Actions workflow-command annotation: CI failures link
+            # straight to file:line in the PR diff view
+            return (
+                f"::error file={self.path},line={self.line},"
+                f"col={self.col},title=reprolint {self.rule_id}::"
+                f"{self.rule_id}: {self.message}"
+            )
+        return f"{self.path}:{self.line}:{self.col}: {self.rule_id} {self.message}"
+
+
+def dotted_parts(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None for non-name expressions."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+class FileCtx:
+    """One source file parsed for linting."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.disables: Dict[int, Set[str]] = {}
+        self.file_disables: Set[str] = set()
+        for i, line in enumerate(self.lines, start=1):
+            m = _DISABLE_FILE_RE.search(line)
+            if m:
+                self.file_disables |= {
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                }
+                continue
+            m = _DISABLE_RE.search(line)
+            if m:
+                self.disables[i] = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                }
+        # alias maps: local name -> canonical module path
+        self.module_aliases: Dict[str, str] = {}
+        # from-imports: local name -> (canonical module, original name)
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        # relative from-imports: local name -> (level, module, original name)
+        self.relative_imports: Dict[str, Tuple[int, str, str]] = {}
+        self._collect_imports()
+        self.functions: Dict[str, ast.FunctionDef] = {
+            n.name: n
+            for n in self.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.module_aliases[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name if alias.asname else alias.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    for alias in node.names:
+                        self.relative_imports[alias.asname or alias.name] = (
+                            node.level, node.module or "", alias.name,
+                        )
+                    continue
+                mod = node.module or ""
+                for alias in node.names:
+                    local = alias.asname or alias.name
+                    # "from jax import numpy as jnp" is a module alias
+                    if mod == "jax" and alias.name == "numpy":
+                        self.module_aliases[local] = "jax.numpy"
+                    elif mod == "jax" and alias.name == "lax":
+                        self.module_aliases[local] = "jax.lax"
+                    elif mod == "jax.experimental" and alias.name == "pallas":
+                        self.module_aliases[local] = "jax.experimental.pallas"
+                    else:
+                        self.from_imports[local] = (mod, alias.name)
+
+    def canonical_call(self, node: ast.Call) -> Optional[str]:
+        """Canonical dotted name of a call target, alias-resolved.
+
+        ``np.argsort(...)`` -> "numpy.argsort", ``jnp.dot`` ->
+        "jax.numpy.dot", ``block_until_ready`` imported from jax ->
+        "jax.block_until_ready".  None when the callee is not a name
+        (lambdas, subscripts, call results).
+        """
+        parts = dotted_parts(node.func)
+        if parts is None:
+            return None
+        head = parts[0]
+        if head in self.module_aliases:
+            return ".".join((self.module_aliases[head],) + parts[1:])
+        if len(parts) == 1 and head in self.from_imports:
+            mod, orig = self.from_imports[head]
+            return f"{mod}.{orig}"
+        return ".".join(parts)
+
+    def is_disabled(self, rule_id: str, line: int) -> bool:
+        if rule_id in self.file_disables:
+            return True
+        return rule_id in self.disables.get(line, set())
+
+    def resolve_relative(self, level: int, module: str) -> Optional[str]:
+        """Filesystem path a relative import points at, if it exists."""
+        base = os.path.dirname(os.path.abspath(self.path))
+        for _ in range(level - 1):
+            base = os.path.dirname(base)
+        parts = [p for p in module.split(".") if p]
+        cand = os.path.join(base, *parts)
+        for path in (cand + ".py", os.path.join(cand, "__init__.py")):
+            if os.path.isfile(path):
+                return os.path.normpath(path)
+        return None
+
+
+def iter_calls(node: ast.AST) -> Iterable[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def _local_partial_kernel_targets(fn: ast.AST, fctx: FileCtx) -> Set[str]:
+    """Names bound to ``functools.partial(<kernel>, ...)`` and later passed
+    to ``pallas_call`` within the same function — the idiom every kernel
+    wrapper in kernels/ uses (``kern = functools.partial(_kernel, ...);
+    pl.pallas_call(kern, ...)``)."""
+    partial_of: Dict[str, str] = {}
+    passed: Set[str] = set()
+    for call in iter_calls(fn):
+        name = fctx.canonical_call(call)
+        if name and name.split(".")[-1] == "pallas_call" and call.args:
+            first = call.args[0]
+            if isinstance(first, ast.Name):
+                passed.add(first.id)
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            vname = fctx.canonical_call(stmt.value)
+            if vname and vname.split(".")[-1] == "partial" and stmt.value.args:
+                target = stmt.value.args[0]
+                if isinstance(target, ast.Name):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            partial_of[t.id] = target.id
+    return {partial_of[p] for p in passed if p in partial_of} | {
+        p for p in passed if p not in partial_of
+    }
+
+
+def _is_shardmap_decorator(dec: ast.AST, fctx: FileCtx) -> bool:
+    """``@functools.partial(shard_map, ...)`` / ``@shard_map`` forms."""
+    if isinstance(dec, ast.Call):
+        name = fctx.canonical_call(dec)
+        if name and name.split(".")[-1] == "partial" and dec.args:
+            parts = dotted_parts(dec.args[0])
+            return bool(parts) and parts[-1] == "shard_map"
+        return bool(name) and name.split(".")[-1] == "shard_map"
+    parts = dotted_parts(dec)
+    return bool(parts) and parts[-1] == "shard_map"
+
+
+class Project:
+    """The linted file set plus cross-file traced-context resolution."""
+
+    def __init__(self, files: List[FileCtx]):
+        self.files = files
+        self.by_path: Dict[str, FileCtx] = {
+            os.path.normpath(os.path.abspath(f.path)): f for f in files
+        }
+        # (abs path, function name) sets
+        self.kernel_ctx: Set[Tuple[str, str]] = set()
+        self.shardmap_ctx: Set[Tuple[str, str]] = set()
+        self._build_contexts()
+
+    def _abs(self, fctx: FileCtx) -> str:
+        return os.path.normpath(os.path.abspath(fctx.path))
+
+    def _build_contexts(self) -> None:
+        roots: Set[Tuple[str, str]] = set()
+        for fctx in self.files:
+            apath = self._abs(fctx)
+            in_kernels_pkg = os.sep + "kernels" + os.sep in apath
+            for name, fn in fctx.functions.items():
+                if in_kernels_pkg and name.startswith("_kernel"):
+                    roots.add((apath, name))
+                for target in _local_partial_kernel_targets(fn, fctx):
+                    if target in fctx.functions:
+                        roots.add((apath, target))
+                for dec in fn.decorator_list:
+                    if _is_shardmap_decorator(dec, fctx):
+                        self.shardmap_ctx.add((apath, name))
+                # nested defs: shard_map-decorated closures + direct calls
+                for inner in ast.walk(fn):
+                    if isinstance(inner, ast.FunctionDef) and inner is not fn:
+                        for dec in inner.decorator_list:
+                            if _is_shardmap_decorator(dec, fctx):
+                                self.shardmap_ctx.add((apath, inner.name))
+                # shard_map(f, ...) direct-call form
+                for call in iter_calls(fn):
+                    cname = fctx.canonical_call(call)
+                    if cname and cname.split(".")[-1] == "shard_map" \
+                            and call.args:
+                        first = call.args[0]
+                        if isinstance(first, ast.Name):
+                            self.shardmap_ctx.add((apath, first.id))
+        # transitive closure of project-local calls out of kernel bodies
+        self.kernel_ctx = set(roots)
+        work = list(roots)
+        while work:
+            apath, name = work.pop()
+            fctx = self.by_path.get(apath)
+            if fctx is None:
+                continue
+            fn = self._find_function(fctx, name)
+            if fn is None:
+                continue
+            for call in iter_calls(fn):
+                if not isinstance(call.func, ast.Name):
+                    continue
+                callee = call.func.id
+                target = self._resolve_name(fctx, callee)
+                if target and target not in self.kernel_ctx:
+                    self.kernel_ctx.add(target)
+                    work.append(target)
+
+    @staticmethod
+    def _find_function(fctx: FileCtx, name: str) -> Optional[ast.FunctionDef]:
+        if name in fctx.functions:
+            return fctx.functions[name]
+        for node in ast.walk(fctx.tree):
+            if isinstance(node, ast.FunctionDef) and node.name == name:
+                return node
+        return None
+
+    def _resolve_name(self, fctx: FileCtx, name: str) -> Optional[Tuple[str, str]]:
+        """(abs path, func name) a bare call name refers to, if linted."""
+        if name in fctx.functions:
+            return (self._abs(fctx), name)
+        if name in fctx.relative_imports:
+            level, module, orig = fctx.relative_imports[name]
+            path = fctx.resolve_relative(level, module)
+            if path is not None and path in self.by_path:
+                return (path, orig)
+        return None
+
+    def in_kernel_ctx(self, fctx: FileCtx, fn: ast.FunctionDef) -> bool:
+        return (self._abs(fctx), fn.name) in self.kernel_ctx
+
+    def in_shardmap_ctx(self, fctx: FileCtx, fn: ast.FunctionDef) -> bool:
+        return (self._abs(fctx), fn.name) in self.shardmap_ctx
+
+
+def collect_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(
+                    d for d in dirs
+                    if d not in {"__pycache__", ".git", ".ruff_cache"}
+                )
+                for n in sorted(names):
+                    if n.endswith(".py"):
+                        out.append(os.path.join(root, n))
+    return out

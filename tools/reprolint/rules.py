@@ -1,0 +1,523 @@
+"""reprolint rules: one class of shipped bug each.
+
+Every rule codifies an invariant this repository has already paid for at
+least once (rationale docstrings name the originating PR/bug; the
+ARCHITECTURE.md "Invariants & tooling" table cross-references them).
+Suppress a single deliberate violation with a same-line
+
+    # reprolint: disable=RL001
+
+comment (comma-separate multiple IDs; ``disable-file=`` at the top of a
+file disables a rule file-wide).  A disable is a reviewable artifact:
+the comment should carry the justification.
+"""
+from __future__ import annotations
+
+import ast
+import symtable
+from pathlib import PurePath
+from typing import Callable, Iterable, List, NamedTuple
+
+from .analysis import FileCtx, Finding, Project, dotted_parts, iter_calls
+
+#: parameters that change which kernel/jit variant is compiled or what it
+#: computes — an lru_cache'd wrapper that reads one of these without
+#: keying on it serves stale compilations (RL005)
+CAPABILITY_PARAMS = frozenset({
+    "dtype", "compute_dtype", "kernel_dtype", "precision",
+    "epilogue_k", "block_b", "block_t", "interpret",
+    "k_local", "k_merge", "n_keep", "n_residuals", "rescore_k",
+})
+
+_STABLE_KINDS = {"stable", "mergesort"}
+
+_MOSAIC_FORBIDDEN = {
+    "jax.numpy.sort", "jax.numpy.argsort", "jax.numpy.unique",
+    "jax.numpy.nonzero", "jax.numpy.flatnonzero", "jax.numpy.take",
+    "jax.numpy.take_along_axis", "jax.numpy.searchsorted",
+    "jax.lax.sort", "jax.lax.top_k", "jax.lax.gather",
+    "jax.lax.approx_max_k", "jax.lax.approx_min_k",
+}
+
+_MATMUL_CALLS = {
+    "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.einsum",
+    "jax.lax.dot", "jax.lax.dot_general",
+}
+
+_HOST_SYNC_CALLS = {
+    "numpy.asarray", "numpy.array", "numpy.ascontiguousarray",
+}
+
+
+class Rule(NamedTuple):
+    id: str
+    name: str
+    doc: str
+    check: Callable[[FileCtx, Project], Iterable[Finding]]
+
+
+def _parts(path: str):
+    return PurePath(path).parts
+
+
+def _in_benchmarks_or_autotune(path: str) -> bool:
+    p = _parts(path)
+    return "benchmarks" in p or (
+        len(p) >= 2 and p[-2] == "kernels" and p[-1] == "autotune.py"
+    )
+
+
+def _functions(fctx: FileCtx):
+    """Every function in the file, nested included."""
+    for node in ast.walk(fctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _scope_statements(scope: ast.AST):
+    """Walk a scope without descending into nested function/class scopes."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                   ast.ClassDef)
+        ):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# RL001
+# ---------------------------------------------------------------------------
+
+def check_rl001(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL001 — no argpartition / non-stable argsort in selection paths.
+
+    Originating bugs: the PR 5 classification tie bug (exact score ties
+    are routine for the overlap objective; ``np.argpartition`` in
+    ``TopK.push`` let the full-vector and device-reduced merge paths pick
+    *different* tied winners) and its PR 6 recurrence in
+    ``_l0_scores_gather``.  Selection must be stable-sort deterministic:
+    ``np.argsort(..., kind="stable")`` (ties -> lowest index), matching
+    the in-kernel first-occurrence extraction order of
+    ``kernels/topk.py:block_topk``.
+    """
+    for call in iter_calls(fctx.tree):
+        name = fctx.canonical_call(call)
+        if name is None:
+            continue
+        tail = name.split(".")[-1]
+        if tail == "argpartition":
+            yield Finding(
+                fctx.path, call.lineno, call.col_offset, "RL001",
+                "argpartition breaks deterministic tie order in selection "
+                "paths; use np.argsort(..., kind='stable') (ties -> lowest "
+                "index, the block_topk/TopK.push order)",
+            )
+            continue
+        if tail != "argsort":
+            continue
+        kwargs = {k.arg: k.value for k in call.keywords if k.arg}
+        if name == "jax.numpy.argsort":
+            stable = kwargs.get("stable")
+            if isinstance(stable, ast.Constant) and stable.value is False:
+                yield Finding(
+                    fctx.path, call.lineno, call.col_offset, "RL001",
+                    "jnp.argsort(stable=False) is tie-nondeterministic in "
+                    "selection paths; drop stable=False (jnp default is "
+                    "stable)",
+                )
+            continue
+        kind = kwargs.get("kind")
+        if not (
+            isinstance(kind, ast.Constant) and kind.value in _STABLE_KINDS
+        ):
+            yield Finding(
+                fctx.path, call.lineno, call.col_offset, "RL001",
+                "argsort without kind='stable': the default introsort is "
+                "tie-nondeterministic, so equal scores can select "
+                "different winners per path/run",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RL002
+# ---------------------------------------------------------------------------
+
+def check_rl002(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL002 — timed regions must block on the held result.
+
+    Originating bug: the PR 6 autotuner timed candidate launch configs
+    with ``jax.effects_barrier()`` as the "sync"; it does **not** block
+    on the computation, so every candidate timed as dispatch overhead
+    and the tuner picked effectively random winners (fixed in PR 6 by
+    holding the result and calling ``jax.block_until_ready`` on it
+    inside the ``perf_counter`` span).  Scope: ``benchmarks/`` and
+    ``kernels/autotune.py`` — every wall-clock number we publish.
+    """
+    if not _in_benchmarks_or_autotune(fctx.path):
+        return
+    scopes = [fctx.tree] + list(_functions(fctx))
+    for scope in scopes:
+        starts = []  # (lineno, var name)
+        ends = []    # (lineno, var name)
+        blocks = []  # linenos of block_until_ready calls
+        for node in _scope_statements(scope):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                if fctx.canonical_call(node.value) == "time.perf_counter":
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            starts.append((node.lineno, t.id))
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+                if (
+                    isinstance(node.left, ast.Call)
+                    and fctx.canonical_call(node.left) == "time.perf_counter"
+                    and isinstance(node.right, ast.Name)
+                ):
+                    ends.append((node.lineno, node.right.id))
+            if isinstance(node, ast.Call):
+                name = fctx.canonical_call(node)
+                if name and name.split(".")[-1] == "block_until_ready":
+                    blocks.append(node.lineno)
+        for s_line, var in starts:
+            end_lines = [l for l, v in ends if v == var and l >= s_line]
+            if not end_lines:
+                continue
+            e_line = min(end_lines)
+            if not any(s_line <= b <= e_line for b in blocks):
+                yield Finding(
+                    fctx.path, s_line, 0, "RL002",
+                    f"perf_counter span over '{var}' (closes line {e_line}) "
+                    "never calls jax.block_until_ready on the held result "
+                    "inside the timed region — async dispatch makes this "
+                    "measure launch overhead, not compute",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RL003
+# ---------------------------------------------------------------------------
+
+def check_rl003(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL003 — kernel dtype policy: no fp64 in kernel bodies, explicit
+    accumulation dtype on every kernel matmul.
+
+    Originating policy (PR 6, ARCHITECTURE.md dtype table): Pallas kernel
+    operands are fp32 (bf16 under ``precision="bf16"``), *accumulation*
+    is pinned fp32 via ``preferred_element_type``, the ℓ0 Gram prescreen
+    stays fp32 (bf16 Gram quantization makes the SSE cancellation O(1)
+    relative error), and fp64 exactness lives in the two-phase rescore —
+    never in-kernel (TPU has no fp64 MXU path).  The policy used to live
+    only in prose; this rule makes it load-bearing: fp64 literals inside
+    kernel-context functions and matmuls without an explicit
+    ``preferred_element_type`` are flagged.
+    """
+    for fn in _functions(fctx):
+        if not project.in_kernel_ctx(fctx, fn):
+            continue
+        for node in _scope_statements(fn):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                head = dotted_parts(node)
+                if head and fctx.module_aliases.get(head[0], head[0]) in (
+                    "numpy", "jax.numpy",
+                ):
+                    yield Finding(
+                        fctx.path, node.lineno, node.col_offset, "RL003",
+                        "fp64 literal inside a kernel body: kernels are "
+                        "fp32/bf16 with fp32 accumulation; fp64 exactness "
+                        "belongs in the host/jnp rescore phase",
+                    )
+            if isinstance(node, ast.Constant) and node.value == "float64":
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL003",
+                    "'float64' dtype string inside a kernel body (see "
+                    "kernel dtype policy, ARCHITECTURE.md)",
+                )
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL003",
+                    "bare '@' matmul in a kernel body accumulates in the "
+                    "operand dtype — sub-fp32 operands (bf16) lose the "
+                    "moment cancellation; use jnp.dot(..., "
+                    "preferred_element_type=jnp.float32)",
+                )
+            if isinstance(node, ast.Call):
+                name = fctx.canonical_call(node)
+                if name in _MATMUL_CALLS and not any(
+                    k.arg == "preferred_element_type" for k in node.keywords
+                ):
+                    yield Finding(
+                        fctx.path, node.lineno, node.col_offset, "RL003",
+                        f"{name.split('.')[-1]} in a kernel body without "
+                        "preferred_element_type: bf16 operands would "
+                        "accumulate in bf16; pin fp32 accumulation "
+                        "explicitly",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# RL004
+# ---------------------------------------------------------------------------
+
+def check_rl004(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL004 — no host synchronization on traced values.
+
+    Pallas kernel bodies and ``shard_map``-mapped functions run as traced
+    code: ``np.asarray`` / ``.item()`` / ``float()`` on a traced value
+    either raises ``TracerArrayConversionError`` at trace time or — worse,
+    on the jit boundary — silently forces a device→host sync per call,
+    the exact O(B) host traffic the fused kernels exist to eliminate
+    (the paper's "transferred back to CPU" anti-pattern; compare the PR 4
+    sharded-merge work whose whole point was O(k) host payloads).
+    """
+    for fn in _functions(fctx):
+        if not (
+            project.in_kernel_ctx(fctx, fn)
+            or project.in_shardmap_ctx(fctx, fn)
+        ):
+            continue
+        where = (
+            "pallas kernel body" if project.in_kernel_ctx(fctx, fn)
+            else "shard_map-mapped function"
+        )
+        for node in _scope_statements(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = fctx.canonical_call(node)
+            if name in _HOST_SYNC_CALLS:
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL004",
+                    f"{name} on a traced value inside a {where} forces a "
+                    "host sync (or fails to trace); keep the math in "
+                    "jnp/lax",
+                )
+                continue
+            parts = dotted_parts(node.func)
+            if parts and parts[-1] == "item" and len(parts) > 1:
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL004",
+                    f".item() inside a {where} is a blocking device→host "
+                    "transfer; keep values on device",
+                )
+                continue
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and node.args
+                and not isinstance(node.args[0], ast.Constant)
+            ):
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL004",
+                    f"{node.func.id}() on a non-literal inside a {where} "
+                    "concretizes a traced value (host sync / trace error)",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RL005
+# ---------------------------------------------------------------------------
+
+def _lru_cached_functions(fctx: FileCtx):
+    for fn in _functions(fctx):
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            parts = dotted_parts(target)
+            if parts and parts[-1] in ("lru_cache", "cache"):
+                yield fn
+                break
+
+
+def check_rl005(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL005 — lru_cache keys must cover every capability-affecting input.
+
+    Originating bug (PR 6): the sharded fused-SIS wrapper's
+    ``lru_cache``'d shard_map closure omitted ``epilogue_k`` and the
+    kernel dtype from its key, so the first fit's compilation was served
+    for *every* later epilogue-k/dtype combination — silently wrong
+    winner counts under autotuning.  Two statically checkable halves:
+    a cached function must not read a capability-named variable
+    (``dtype``, ``epilogue_k``, ...) it does not take as a parameter,
+    and a *nested* cached function must not close over enclosing-scope
+    state at all (closure cells never reach the cache key).
+    """
+    cached = list(_lru_cached_functions(fctx))
+    if not cached:
+        return
+    try:
+        table = symtable.symtable(fctx.source, fctx.path, "exec")
+    except SyntaxError:  # pragma: no cover - file already parsed by ast
+        return
+    scopes = {}
+
+    def walk(t, depth):
+        for child in t.get_children():
+            if child.get_type() == "function":
+                scopes[(child.get_name(), child.get_lineno())] = (child, depth)
+            walk(child, depth + 1)
+
+    walk(table, 0)
+    for fn in cached:
+        entry = scopes.get((fn.name, fn.lineno))
+        if entry is None:
+            continue
+        scope, depth = entry
+        frees = sorted(s.get_name() for s in scope.get_symbols() if s.is_free())
+        if depth > 0 and frees:
+            yield Finding(
+                fctx.path, fn.lineno, fn.col_offset, "RL005",
+                f"lru_cache'd '{fn.name}' closes over {frees}: closure "
+                "cells are invisible to the cache key, so changing them "
+                "serves a stale compilation — pass them as (hashable) "
+                "parameters",
+            )
+            continue
+        params = {
+            s.get_name() for s in scope.get_symbols() if s.is_parameter()
+        }
+        leaked = sorted(
+            s.get_name()
+            for s in scope.get_symbols()
+            if s.get_name() in CAPABILITY_PARAMS
+            and s.get_name() not in params
+            and not s.is_assigned()
+            and (s.is_free() or s.is_global())
+        )
+        if leaked:
+            yield Finding(
+                fctx.path, fn.lineno, fn.col_offset, "RL005",
+                f"lru_cache'd '{fn.name}' reads capability parameter(s) "
+                f"{leaked} that are not in its signature — they must be "
+                "part of the cache key (the PR 6 epilogue_k omission "
+                "class)",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RL006
+# ---------------------------------------------------------------------------
+
+def check_rl006(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL006 — kernel bodies must stay Mosaic-lowerable.
+
+    The kernels run in interpret mode on this CPU container, where
+    *anything* jnp works — gather, sort, dynamic shapes.  Mosaic (real
+    TPU) supports none of those inside a kernel, which is why the ℓ0
+    kernel gathers by one-hot matmul and the top-k epilogue extracts
+    iteratively instead of sorting (kernels/l0_gather.py,
+    kernels/topk.py docstrings).  An interpret-mode-only construct is a
+    latent TPU regression the test suite cannot catch on CPU — the
+    ROADMAP's still-open "validate under Mosaic on real TPU" risk.  This
+    rule screens kernel-context functions for the known-unlowerable ops.
+    """
+    for fn in _functions(fctx):
+        if not project.in_kernel_ctx(fctx, fn):
+            continue
+        for node in _scope_statements(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = fctx.canonical_call(node)
+            if name in _MOSAIC_FORBIDDEN:
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL006",
+                    f"{name} is not Mosaic-lowerable inside a Pallas TPU "
+                    "kernel (works only in interpret mode): use one-hot "
+                    "matmul gathers / iterative-extraction top-k instead",
+                )
+            elif name == "jax.numpy.where" and len(node.args) == 1:
+                yield Finding(
+                    fctx.path, node.lineno, node.col_offset, "RL006",
+                    "single-argument jnp.where returns a dynamic-shape "
+                    "result — not Mosaic-lowerable; use the three-argument "
+                    "masked form",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RL007
+# ---------------------------------------------------------------------------
+
+def check_rl007(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL007 — ReducedBlock boundaries: ±inf/-1 sentinels in, finite out.
+
+    Originating bug (PR 4): padding rows leaked into sharded selection —
+    per-shard padding scored as real candidates and occupied winner
+    slots until the sharded scorers masked them to ±inf *inside* the
+    sharded fn.  The contract since PR 6: reduced winner panels carry
+    ±inf score / -1 index sentinels on unused lanes, and every producer
+    that hand-builds a :class:`ReducedBlock` must filter to finite
+    entries before the block crosses the host boundary (consumers —
+    ``TopK.push`` — assume finiteness).  This rule flags ReducedBlock
+    constructions in functions with no visible finiteness filter
+    (``isfinite`` call or a ±inf comparison).
+    """
+    for fn in _functions(fctx):
+        ctor_lines: List[int] = []
+        filtered = False
+        for node in _scope_statements(fn):
+            if isinstance(node, ast.Call):
+                parts = dotted_parts(node.func)
+                if parts and parts[-1] == "ReducedBlock":
+                    ctor_lines.append(node.lineno)
+                elif parts and parts[-1] == "isfinite":
+                    filtered = True
+            if isinstance(node, ast.Compare):
+                for operand in [node.left] + list(node.comparators):
+                    p = dotted_parts(operand)
+                    if p and p[-1] == "inf":
+                        filtered = True
+                    if (
+                        isinstance(operand, ast.UnaryOp)
+                        and isinstance(operand.op, ast.USub)
+                    ):
+                        p = dotted_parts(operand.operand)
+                        if p and p[-1] == "inf":
+                            filtered = True
+        if filtered:
+            continue
+        for line in ctor_lines:
+            yield Finding(
+                fctx.path, line, 0, "RL007",
+                "ReducedBlock built without a visible finiteness filter in "
+                "this function: ±inf sentinel lanes / padding scores must "
+                "never cross the host boundary (filter with np.isfinite "
+                "before constructing, or justify with a disable comment "
+                "naming where the filter lives)",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RL008
+# ---------------------------------------------------------------------------
+
+def check_rl008(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL008 — jax.effects_barrier is not a compute barrier.
+
+    The literal PR 6 autotune bug, kept as its own rule because the call
+    *reads* like a sync: ``jax.effects_barrier()`` only orders committed
+    effects, it does **not** wait for in-flight computations, so any
+    timing / ordering logic built on it measures dispatch.  Use
+    ``jax.block_until_ready`` on the value you actually hold.
+    """
+    for call in iter_calls(fctx.tree):
+        name = fctx.canonical_call(call)
+        if name and name.split(".")[-1] == "effects_barrier":
+            yield Finding(
+                fctx.path, call.lineno, call.col_offset, "RL008",
+                "jax.effects_barrier() does not block on computation (the "
+                "PR 6 autotune timing bug); call jax.block_until_ready on "
+                "the held result instead",
+            )
+
+
+RULES: List[Rule] = [
+    Rule("RL001", "stable-selection", check_rl001.__doc__, check_rl001),
+    Rule("RL002", "timed-region-blocks", check_rl002.__doc__, check_rl002),
+    Rule("RL003", "kernel-dtype-policy", check_rl003.__doc__, check_rl003),
+    Rule("RL004", "no-host-sync-traced", check_rl004.__doc__, check_rl004),
+    Rule("RL005", "lru-cache-key-coverage", check_rl005.__doc__, check_rl005),
+    Rule("RL006", "mosaic-lowerable", check_rl006.__doc__, check_rl006),
+    Rule("RL007", "reduced-block-sentinels", check_rl007.__doc__, check_rl007),
+    Rule("RL008", "no-effects-barrier-sync", check_rl008.__doc__, check_rl008),
+]
