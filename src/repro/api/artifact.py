@@ -334,6 +334,9 @@ class FittedSisso:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())  # the rename must never publish a torn
+            #                       artifact (RL009)
         os.replace(tmp, path)
         return path
 

@@ -96,6 +96,7 @@ class _BaseSisso(_SkBase):
         max_pairs_per_op: Optional[int] = None,
         seed: int = 0,
         debug_checks: Optional[bool] = None,
+        resilient: bool = False,
     ):
         self.max_rung = max_rung
         self.n_dim = n_dim
@@ -115,6 +116,9 @@ class _BaseSisso(_SkBase):
         # runtime contract sanitizer (repro.debug); None defers to the
         # REPRO_DEBUG environment variable
         self.debug_checks = debug_checks
+        # fault-tolerance wrapper (engine/resilient.py): retry transient
+        # device errors, demote persistent kernel failures per-op
+        self.resilient = resilient
 
     # ------------------------------------------------------------------
     # sklearn parameter plumbing

@@ -46,22 +46,53 @@ class SissoServer:
         self._shapes = set()
         self._requests = 0
         self._samples = 0
+        self._rejected = 0
 
     @property
     def stats(self) -> dict:
-        """Serving counters: requests, samples, distinct compiled shapes."""
+        """Serving counters: requests, samples, distinct compiled shapes,
+        rejected (malformed/non-finite) request batches."""
         return {
             "requests": self._requests,
             "samples": self._samples,
             "shapes": sorted(self._shapes),
             "n_compiled_shapes": len(self._shapes),
+            "rejected": self._rejected,
         }
 
+    def _reject(self, why: str):
+        self._rejected += 1
+        return ValueError(f"predict: rejected request batch — {why}")
+
     def predict(self, X, tasks=None) -> np.ndarray:
-        """Predictions (batch,) for one request batch ``X (batch, P)``."""
-        X = np.asarray(X, np.float64)
+        """Predictions (batch,) for one request batch ``X (batch, P)``.
+
+        Malformed batches raise :class:`ValueError` (and count in
+        ``stats['rejected']``) instead of silently producing garbage:
+        non-numeric dtypes, wrong feature width, and non-finite rows
+        (NaN/inf would flow through every descriptor op and return
+        plausible-looking numbers).
+        """
+        try:
+            X = np.asarray(X, np.float64)
+        except (TypeError, ValueError) as exc:
+            raise self._reject(f"non-numeric input ({exc})") from None
         if X.ndim == 1:
             X = X[None, :]
+        p_expected = self.fitted.n_features_in
+        if X.ndim != 2 or X.shape[1] != p_expected:
+            raise self._reject(
+                f"expected shape (batch, {p_expected}) matching the "
+                f"artifact's {p_expected} primary features, got "
+                f"{X.shape}"
+            )
+        bad = ~np.isfinite(X).all(axis=1)
+        if bad.any():
+            rows = np.flatnonzero(bad)
+            raise self._reject(
+                f"{len(rows)} non-finite row(s) at indices "
+                f"{rows[:8].tolist()}{'...' if len(rows) > 8 else ''}"
+            )
         b = X.shape[0]
         if b == 0:
             return np.zeros(0)

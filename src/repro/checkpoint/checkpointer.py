@@ -15,14 +15,35 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import json
+import logging
 import os
 import shutil
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
+log = logging.getLogger(__name__)
+
 _MANIFEST = "manifest.json"
+
+
+def _step_no(name: str) -> Optional[int]:
+    """Step number of a ``step_NNNNNNNN`` entry; None for foreign entries
+    (stale ``.tmp-*`` dirs, hand-made ``step_final`` names, dotfiles) —
+    a checkpoint directory shared with other tooling must never crash
+    ``latest_step``/gc on ``int()``."""
+    if not name.startswith("step_"):
+        return None
+    tail = name.split("_", 1)[1]
+    return int(tail) if tail.isdigit() else None
+
+
+def _list_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = (_step_no(d) for d in os.listdir(directory))
+    return sorted(s for s in steps if s is not None)
 
 
 def _flatten_with_names(tree):
@@ -56,6 +77,9 @@ def save_pytree(directory: str, step: int, tree, extra: Optional[Dict] = None):
             {"name": name, "shape": list(arr.shape), "dtype": true_dtype})
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())  # a power loss must not publish a truncated
+        #                       manifest behind the atomic rename below
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -63,19 +87,41 @@ def save_pytree(directory: str, step: int, tree, extra: Optional[Dict] = None):
 
 
 def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+    steps = _list_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_pytree(directory: str, step: Optional[int] = None,
                    template=None, shardings=None):
-    """Restore; if `shardings` given, device_put shard-by-shard (elastic)."""
-    step = latest_step(directory) if step is None else step
+    """Restore; if `shardings` given, device_put shard-by-shard (elastic).
+
+    With ``step=None`` the newest *restorable* checkpoint wins: a step
+    whose manifest is corrupt/truncated (crash during an unsynced write,
+    disk fault) is skipped with a warning and the next-older one loads.
+    An explicit ``step`` fails loudly instead — the caller asked for that
+    exact state.
+    """
+    if template is None:
+        raise ValueError("restore requires a template pytree for structure")
     if step is None:
-        raise FileNotFoundError(f"no checkpoints under {directory}")
+        last_exc: Optional[Exception] = None
+        for cand in reversed(_list_steps(directory)):
+            try:
+                return _restore_step(directory, cand, template, shardings)
+            except (OSError, ValueError, KeyError) as exc:
+                log.warning(
+                    "checkpoint step %d under %s is unrestorable (%s: %s) "
+                    "— falling back to the previous step",
+                    cand, directory, type(exc).__name__, exc,
+                )
+                last_exc = exc
+        raise FileNotFoundError(
+            f"no restorable checkpoints under {directory}"
+        ) from last_exc
+    return _restore_step(directory, step, template, shardings)
+
+
+def _restore_step(directory: str, step: int, template, shardings):
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, _MANIFEST)) as f:
         manifest = json.load(f)
@@ -128,12 +174,16 @@ class Checkpointer:
             self._pending = None
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_"))
-        for s in steps[: -self.keep]:
+        for s in _list_steps(self.directory)[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
+        # stale temp dirs (a writer preempted mid-save never renamed its
+        # .tmp-<step>): the current save's own tmp is already renamed by
+        # the time gc runs on this worker thread, so anything left is junk
+        for d in os.listdir(self.directory):
+            if d.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)
 
     def latest(self) -> Optional[int]:
         return latest_step(self.directory)

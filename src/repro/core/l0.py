@@ -336,6 +336,7 @@ def l0_search(
         method, engine = engine, None
     from ..engine import get_engine
     from ..engine.streaming import BlockPrefetcher
+    from ..runtime import faults
     from .problem import get_problem
 
     engine = get_engine(engine)
@@ -409,11 +410,27 @@ def l0_search(
     n_eval += min(start_block * block, enum.total)
 
     def score_block(bi: int):
+        # fault site: raises TransientDeviceError/KernelFailure (for the
+        # resilient wrapper / retry tests) or returns "nan" to corrupt
+        # this block's score panel (the NaN scrub below must absorb it)
+        kind = faults.check("l0.block_scores")
         tuples = enum.block_tuples(bi)
         # a reducing backend (engine/sharded.py) hands back a ReducedBlock
         # of O(n_keep) winners — only they cross the host boundary; every
         # other backend returns the block's full SSE vector
-        return tuples, engine.l0_scores(prob, tuples, n_keep=n_keep)
+        res = engine.l0_scores(prob, tuples, n_keep=n_keep)
+        if kind == "nan":
+            if isinstance(res, ReducedBlock):
+                # deliberately non-finite: this *is* the faulted panel the
+                # merge loop's isfinite scrub must absorb
+                res = ReducedBlock(  # reprolint: disable=RL007
+                    indices=np.asarray(res.indices),
+                    scores=np.full(len(res), np.nan),
+                    n_source=res.n_source,
+                )
+            else:
+                res = np.full((len(tuples),), np.nan)
+        return tuples, res
 
     def winners_of(tuples, bi: int, indices: np.ndarray) -> np.ndarray:
         """Block-local winner indices -> (k, n_dim) int64 tuples.
@@ -458,11 +475,18 @@ def l0_search(
                 blk_sse = sses[part]
                 blk_tup = np.asarray(tuples)[part].astype(np.int64)
         if blk_sse is not None:
+            # scrub non-finite panel entries (NaN from a faulted device,
+            # ±inf sentinels) to +inf so a poisoned block loses to every
+            # finite incumbent instead of corrupting the top-k order
+            blk_sse = np.where(np.isfinite(blk_sse), blk_sse, np.inf)
             cat_sse = np.concatenate([best_sse, blk_sse])
             cat_tup = np.concatenate([best_tuples, blk_tup])
             order = np.argsort(cat_sse, kind="stable")[:n_keep]
             best_sse, best_tuples = cat_sse[order], cat_tup[order]
         if journal is not None:
             journal.record(bi + 1, best_sse, best_tuples, meta=sweep)
+        # fault site: a worker preemption between blocks ("kill" exits the
+        # process after the journal record, like a SIGKILL mid-sweep)
+        faults.check("worker.tick")
 
     return L0Result(tuples=best_tuples, sses=best_sse, n_evaluated=n_eval)

@@ -60,6 +60,13 @@ class SissoConfig:
     #                                      True/False: force the runtime
     #                                      contract sanitizer (repro.debug)
     #                                      on/off for this solver
+    resilient: bool = False             # wrap the engine in
+    #                                     ResilientExecution
+    #                                     (engine/resilient.py): retry
+    #                                     transient device errors, demote
+    #                                     persistent kernel failures
+    #                                     pallas→jnp→reference per-op;
+    #                                     counters land in SissoFit.stats
     # deprecated aliases (pre-engine-layer configs)
     l0_engine: Optional[str] = None     # -> l0_method
     use_kernels: Optional[bool] = None  # True -> backend='pallas'
@@ -91,6 +98,9 @@ class SissoFit:
     fspace: FeatureSpace
     timings: Dict[str, float]
     problem: str = "regression"
+    #: runtime counters (e.g. ``stats["resilience"]`` retry/demotion
+    #: accounting when SissoConfig.resilient is on)
+    stats: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
     def best(self, dim: Optional[int] = None):
         if not self.models_by_dim:
@@ -136,6 +146,14 @@ class SissoSolver:
         # their screening matmuls / ℓ0 solves at this dtype (the reference
         # oracle stays literal fp64)
         self.engine.set_precision(config.precision)
+        # fault-tolerance wrapper (engine/resilient.py): retry transient
+        # failures, demote persistent kernel failures down the backend
+        # chain.  Wrapped *inside* the sanitizer so debug checks see the
+        # final (post-retry, post-demotion) results.
+        if config.resilient:
+            from ..engine.resilient import wrap_engine_resilient
+
+            self.engine = wrap_engine_resilient(self.engine)
         # runtime contract sanitizer (repro.debug): config.debug_checks
         # wins; otherwise REPRO_DEBUG=1/2 enables it
         from ..debug import maybe_wrap_engine
@@ -257,8 +275,14 @@ class SissoSolver:
                 ],
             )
 
+        stats: Dict[str, dict] = {}
+        # resilience accounting (reads through the DebugBackend proxy's
+        # __getattr__ when the sanitizer wraps the resilient wrapper)
+        fault_stats = getattr(self.engine.backend, "fault_stats", None)
+        if fault_stats is not None:
+            stats["resilience"] = dict(fault_stats)
         return SissoFit(models_by_dim=models_by_dim, fspace=fspace,
-                        timings=timings, problem=problem.kind)
+                        timings=timings, problem=problem.kind, stats=stats)
 
 
 class SissoRegressor(SissoSolver):

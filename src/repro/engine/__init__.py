@@ -24,12 +24,14 @@ from .reference import ReferenceBackend
 from .jnp_backend import JnpBackend
 from .pallas_backend import PallasBackend
 from .sharded import ShardedBackend, ShardedExecution
+from .resilient import ResilientExecution
 
 BACKENDS = {
     "reference": ReferenceBackend,
     "jnp": JnpBackend,
     "pallas": PallasBackend,
     "sharded": ShardedExecution,
+    "resilient": ResilientExecution,
 }
 
 #: default execution backend (jit-cached XLA) when none is configured.
@@ -52,12 +54,17 @@ def get_engine(spec: Union[str, Engine, Backend, None] = None, **opts) -> Engine
         return Engine(spec)
     if isinstance(spec, str) and spec.startswith("sharded:"):
         inner = spec.split(":", 1)[1]
-        if inner not in BACKENDS or inner == "sharded":
+        if inner not in BACKENDS or inner in ("sharded", "resilient"):
             raise ValueError(
                 f"unknown inner backend {inner!r} in {spec!r}; expected "
-                f"one of {sorted(set(BACKENDS) - {'sharded'})}"
+                f"one of {sorted(set(BACKENDS) - {'sharded', 'resilient'})}"
             )
         return Engine(ShardedExecution(inner=inner, **opts))
+    if isinstance(spec, str) and spec.startswith("resilient:"):
+        # fault-tolerance wrapper (engine/resilient.py) over any inner
+        # spec — including composed ones ("resilient:sharded:pallas")
+        inner = spec.split(":", 1)[1]
+        return Engine(ResilientExecution(inner=inner, **opts))
     try:
         cls = BACKENDS[spec]
     except KeyError:
@@ -71,5 +78,6 @@ def get_engine(spec: Union[str, Engine, Backend, None] = None, **opts) -> Engine
 __all__ = [
     "Backend", "Engine", "L0Problem", "ReducedBlock", "BACKENDS",
     "BlockPrefetcher", "DEFAULT_BACKEND", "get_engine", "ReferenceBackend",
-    "JnpBackend", "PallasBackend", "ShardedBackend", "ShardedExecution",
+    "JnpBackend", "PallasBackend", "ResilientExecution", "ShardedBackend",
+    "ShardedExecution",
 ]

@@ -57,6 +57,16 @@ class BlockPrefetcher(Generic[TItem, TOut]):
         self.items = iter(items)
         self.depth = depth
 
+    def _fetch(self, item: TItem) -> TOut:
+        # fault site ``prefetch.fetch``: a worker-thread dispatch failure
+        # (device error raised off-main-thread).  The exception is held in
+        # the future and re-raises at the consumer in block order — which
+        # is exactly the ordering contract this site exists to test.
+        from ..runtime import faults
+
+        faults.check("prefetch.fetch")
+        return self.fn(item)
+
     def __iter__(self) -> Iterator[Tuple[TItem, TOut]]:
         pool = ThreadPoolExecutor(
             max_workers=self.depth, thread_name_prefix="block-prefetch"
@@ -64,7 +74,7 @@ class BlockPrefetcher(Generic[TItem, TOut]):
         inflight: deque = deque()
         try:
             for item in self.items:
-                inflight.append((item, pool.submit(self.fn, item)))
+                inflight.append((item, pool.submit(self._fetch, item)))
                 if len(inflight) < self.depth:
                     continue
                 item0, fut = inflight.popleft()

@@ -91,6 +91,8 @@ def _save_locked() -> None:
     tmp = _PATH + ".tmp"
     with open(tmp, "w") as f:
         json.dump([[_jsonable(k), _jsonable(v)] for k, v in _CACHE.items()], f)
+        f.flush()
+        os.fsync(f.fileno())  # the rename must never publish a torn sidecar
     os.replace(tmp, _PATH)
 
 

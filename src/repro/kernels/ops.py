@@ -14,6 +14,7 @@ import numpy as np
 
 from ..core.l0 import GramStats
 from ..core.sis import ScoreContext, TaskLayout
+from ..runtime import faults
 from .fused_sis import fused_gen_sis_pallas, fused_gen_sis_topk_pallas
 from .l0_gather import l0_gather_topk_pallas, l0_gather_tuples_pallas
 from .l0_tile import l0_pairs_tiled_pallas
@@ -63,6 +64,7 @@ def fused_gen_sis(
     dtype=None,       # kernel compute dtype; None -> fp32
 ) -> jnp.ndarray:
     """Scores (B,) for a same-operator candidate block; invalid -> -inf."""
+    faults.check("kernel.sis")
     interpret = _interpret_default() if interpret is None else interpret
     dtype = jnp.float32 if dtype is None else jnp.dtype(dtype)
     bsz = a.shape[0]
@@ -97,6 +99,7 @@ def fused_gen_sis_topk(
     Returns ``(scores (k',) f64 best-first, indices (k',) i64)`` with
     k' <= n_keep (invalid/padding rows can never appear).
     """
+    faults.check("kernel.sis")
     interpret = _interpret_default() if interpret is None else interpret
     dtype = jnp.float32 if dtype is None else jnp.dtype(dtype)
     bsz = a.shape[0]
@@ -129,6 +132,7 @@ def l0_score_pairs(stats: GramStats, pairs: jnp.ndarray) -> jnp.ndarray:
     block-loop integration path (core/l0.py) and as the rescoring step of
     the two-phase tiled search.
     """
+    faults.check("kernel.l0")
     i = pairs[:, 0]
     j = pairs[:, 1]
     total = jnp.zeros((pairs.shape[0],), stats.gram.dtype)
@@ -209,6 +213,7 @@ def l0_score_tuples(
     before returning.  The result stays on device so the caller can fuse
     the top-k / rescore selection without an extra transfer.
     """
+    faults.check("kernel.l0")
     interpret = _interpret_default() if interpret is None else interpret
     tuples = jnp.asarray(tuples, jnp.int32)
     b, n = tuples.shape
@@ -240,6 +245,7 @@ def l0_topk_tuples(
     ``(sses (k',) f64 ascending, indices (k',) i64)`` — indices are
     positions into ``tuples``; padding tuples can never appear.
     """
+    faults.check("kernel.l0")
     interpret = _interpret_default() if interpret is None else interpret
     tuples = jnp.asarray(tuples, jnp.int32)
     b, n = tuples.shape
@@ -348,6 +354,9 @@ def l0_search_tiled(
     for ci, chunk in enumerate(chunks):
         if ci < start_chunk:
             continue
+        # fault site: one tile chunk's device sweep (the tiled analogue
+        # of l0.block_scores; "kill" after restore exercises tile resume)
+        faults.check("tiles.chunk")
         ti = jnp.asarray([c[0] for c in chunk], jnp.int32)
         tj = jnp.asarray([c[1] for c in chunk], jnp.int32)
         sse, idx = l0_pairs_tiled_pallas(

@@ -1,3 +1,9 @@
-from .journal import WorkJournal
+from . import faults
+from .faults import (FaultInjected, FaultPlan, KernelFailure,
+                     TransientDeviceError)
+from .journal import LeaseTable, WorkJournal, merge_block_results
 
-__all__ = ["WorkJournal"]
+__all__ = [
+    "FaultInjected", "FaultPlan", "KernelFailure", "LeaseTable",
+    "TransientDeviceError", "WorkJournal", "faults", "merge_block_results",
+]

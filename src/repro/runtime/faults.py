@@ -1,0 +1,265 @@
+"""Seeded, deterministic fault injection for the sweep runtime.
+
+Long SISSO sweeps (10^9–10^13 tuples, Ouyang et al. 2017 scale) live on
+preemptible fleets: device errors, worker kills, torn journal writes and
+NaN score panels all happen eventually.  None of them can be *tested*
+unless they can be provoked on demand, deterministically, at a named
+point in the pipeline.  This module is that provocation layer.
+
+A :class:`FaultPlan` maps **site names** — stable strings baked into the
+runtime at each failure-prone boundary — to fault **kinds** with
+occurrence selectors.  Sites currently wired in:
+
+=================== ======================================================
+site                where it fires
+=================== ======================================================
+``l0.block_scores`` core/l0.py ``score_block`` — one ℓ0 block's scoring
+``worker.tick``     per-block loop of core/l0.py and the elastic harness
+``prefetch.fetch``  engine/streaming.py worker-thread dispatch
+``kernel.l0``       kernels/ops.py ℓ0 kernel wrappers (pair + gather)
+``kernel.sis``      kernels/ops.py fused-SIS kernel wrappers
+``tiles.chunk``     kernels/ops.py ``l0_search_tiled`` chunk loop
+``journal.write``   runtime/journal.py ``_publish`` (torn-write support)
+=================== ======================================================
+
+Kinds and their effect at :func:`check`:
+
+* ``err``   → raise :class:`TransientDeviceError` (retryable)
+* ``fatal`` → raise :class:`KernelFailure` (persistent; demotion trigger)
+* ``kill``  → ``os._exit(KILL_EXIT_CODE)`` — a SIGKILL-grade worker death
+* ``nan``   → returned to the caller, which corrupts its own result panel
+* ``torn``  → returned to the caller (the journal truncates its write)
+
+Occurrence selectors (1-based per-site counters, thread-safe):
+
+* ``@n``   exactly the n-th occurrence
+* ``@n+``  the n-th and every later occurrence
+* ``@n-m`` occurrences n through m inclusive
+* ``*``    every occurrence (the default when no selector is given)
+* ``~p``   each occurrence independently with probability ``p``, drawn
+  from a per-site ``random.Random`` seeded by ``(plan seed, site)`` —
+  "random" faults that replay identically across runs
+
+Activation: tests call :func:`install`; processes (CI chaos steps, the
+elastic harness workers) set ``REPRO_FAULTS``, e.g. ::
+
+    REPRO_FAULTS="worker.tick:kill@3;journal.write:torn@2"
+
+With no plan installed and no env var, :func:`check` is a dict lookup
+returning None — cheap enough to leave in production paths.
+"""
+from __future__ import annotations
+
+import os
+import random
+import threading
+from typing import Dict, List, Optional, Tuple
+
+#: exit code of an injected worker kill — distinguishable from a normal
+#: failure so harnesses can assert the *right* worker died
+KILL_EXIT_CODE = 137
+
+_KINDS = ("err", "fatal", "kill", "nan", "torn")
+
+
+class FaultInjected(RuntimeError):
+    """Base class of injected faults (site and occurrence in args)."""
+
+    def __init__(self, site: str, occurrence: int):
+        super().__init__(
+            f"injected fault at {site!r} (occurrence {occurrence})"
+        )
+        self.site = site
+        self.occurrence = occurrence
+
+
+class TransientDeviceError(FaultInjected):
+    """A retryable failure: the class ResilientExecution backs off on."""
+
+
+class KernelFailure(FaultInjected):
+    """A persistent kernel failure (Mosaic lowering / XLA class): retrying
+    the same backend cannot help — the demotion trigger."""
+
+
+class _Trigger:
+    __slots__ = ("kind", "first", "last", "prob")
+
+    def __init__(self, kind: str, first: int = 1,
+                 last: Optional[int] = None, prob: Optional[float] = None):
+        if kind not in _KINDS:
+            raise ValueError(
+                f"unknown fault kind {kind!r}; expected one of {_KINDS}"
+            )
+        self.kind = kind
+        self.first = int(first)
+        self.last = None if last is None else int(last)
+        self.prob = None if prob is None else float(prob)
+
+    def matches(self, occurrence: int, rng: random.Random) -> bool:
+        if self.prob is not None:
+            return rng.random() < self.prob
+        if occurrence < self.first:
+            return False
+        return self.last is None or occurrence <= self.last
+
+
+class FaultPlan:
+    """A deterministic schedule of faults keyed by injection-site name."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self._triggers: Dict[str, List[_Trigger]] = {}
+        self._counts: Dict[str, int] = {}
+        self._rngs: Dict[str, random.Random] = {}
+        #: every fault actually delivered: (site, kind, occurrence)
+        self.fired: List[Tuple[str, str, int]] = []
+        self._lock = threading.Lock()
+
+    # -- construction ---------------------------------------------------
+    def add(self, site: str, kind: str, at: Optional[int] = None,
+            upto: Optional[int] = None, onward: bool = False,
+            prob: Optional[float] = None) -> "FaultPlan":
+        """Schedule ``kind`` at ``site``.
+
+        ``at`` alone = exactly that occurrence; ``at`` + ``onward`` = from
+        that occurrence on; ``at``/``upto`` = closed range; neither =
+        every occurrence; ``prob`` = seeded per-occurrence coin flip.
+        """
+        if prob is not None:
+            trig = _Trigger(kind, prob=prob)
+        elif at is None:
+            trig = _Trigger(kind, first=1, last=None)
+        else:
+            last = None if onward else (at if upto is None else upto)
+            trig = _Trigger(kind, first=at, last=last)
+        self._triggers.setdefault(site, []).append(trig)
+        return self
+
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "FaultPlan":
+        """Parse a ``REPRO_FAULTS`` spec: ``site:kind[@n|@n+|@n-m|~p|*]``
+        clauses joined by ``;``."""
+        plan = cls(seed=seed)
+        for clause in spec.split(";"):
+            clause = clause.strip()
+            if not clause:
+                continue
+            try:
+                site, rest = clause.split(":", 1)
+            except ValueError:
+                raise ValueError(
+                    f"bad REPRO_FAULTS clause {clause!r}: expected "
+                    "'site:kind[@occ]'"
+                ) from None
+            site = site.strip()
+            rest = rest.strip()
+            if "~" in rest:
+                kind, p = rest.split("~", 1)
+                plan.add(site, kind.strip(), prob=float(p))
+            elif "@" in rest:
+                kind, occ = rest.split("@", 1)
+                occ = occ.strip()
+                if occ.endswith("+"):
+                    plan.add(site, kind.strip(), at=int(occ[:-1]),
+                             onward=True)
+                elif "-" in occ:
+                    lo, hi = occ.split("-", 1)
+                    plan.add(site, kind.strip(), at=int(lo), upto=int(hi))
+                else:
+                    plan.add(site, kind.strip(), at=int(occ))
+            else:
+                plan.add(site, rest.rstrip("*").strip() or rest)
+        return plan
+
+    # -- delivery -------------------------------------------------------
+    def fire(self, site: str) -> Optional[str]:
+        """Count one occurrence of ``site``; return the matching fault
+        kind (first matching trigger wins) or None."""
+        with self._lock:
+            n = self._counts.get(site, 0) + 1
+            self._counts[site] = n
+            for trig in self._triggers.get(site, ()):
+                if trig.prob is not None and site not in self._rngs:
+                    self._rngs[site] = random.Random(f"{self.seed}:{site}")
+                if trig.matches(n, self._rngs.get(site)):
+                    self.fired.append((site, trig.kind, n))
+                    return trig.kind
+        return None
+
+    def occurrences(self, site: str) -> int:
+        with self._lock:
+            return self._counts.get(site, 0)
+
+    def fired_at(self, site: str, kind: Optional[str] = None) -> int:
+        """How many faults were delivered at ``site`` (of ``kind``)."""
+        with self._lock:
+            return sum(
+                1 for s, k, _ in self.fired
+                if s == site and (kind is None or k == kind)
+            )
+
+
+# -- process-wide activation -------------------------------------------
+
+_ACTIVE: Optional[FaultPlan] = None
+_ENV_PLAN: Optional[FaultPlan] = None
+_ENV_SPEC: Optional[str] = None
+_ENV_VAR = "REPRO_FAULTS"
+
+
+def install(plan: Optional[FaultPlan]) -> Optional[FaultPlan]:
+    """Install ``plan`` process-wide (None uninstalls).  Returns ``plan``
+    so tests can write ``plan = faults.install(FaultPlan().add(...))``."""
+    global _ACTIVE
+    _ACTIVE = plan
+    return plan
+
+
+def active_plan() -> Optional[FaultPlan]:
+    """The installed plan, else one parsed from ``REPRO_FAULTS`` (cached —
+    per-site occurrence counters survive across calls)."""
+    global _ENV_PLAN, _ENV_SPEC
+    if _ACTIVE is not None:
+        return _ACTIVE
+    spec = os.environ.get(_ENV_VAR, "").strip()
+    if not spec:
+        _ENV_PLAN, _ENV_SPEC = None, None
+        return None
+    if spec != _ENV_SPEC:
+        _ENV_PLAN = FaultPlan.parse(
+            spec, seed=int(os.environ.get("REPRO_FAULTS_SEED", "0"))
+        )
+        _ENV_SPEC = spec
+    return _ENV_PLAN
+
+
+def fire(site: str) -> Optional[str]:
+    """Count an occurrence of ``site`` against the active plan (no side
+    effects beyond counting); None when no plan is active."""
+    plan = active_plan()
+    return plan.fire(site) if plan is not None else None
+
+
+def check(site: str) -> Optional[str]:
+    """Fire ``site`` and *deliver* raising/killing kinds.
+
+    ``err`` raises :class:`TransientDeviceError`, ``fatal`` raises
+    :class:`KernelFailure`, ``kill`` exits the process un-catchably
+    (``os._exit`` — no atexit, no finally, like a preemption SIGKILL).
+    Value kinds (``nan``, ``torn``) are returned for the caller to apply.
+    """
+    plan = active_plan()
+    if plan is None:
+        return None
+    kind = plan.fire(site)
+    if kind is None:
+        return None
+    occurrence = plan.occurrences(site)
+    if kind == "err":
+        raise TransientDeviceError(site, occurrence)
+    if kind == "fatal":
+        raise KernelFailure(site, occurrence)
+    if kind == "kill":
+        os._exit(KILL_EXIT_CODE)
+    return kind

@@ -1,86 +1,370 @@
-"""Work journal: restartable sweeps over huge embarrassingly-parallel spaces.
+"""Work journal v2: restartable, crash-consistent sweeps with leases.
 
 The SISSO ℓ0 stage evaluates 10^9–10^13 tuples in deterministic blocks
 (rank ranges of core/l0.py `TupleEnumerator` / kernels/ops.py tile
 chunks — a block index fully identifies its tuples).  The journal
-records, atomically, the index of the next unfinished block plus the running
-top-k state, so:
+records, atomically and verifiably, the sweep's progress so:
 
 * **preemption** loses at most one block of work;
-* **stragglers**: because block results merge idempotently (max/min/top-k),
-  a coordinator may *reissue* an unacked block to another worker and accept
-  whichever finishes first — duplicate completions are harmless
-  (`mark_reissued` tracks them for accounting);
-* **restart** resumes from `has_state()`/`restore()` without recomputation.
+* **torn writes** cannot poison a resume: every record is a versioned
+  envelope carrying a SHA-1 of its canonical-JSON payload, published via
+  tmp-write → flush → fsync → ``os.replace``, and the previous good
+  generation is rotated to ``<path>.bak`` first — a record torn mid-JSON
+  (power loss, injected via the ``journal.write`` fault site) fails the
+  parse/checksum and :meth:`restore` falls back to the ``.bak``;
+* **stragglers/elastic workers**: the :class:`LeaseTable` issues blocks
+  to named workers with deadlines; expired or explicitly released leases
+  are *reissued* to other workers, and because block results merge
+  idempotently (top-k of a union == top-k of per-block top-k panels,
+  acked once per block), duplicate completions are harmless;
+* **restart** resumes from ``has_state()`` / ``restore*()`` without
+  recomputation — v1 files (pre-checksum format) still load, marked
+  ``journal_version == 1``, and upgrade to v2 on the next record.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from . import faults
+
+_VERSION = 2
+
+
+def _canonical_json(payload) -> str:
+    """Canonical form for checksumming: round-tripped through JSON first
+    so what we hash is exactly what a reader will re-serialize (int dict
+    keys become strings, tuples become lists), then key-sorted."""
+    return json.dumps(
+        json.loads(json.dumps(payload)), sort_keys=True,
+        separators=(",", ":"),
+    )
+
+
+def _payload_sha1(payload) -> str:
+    return hashlib.sha1(_canonical_json(payload).encode()).hexdigest()
+
+
+def merge_block_results(
+    results: Dict[int, Tuple[np.ndarray, np.ndarray]], n_keep: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge per-block top-k panels into the global top-``n_keep``.
+
+    ``results`` maps block index → ``(sses ascending, tuples)`` panels.
+    Concatenating in **ascending block order** and stable-argsorting
+    reproduces bit-for-bit the running merge `l0_search` performs block
+    by block: stable ties resolve to the lowest concatenation position,
+    i.e. the lowest block index — exactly the incremental-merge winner.
+    Idempotent by construction: each block contributes once, so reissued
+    blocks acked twice change nothing.
+    """
+    if not results:
+        return np.full((n_keep,), np.inf), np.zeros((n_keep, 0), np.int64)
+    sses, tuples = [], []
+    for bi in sorted(results):
+        s, t = results[bi]
+        sses.append(np.asarray(s, np.float64))
+        tuples.append(np.asarray(t, np.int64))
+    cat_s = np.concatenate(sses)
+    cat_t = np.concatenate(tuples)
+    cat_s = np.where(np.isfinite(cat_s), cat_s, np.inf)
+    order = np.argsort(cat_s, kind="stable")[: int(n_keep)]
+    return cat_s[order], cat_t[order]
+
+
+class LeaseTable:
+    """Issue/ack bookkeeping for one sweep's block space.
+
+    Units are block indices ``0..n_units-1``.  :meth:`next_unit` hands
+    the lowest unfinished block to a worker under a wall-clock deadline;
+    a block whose lease expired (worker died / stalled) is **reissued**
+    — ``reissues`` counts those — and :meth:`ack` is idempotent, so the
+    race where a presumed-dead worker's result still arrives is benign.
+    """
+
+    def __init__(self, n_units: int, ttl: float = 60.0):
+        self.n_units = int(n_units)
+        self.ttl = float(ttl)
+        self.acked: set = set()
+        #: unit -> {"worker": str, "deadline": float}
+        self.leases: Dict[int, dict] = {}
+        self.reissues = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.acked) >= self.n_units
+
+    def next_unit(self, worker: str, now: Optional[float] = None) -> Optional[int]:
+        """Lease the lowest block that is neither acked nor under a live
+        lease; None when nothing is issuable right now (all outstanding
+        leases still within deadline, or sweep complete)."""
+        now = _now() if now is None else now
+        for unit in range(self.n_units):
+            if unit in self.acked:
+                continue
+            lease = self.leases.get(unit)
+            if lease is not None and lease["deadline"] > now:
+                continue
+            if lease is not None:
+                self.reissues += 1
+            self.leases[unit] = {"worker": str(worker),
+                                 "deadline": now + self.ttl}
+            return unit
+        return None
+
+    def ack(self, unit: int, worker: Optional[str] = None) -> bool:
+        """Mark ``unit`` finished; True iff this is its *first* ack."""
+        unit = int(unit)
+        newly = unit not in self.acked
+        self.acked.add(unit)
+        self.leases.pop(unit, None)
+        return newly
+
+    def release_worker(self, worker: str) -> List[int]:
+        """Expire every outstanding lease held by ``worker`` (known dead:
+        EOF on its pipe, lost heartbeat) so its blocks reissue at the
+        next :meth:`next_unit` instead of waiting out the TTL."""
+        released = []
+        for unit, lease in self.leases.items():
+            if lease["worker"] == str(worker):
+                lease["deadline"] = float("-inf")
+                released.append(unit)
+        return released
+
+    def expire_all(self) -> None:
+        """Expire every outstanding lease (coordinator restart: nothing
+        is known about in-flight work, so everything unacked reissues)."""
+        for lease in self.leases.values():
+            lease["deadline"] = float("-inf")
+
+    def outstanding(self) -> List[int]:
+        return sorted(self.leases)
+
+    # -- journal (de)serialization -------------------------------------
+    def to_payload(self) -> dict:
+        return {
+            "n_units": self.n_units,
+            "ttl": self.ttl,
+            "acked": sorted(self.acked),
+            "leases": {
+                str(u): [l["worker"], l["deadline"]]
+                for u, l in self.leases.items()
+            },
+            "reissues": self.reissues,
+        }
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "LeaseTable":
+        table = cls(payload["n_units"], ttl=payload.get("ttl", 60.0))
+        table.acked = set(int(u) for u in payload.get("acked", ()))
+        table.leases = {
+            int(u): {"worker": w, "deadline": float(d)}
+            for u, (w, d) in payload.get("leases", {}).items()
+        }
+        table.reissues = int(payload.get("reissues", 0))
+        return table
+
+
+def _now() -> float:
+    import time
+
+    return time.time()
 
 
 class WorkJournal:
     def __init__(self, path: str):
         self.path = path
+        self.bak_path = path + ".bak"
         self.reissues = 0
         #: sweep signature of the recorded state (e.g. {m, n_dim, block,
         #: n_keep} for ℓ0 rank-range sweeps); None on files written before
         #: signatures existed.  Callers compare it before resuming so a
         #: journal can never poison a *different* sweep's search.
         self.meta: Optional[dict] = None
+        #: format version of the last file restored (1 = pre-checksum)
+        self.journal_version: Optional[int] = None
+        #: True when the last restore had to fall back to the .bak
+        #: generation (current file torn/corrupt)
+        self.recovered_from_bak = False
+        #: set once this object has published a good v2 generation —
+        #: lets _publish skip re-verifying its own last write
+        self._published = False
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    # -- crash-consistent publication ----------------------------------
+    def _publish(self, kind: str, payload: dict) -> None:
+        """tmp-write → flush → fsync → rotate good current to .bak →
+        ``os.replace``.  The ``journal.write`` fault site's ``torn`` kind
+        simulates a mid-publish power loss: the final file is truncated
+        mid-JSON while the rotated ``.bak`` keeps the last good state.
+        """
+        doc = {"version": _VERSION, "kind": kind, "payload": payload,
+               "sha1": _payload_sha1(payload)}
+        body = json.dumps(doc)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(body)
+            f.flush()
+            os.fsync(f.fileno())
+        # rotate the previous generation to .bak — but never rotate a
+        # file we can't verify (a torn current must not clobber the one
+        # good backup that survives it)
+        if os.path.exists(self.path) and (
+            self._published or self._read_verified(self.path) is not None
+        ):
+            os.replace(self.path, self.bak_path)
+        torn = faults.fire("journal.write") == "torn"
+        if torn:
+            with open(self.path, "w") as f:
+                f.write(body[: max(1, len(body) // 2)])
+            os.remove(tmp)
+            self._published = False
+            return
+        os.replace(tmp, self.path)
+        self._published = True
+        self._fsync_dir()
+
+    def _fsync_dir(self) -> None:
+        # directory fsync makes the rename itself durable; best-effort
+        # (not all filesystems/platforms allow opening a directory)
+        try:
+            dfd = os.open(os.path.dirname(self.path) or ".", os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(dfd)
+        except OSError:
+            pass
+        finally:
+            os.close(dfd)
+
+    def _read_verified(self, path: str) -> Optional[dict]:
+        """Parse + verify one journal file; None on any corruption."""
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if not isinstance(raw, dict):
+            return None
+        if "version" not in raw:
+            # v1 format: the payload *is* the document, no checksum.
+            # Accept it (migration path); the next record writes v2.
+            if "kind" not in raw:
+                return None
+            return {"version": 1, "kind": raw["kind"], "payload": raw}
+        if raw.get("version") != _VERSION:
+            return None
+        payload = raw.get("payload")
+        if _payload_sha1(payload) != raw.get("sha1"):
+            return None
+        return raw
+
+    def _load(self) -> Optional[dict]:
+        """Newest verifiable generation: current file, else ``.bak``."""
+        for path, from_bak in ((self.path, False), (self.bak_path, True)):
+            doc = self._read_verified(path)
+            if doc is not None:
+                self.recovered_from_bak = from_bak
+                self.journal_version = int(doc["version"])
+                return doc
+        return None
+
+    def _restore_payload(self, expect_kind: str) -> dict:
+        doc = self._load()
+        if doc is None:
+            raise FileNotFoundError(
+                f"no restorable journal at {self.path} (current and .bak "
+                "both missing or corrupt)"
+            )
+        assert doc["kind"] == expect_kind, doc["kind"]
+        payload = doc["payload"]
+        self.reissues = int(payload.get("reissues", 0))
+        self.meta = payload.get("meta")
+        return payload
 
     # -- generic block-sweep state (core/l0.py) -------------------------
     def has_state(self) -> bool:
-        return os.path.exists(self.path)
+        """True iff a verifiable generation exists (current or .bak) —
+        a journal that is *present but torn with no backup* reads as
+        absent, so the sweep restarts cleanly instead of crashing."""
+        return self._load() is not None
 
     def record(self, next_block: int, best_sse: np.ndarray,
                best_tuples: np.ndarray, meta: Optional[dict] = None) -> None:
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({
-                "kind": "blocks",
-                "next_block": int(next_block),
-                "best_sse": np.asarray(best_sse).tolist(),
-                "best_tuples": np.asarray(best_tuples).tolist(),
-                "reissues": self.reissues,
-                "meta": meta,
-            }, f)
-        os.replace(tmp, self.path)
+        self._publish("blocks", {
+            "next_block": int(next_block),
+            "best_sse": np.asarray(best_sse).tolist(),
+            "best_tuples": np.asarray(best_tuples).tolist(),
+            "reissues": self.reissues,
+            "meta": meta,
+        })
 
     def restore(self) -> Tuple[np.ndarray, np.ndarray, int]:
-        with open(self.path) as f:
-            st = json.load(f)
-        assert st["kind"] == "blocks", st["kind"]
-        self.reissues = st.get("reissues", 0)
-        self.meta = st.get("meta")
+        st = self._restore_payload("blocks")
         return (np.asarray(st["best_sse"], np.float64),
                 np.asarray(st["best_tuples"], np.int64),
                 int(st["next_block"]))
 
     # -- tiled-kernel sweep state (kernels/ops.py) ----------------------
     def record_tiles(self, next_chunk: int, best: List[tuple]) -> None:
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"kind": "tiles", "next_chunk": int(next_chunk),
-                       "best": [list(b) for b in best],
-                       "reissues": self.reissues}, f)
-        os.replace(tmp, self.path)
+        self._publish("tiles", {
+            "next_chunk": int(next_chunk),
+            "best": [list(b) for b in best],
+            "reissues": self.reissues,
+        })
 
     def restore_tiles(self) -> Tuple[List[tuple], int]:
-        with open(self.path) as f:
-            st = json.load(f)
-        assert st["kind"] == "tiles", st["kind"]
-        self.reissues = st.get("reissues", 0)
+        st = self._restore_payload("tiles")
         best = [tuple(b) for b in st["best"]]
         return best, int(st["next_chunk"])
 
+    # -- elastic coordinator state (lease table + per-block panels) -----
+    def record_elastic(
+        self,
+        table: LeaseTable,
+        results: Dict[int, Tuple[np.ndarray, np.ndarray]],
+        meta: Optional[dict] = None,
+    ) -> None:
+        """Checkpoint an elastic sweep: the lease table plus every acked
+        block's top-k panel.  Panels are what makes resume *exact*: the
+        final answer is :func:`merge_block_results` over them, so a
+        restore only needs to re-score blocks absent from ``results``.
+        """
+        self._publish("elastic", {
+            "table": table.to_payload(),
+            "results": {
+                str(bi): {"sse": np.asarray(s, np.float64).tolist(),
+                          "tuples": np.asarray(t, np.int64).tolist()}
+                for bi, (s, t) in results.items()
+            },
+            "reissues": self.reissues,
+            "meta": meta,
+        })
+
+    def restore_elastic(
+        self,
+    ) -> Tuple[LeaseTable, Dict[int, Tuple[np.ndarray, np.ndarray]]]:
+        st = self._restore_payload("elastic")
+        table = LeaseTable.from_payload(st["table"])
+        results = {
+            int(bi): (np.asarray(panel["sse"], np.float64),
+                      np.asarray(panel["tuples"], np.int64))
+            for bi, panel in st["results"].items()
+        }
+        return table, results
+
+    # -- misc -----------------------------------------------------------
     def mark_reissued(self, n: int = 1) -> None:
         self.reissues += n
 
     def clear(self) -> None:
-        if os.path.exists(self.path):
-            os.remove(self.path)
+        for path in (self.path, self.bak_path, self.path + ".tmp"):
+            if os.path.exists(path):
+                os.remove(path)
+        self._published = False
+        self.meta = None

@@ -31,6 +31,19 @@ def test_distributed_sis_l0_3d_pod_mesh():
     assert "L0 distributed == serial: OK" in out
 
 
+def test_elastic_sweep_fault_tolerance():
+    """Coordinator + 3 workers sharding a width-4 sweep by rank range,
+    one worker killed mid-sweep (os._exit under an active lease), the
+    coordinator's journal torn mid-publish then restored from the .bak:
+    leases reissue, acked blocks never re-score, and the merged top-k is
+    bit-identical to the fault-free single-process l0_search."""
+    out = _run("check_elastic_sweep.py")
+    assert "elastic: torn journal -> .bak recovery: OK" in out
+    assert "elastic: worker kill + lease reissue: OK" in out
+    assert "elastic: no re-issue of acked blocks: OK" in out
+    assert "elastic: final top-k bit-identical to fault-free l0_search: OK" in out
+
+
 def test_sharded_execution_engine_8dev():
     """ShardedExecution over jnp and pallas(interpret) on a forced 8-device
     mesh: SIS, fused deferred SIS, ℓ0 widths 2–3 winner-set parity plus the

@@ -35,11 +35,18 @@ def _fspace(case):
     ).generate()
 
 
-def test_registry_has_all_four_backends():
-    assert set(BACKENDS) == {"reference", "jnp", "pallas", "sharded"}
+def test_registry_has_all_backends():
+    assert set(BACKENDS) == {
+        "reference", "jnp", "pallas", "sharded", "resilient"
+    }
     for name in BACKENDS:
         eng = get_engine(name)
-        assert isinstance(eng, Engine) and eng.name == name
+        assert isinstance(eng, Engine)
+        if name == "resilient":
+            # the fault-tolerance wrapper names its (default jnp) inner
+            assert eng.name == "resilient[jnp]"
+        else:
+            assert eng.name == name
     with pytest.raises(ValueError):
         get_engine("cuda")
 

@@ -389,6 +389,103 @@ def test_rl008_silent_on_block_until_ready():
 
 
 # ---------------------------------------------------------------------------
+# RL009 — crash-consistent publication, bounded retries
+# ---------------------------------------------------------------------------
+
+def test_rl009_fires_on_replace_without_fsync():
+    findings = run(
+        """
+        import json
+        import os
+        def publish(path, doc):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+            os.replace(tmp, path)
+        """
+    )
+    assert ids_of(findings) == ["RL009"]
+
+
+def test_rl009_silent_on_fsync_before_replace():
+    findings = run(
+        """
+        import json
+        import os
+        def publish(path, doc):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        """
+    )
+    assert findings == []
+
+
+def test_rl009_fires_on_unbounded_retry_loop():
+    findings = run(
+        """
+        def fetch(call):
+            while True:
+                try:
+                    return call()
+                except Exception:
+                    continue
+        """
+    )
+    assert ids_of(findings) == ["RL009"]
+
+
+def test_rl009_fires_on_bare_except_swallowing_forever():
+    findings = run(
+        """
+        import time
+        def poll(step):
+            while True:
+                try:
+                    step()
+                except:
+                    time.sleep(1)
+        """
+    )
+    assert ids_of(findings) == ["RL009"]
+
+
+def test_rl009_silent_on_bounded_retry():
+    findings = run(
+        """
+        def fetch(call, max_attempts=3):
+            attempt = 0
+            while True:
+                try:
+                    return call()
+                except Exception:
+                    attempt += 1
+                    if attempt >= max_attempts:
+                        raise
+        """
+    )
+    assert findings == []
+
+
+def test_rl009_silent_on_narrow_except_in_loop():
+    findings = run(
+        """
+        import queue
+        def drain(q):
+            while True:
+                try:
+                    q.get(timeout=1)
+                except queue.Empty:
+                    continue
+        """
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # escape hatch + output formats + the real tree
 # ---------------------------------------------------------------------------
 
@@ -434,7 +531,7 @@ def test_github_format_annotation():
 
 
 def test_every_rule_has_id_name_and_rationale():
-    assert len(RULES) == 8
+    assert len(RULES) == 9
     for rule in RULES:
         assert rule.id.startswith("RL") and len(rule.id) == 5
         assert rule.doc and rule.id in rule.doc

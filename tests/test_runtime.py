@@ -42,6 +42,38 @@ def test_checkpoint_restore_latest(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4.0) + 1)
 
 
+def test_checkpoint_corrupt_manifest_falls_back_to_older_step(tmp_path):
+    tree = {"w": jnp.arange(4.0)}
+    save_pytree(str(tmp_path), 1, tree)
+    save_pytree(str(tmp_path), 2, jax.tree.map(lambda x: x + 1, tree))
+    # truncate step 2's manifest mid-JSON (crash during an unsynced write)
+    manifest = tmp_path / "step_00000002" / "manifest.json"
+    manifest.write_text(manifest.read_text()[:20])
+    out, step, _ = restore_pytree(str(tmp_path), template=tree)
+    assert step == 1  # newest *restorable* wins
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4.0))
+    # an explicitly requested corrupt step fails loudly instead
+    with pytest.raises(ValueError):
+        restore_pytree(str(tmp_path), step=2, template=tree)
+    # every step corrupt -> FileNotFoundError, not silence
+    (tmp_path / "step_00000001" / "manifest.json").write_text("{")
+    with pytest.raises(FileNotFoundError):
+        restore_pytree(str(tmp_path), template=tree)
+
+
+def test_checkpoint_dir_tolerates_foreign_entries_and_gcs_tmp(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    # foreign entries other tooling may drop into a shared directory
+    (tmp_path / "step_final").mkdir()
+    (tmp_path / ".DS_Store").write_text("")
+    (tmp_path / ".tmp-99").mkdir()  # a writer preempted mid-save
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(5, tree, blocking=True)
+    assert ck.latest() == 5  # int() never crashes on step_final
+    assert not (tmp_path / ".tmp-99").exists()  # gc'd stale temp dir
+    assert (tmp_path / "step_final").exists()  # foreign dirs untouched
+
+
 def test_work_journal_roundtrip(tmp_path):
     j = WorkJournal(str(tmp_path / "j.json"))
     assert not j.has_state()
@@ -160,15 +192,21 @@ def test_journal_sweep_signature_guards_resume(tmp_path, rng):
     np.testing.assert_array_equal(res_d.tuples, ref_d.tuples)
     assert res_d.n_evaluated == ref_d.n_evaluated
 
-    # legacy journal files carry no signature: resume must fail closed
-    # (restart) rather than trust state of unknown provenance
+    # legacy (v1, pre-envelope) journal files carry no sweep signature:
+    # resume must fail closed (restart) rather than trust state of
+    # unknown provenance.  Write a genuine v1-format file — a bare dict
+    # without the v2 {"version", "kind", "payload", "sha1"} envelope.
     import json
-    with open(j.path) as f:
-        st = json.load(f)
-    st.pop("meta")
-    st["next_block"] = 3  # pretend mid-sweep
     with open(j.path, "w") as f:
-        json.dump(st, f)
+        json.dump({
+            "kind": "blocks",
+            "next_block": 3,  # pretend mid-sweep
+            "best_sse": [1.0, 2.0],
+            "best_tuples": [[0, 1], [2, 3]],
+            "reissues": 0,
+        }, f)
+    if os.path.exists(j.path + ".bak"):
+        os.remove(j.path + ".bak")  # the .bak would defeat the test
     j3 = WorkJournal(j.path)
     res3 = l0_search(x, y, layout, n_dim=2, n_keep=4, block=7, journal=j3)
     np.testing.assert_array_equal(res3.tuples, ref.tuples)

@@ -511,6 +511,106 @@ def check_rl008(fctx: FileCtx, project: Project) -> Iterable[Finding]:
             )
 
 
+# ---------------------------------------------------------------------------
+# RL009
+# ---------------------------------------------------------------------------
+
+def _handler_escapes(handler: ast.ExceptHandler) -> bool:
+    """True if the handler body can leave the enclosing loop: a raise,
+    break or return anywhere in it (not counting nested functions)."""
+    stack = list(handler.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Raise, ast.Break, ast.Return)):
+            return True
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+    return False
+
+
+def _catches_broadly(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:  # bare except
+        return True
+    types = (
+        handler.type.elts if isinstance(handler.type, ast.Tuple)
+        else [handler.type]
+    )
+    for t in types:
+        parts = dotted_parts(t)
+        if parts and parts[-1] in ("Exception", "BaseException"):
+            return True
+    return False
+
+
+def check_rl009(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL009 — crash-consistent publication and bounded retries.
+
+    Originating work (PR 8 fault-tolerance pass): two failure classes
+    that only surface under real faults.
+
+    * **torn publication**: a writer that `os.replace`-publishes state
+      without an `os.fsync` in the same function can, after a power
+      loss, atomically rename a file whose *contents* never reached
+      disk — the rename is durable, the data is not.  A crashed sweep
+      then resumes from a truncated journal/manifest (the exact corrupt
+      state journal v2's `.bak` fallback exists to absorb).  Every
+      state-publishing writer must do tmp-write → flush → fsync →
+      `os.replace` (runtime/journal.py `_publish` is the template).
+    * **unbounded retry**: a `while True:` loop whose broad exception
+      handler (`except Exception` / bare `except`) can never leave the
+      loop (no raise/break/return) retries a *persistent* failure
+      forever — a hung fit instead of a failed one.  Retry loops must
+      bound attempts or escalate (engine/resilient.py demotes down the
+      backend chain after `max_attempts`).
+    """
+    scopes = [fctx.tree] + list(_functions(fctx))
+    for scope in scopes:
+        replaces: List[ast.Call] = []
+        fsynced = False
+        for node in _scope_statements(scope):
+            if isinstance(node, ast.Call):
+                name = fctx.canonical_call(node)
+                if name == "os.replace":
+                    replaces.append(node)
+                elif name == "os.fsync":
+                    fsynced = True
+        if not fsynced:
+            for call in replaces:
+                yield Finding(
+                    fctx.path, call.lineno, call.col_offset, "RL009",
+                    "os.replace without os.fsync in the same function: the "
+                    "rename can durably publish contents that never reached "
+                    "disk (torn state after power loss); fsync the tmp file "
+                    "before renaming (see runtime/journal.py _publish)",
+                )
+        for node in _scope_statements(scope):
+            if not (
+                isinstance(node, ast.While)
+                and isinstance(node.test, ast.Constant)
+                and node.test.value is True
+            ):
+                continue
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Try):
+                    continue
+                for handler in sub.handlers:
+                    if _catches_broadly(handler) and not _handler_escapes(
+                        handler
+                    ):
+                        yield Finding(
+                            fctx.path, handler.lineno, handler.col_offset,
+                            "RL009",
+                            "broad exception handler inside 'while True' "
+                            "never raises/breaks/returns: a persistent "
+                            "failure retries forever (hung fit); bound "
+                            "attempts or escalate (the resilient wrapper's "
+                            "max_attempts/demotion pattern)",
+                        )
+
+
 RULES: List[Rule] = [
     Rule("RL001", "stable-selection", check_rl001.__doc__, check_rl001),
     Rule("RL002", "timed-region-blocks", check_rl002.__doc__, check_rl002),
@@ -520,4 +620,6 @@ RULES: List[Rule] = [
     Rule("RL006", "mosaic-lowerable", check_rl006.__doc__, check_rl006),
     Rule("RL007", "reduced-block-sentinels", check_rl007.__doc__, check_rl007),
     Rule("RL008", "no-effects-barrier-sync", check_rl008.__doc__, check_rl008),
+    Rule("RL009", "crash-consistent-publish", check_rl009.__doc__,
+         check_rl009),
 ]
