@@ -19,15 +19,17 @@ jax.config.update("jax_enable_x64", True)
 
 from . import (bench_backends, bench_classify, bench_e2e_kaggle,
                bench_e2e_thermal, bench_feature_gen, bench_l0,
-               bench_precision, bench_scaling, bench_serve, bench_sis)
+               bench_precision, bench_scaling, bench_serve,
+               bench_serve_load, bench_sis)
 
 #: fast modules that record BENCH_*.json — the CI smoke set
 SMOKE_MODULES = (bench_precision, bench_backends, bench_serve,
                  bench_classify, bench_sis, bench_l0)
 
 ALL_MODULES = (bench_feature_gen, bench_sis, bench_l0, bench_precision,
-               bench_backends, bench_serve, bench_classify,
-               bench_e2e_thermal, bench_e2e_kaggle, bench_scaling)
+               bench_backends, bench_serve, bench_serve_load,
+               bench_classify, bench_e2e_thermal, bench_e2e_kaggle,
+               bench_scaling)
 
 
 def main(smoke: bool = False) -> None:

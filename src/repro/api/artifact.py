@@ -215,7 +215,13 @@ class FittedSisso:
             eng = self._engines[key] = get_engine(key)
         return eng
 
-    def _primary_rows(self, X) -> np.ndarray:
+    def primary_rows(self, X) -> np.ndarray:
+        """User-layout ``X (n_samples, P)`` -> engine-layout ``(P, S)`` rows.
+
+        Public: the serving tier's replicas prepare batches with this
+        (repro/serve/replica.py) so every predict surface shares one
+        layout conversion.
+        """
         X = np.asarray(X, np.float64)
         if X.ndim != 2 or X.shape[1] != self.n_features_in:
             raise ValueError(
@@ -224,7 +230,7 @@ class FittedSisso:
             )
         return np.ascontiguousarray(X.T)
 
-    def _task_codes(self, tasks, n_samples: int) -> np.ndarray:
+    def task_codes(self, tasks, n_samples: int) -> np.ndarray:
         if self.n_tasks == 1:
             return np.zeros(n_samples, np.intp)
         if tasks is None:
@@ -248,7 +254,7 @@ class FittedSisso:
                   backend: Optional[str] = None) -> np.ndarray:
         """Descriptor values (n_samples, dim) — pysisso's transformer role."""
         mdl = self.model(dim)
-        xp = self._primary_rows(X)
+        xp = self.primary_rows(X)
         d = self._engine(backend).eval_program(mdl.program, xp)
         return np.asarray(d, np.float64).T
 
@@ -259,9 +265,21 @@ class FittedSisso:
         Regression: predicted targets.  Classification: predicted class
         labels (argmax over the per-task discriminants)."""
         mdl = self.model(dim)
-        xp = self._primary_rows(X)
+        xp = self.primary_rows(X)
         d = self._engine(backend).eval_program(mdl.program, xp)  # (n, S)
-        codes = self._task_codes(tasks, xp.shape[1])
+        codes = self.task_codes(tasks, xp.shape[1])
+        return self.readout(mdl, d, codes)
+
+    def readout(self, mdl: DescriptorModel, d: np.ndarray,
+                codes: np.ndarray) -> np.ndarray:
+        """Predictions (S,) from descriptor values ``d (n, S)``.
+
+        The problem-tagged linear read-out shared by :meth:`predict` and
+        the serving tier's replicas (which evaluate ``d`` through their
+        own bounded jit caches): regression applies the per-task
+        coefficients, classification takes the argmax class over the
+        per-task discriminants.
+        """
         if mdl.problem == "classification":
             df = self._discriminants(mdl, d, codes)              # (S, C)
             return np.asarray(mdl.classes)[np.argmax(df, axis=1)]
@@ -285,9 +303,9 @@ class FittedSisso:
                           backend: Optional[str] = None) -> np.ndarray:
         """Per-class discriminant values (n_samples, n_classes)."""
         mdl = self.model(dim)
-        xp = self._primary_rows(X)
+        xp = self.primary_rows(X)
         d = self._engine(backend).eval_program(mdl.program, xp)
-        codes = self._task_codes(tasks, xp.shape[1])
+        codes = self.task_codes(tasks, xp.shape[1])
         return self._discriminants(mdl, d, codes)
 
     def predict_proba(self, X, *, dim: Optional[int] = None, tasks=None,

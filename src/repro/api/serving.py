@@ -1,35 +1,49 @@
-"""Descriptor serving: batched predict over request streams.
+"""Descriptor serving: batched predict over request streams (legacy shim).
 
-A :class:`SissoServer` wraps one model of a :class:`FittedSisso` and answers
-``predict`` for arbitrary request batches.  Requests are padded up to
-power-of-two batch buckets so the jnp backend's whole-program jit cache
-(one executable per batch shape, core/descriptor.py) is hit by every warm
-request instead of recompiling per distinct batch size — the same
-shape-bucketing discipline LLM serving uses for dynamic batches.  Padding
-replicates the last real row (not zeros) so operators with domain
-constraints (``1/x``, ``log``) never see manufactured singularities in the
-padded lanes.
+.. deprecated::
+    :class:`SissoServer` predates the serving tier and now rides on its
+    components: validation, pow2 batch bucketing and the **bounded** jit
+    cache all come from :mod:`repro.serve`.  New code should use
+    :class:`repro.serve.ServingTier` — multi-model routing, admission
+    control, deadline-aware batching, replicas and hot-swap — with this
+    class remaining as the stable single-model synchronous surface.
+
+Requests are padded up to power-of-two batch buckets so one compiled
+executable serves every warm request of that bucket instead of
+recompiling per distinct batch size.  The bucket set is now capped:
+each server owns a :class:`~repro.serve.jit_cache.ProgramBucketCache`
+holding at most ``max_buckets`` resident executables with LRU eviction
+(previously the per-shape jit cache grew without bound for the life of
+the process), and evictions are surfaced through ``stats``.
 
     server = SissoServer(load_artifact("law.json"))
     y = server.predict(X_batch)            # any batch size
-    server.stats                           # requests / samples / compiles
+    server.stats                           # requests / buckets / evictions
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import numpy as np
 
+from ..precision import set_precision
+from ..serve.jit_cache import DEFAULT_MAX_BUCKETS, ProgramBucketCache, pow2_bucket
+from ..serve.scheduler import validate_batch
 from .artifact import FittedSisso
 
 
 def _bucket(n: int) -> int:
     """Smallest power of two >= n (the jit-cache shape bucket)."""
-    return 1 << max(0, (n - 1).bit_length())
+    return pow2_bucket(n)
 
 
 class SissoServer:
-    """Batched, jit-cached serving front end for one fitted model."""
+    """Batched, jit-cached serving front end for one fitted model.
+
+    Deprecated in favor of :class:`repro.serve.ServingTier`; kept as a
+    thin synchronous shim over the tier's bucket cache and validation.
+    """
 
     def __init__(
         self,
@@ -37,12 +51,20 @@ class SissoServer:
         dim: Optional[int] = None,
         backend: Optional[str] = None,
         bucket_batches: bool = True,
+        max_buckets: int = DEFAULT_MAX_BUCKETS,
     ):
+        warnings.warn(
+            "SissoServer is deprecated: use repro.serve.ServingTier "
+            "(multi-model registry, admission control, replicas, hot-swap); "
+            "SissoServer remains as a single-model synchronous shim",
+            DeprecationWarning, stacklevel=2,
+        )
         self.fitted = fitted
         self.model = fitted.model(dim)
         self.dim = self.model.dim
         self.backend = backend or fitted.config.backend
         self.bucket_batches = bucket_batches
+        self._cache = ProgramBucketCache(max_buckets)
         self._shapes = set()
         self._requests = 0
         self._samples = 0
@@ -51,18 +73,19 @@ class SissoServer:
     @property
     def stats(self) -> dict:
         """Serving counters: requests, samples, distinct compiled shapes,
-        rejected (malformed/non-finite) request batches."""
+        rejected (malformed/non-finite) request batches, and the bounded
+        jit-cache state (resident buckets, hits, evictions)."""
+        cache = self._cache.stats()
         return {
             "requests": self._requests,
             "samples": self._samples,
             "shapes": sorted(self._shapes),
             "n_compiled_shapes": len(self._shapes),
             "rejected": self._rejected,
+            "max_buckets": cache["max_buckets"],
+            "resident_buckets": cache["resident"],
+            "evictions": cache["evictions"],
         }
-
-    def _reject(self, why: str):
-        self._rejected += 1
-        return ValueError(f"predict: rejected request batch — {why}")
 
     def predict(self, X, tasks=None) -> np.ndarray:
         """Predictions (batch,) for one request batch ``X (batch, P)``.
@@ -74,41 +97,31 @@ class SissoServer:
         plausible-looking numbers).
         """
         try:
-            X = np.asarray(X, np.float64)
-        except (TypeError, ValueError) as exc:
-            raise self._reject(f"non-numeric input ({exc})") from None
-        if X.ndim == 1:
-            X = X[None, :]
-        p_expected = self.fitted.n_features_in
-        if X.ndim != 2 or X.shape[1] != p_expected:
-            raise self._reject(
-                f"expected shape (batch, {p_expected}) matching the "
-                f"artifact's {p_expected} primary features, got "
-                f"{X.shape}"
+            X, tasks = validate_batch(
+                X, tasks, self.fitted.n_features_in, self.fitted.n_tasks
             )
-        bad = ~np.isfinite(X).all(axis=1)
-        if bad.any():
-            rows = np.flatnonzero(bad)
-            raise self._reject(
-                f"{len(rows)} non-finite row(s) at indices "
-                f"{rows[:8].tolist()}{'...' if len(rows) > 8 else ''}"
-            )
+        except ValueError as exc:
+            self._rejected += 1
+            raise ValueError(f"predict: rejected request batch — {exc}") \
+                from None
         b = X.shape[0]
         if b == 0:
             return np.zeros(0)
-        bp = _bucket(b) if self.bucket_batches else b
-        if bp != b:
-            X = np.concatenate([X, np.repeat(X[-1:], bp - b, axis=0)])
-            if tasks is not None:
-                tasks = np.concatenate(
-                    [np.asarray(tasks), np.repeat(np.asarray(tasks)[-1:], bp - b)]
-                )
-        out = self.fitted.predict(
-            X, dim=self.dim, tasks=tasks, backend=self.backend
+        # the artifact's precision policy (global x64 switch) must be
+        # applied before the program runs, exactly as FittedSisso.predict
+        # does — a serving process never constructs a solver
+        set_precision(self.fitted.config.precision)
+        xp = self.fitted.primary_rows(X)
+        d = self._cache.evaluate(
+            self.model.program, xp,
+            bucket_batches=self.bucket_batches,
+            host=(self.backend == "reference"),
         )
+        codes = self.fitted.task_codes(tasks, b)
+        out = self.fitted.readout(self.model, d, codes)
         self._requests += 1
         self._samples += b
-        self._shapes.add(bp)
-        return out[:b]
+        self._shapes.add(pow2_bucket(b) if self.bucket_batches else b)
+        return out
 
     __call__ = predict

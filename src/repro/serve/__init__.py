@@ -1,0 +1,49 @@
+"""repro.serve — the production serving tier.
+
+The subsystem that turns a fitted-artifact collection into a traffic
+surface (ROADMAP "production serving tier"): an admission-controlled
+request queue with deadline-aware (EDF) batch forming under an explicit
+row budget (:class:`Scheduler`), a :class:`ModelRegistry` of resident
+:class:`~repro.api.artifact.FittedSisso` artifacts with per-request
+routing and atomic hot-swap, N :class:`Replica` workers each owning an
+LRU-bounded pow2-bucketed jit cache (:class:`ProgramBucketCache`), and
+the :class:`ServingTier` front end tying them together with
+round-robin / least-loaded routing and one nested ``stats()`` snapshot.
+
+Everything time-dependent reads a :class:`Clock`, so the scheduler runs
+deterministically on a :class:`VirtualClock` in tests; the synthetic
+Poisson / bursty traffic generators (:mod:`repro.serve.traffic`) drive
+the whole tier end-to-end in ``benchmarks/bench_serve_load.py``.
+
+    tier = ServingTier(n_replicas=2, row_budget=128)
+    tier.register("alpha", load_artifact("alpha.json"))
+    y = tier.predict("alpha", X)            # sync convenience
+    fut = tier.submit("alpha", X, slo=0.2)  # async: fut.result()
+    tier.register("alpha", refit)           # hot-swap, zero dropped requests
+    tier.stats()                            # queues, p50/p99, versions
+"""
+from .clock import MonotonicClock, VirtualClock
+from .jit_cache import ProgramBucketCache, pad_columns, pow2_bucket
+from .registry import ModelRegistry, ResidentModel
+from .replica import Replica
+from .request import (
+    STATUS_ERROR, STATUS_EXPIRED, STATUS_OK, STATUS_REJECTED,
+    PendingResponse, PredictRequest, Response,
+)
+from .scheduler import (
+    REASON_DEADLINE, REASON_MALFORMED, REASON_OVERSIZE, REASON_QUEUE_FULL,
+    REASON_SHUTDOWN, REASON_UNKNOWN_MODEL, Batch, Scheduler, validate_batch,
+)
+from .tier import ServingTier
+from .traffic import TraceEvent, bursty_trace, merge_traces, poisson_trace
+
+__all__ = [
+    "ServingTier", "ModelRegistry", "ResidentModel", "Replica",
+    "Scheduler", "Batch", "validate_batch", "ProgramBucketCache",
+    "pow2_bucket", "pad_columns", "MonotonicClock", "VirtualClock",
+    "PredictRequest", "PendingResponse", "Response",
+    "STATUS_OK", "STATUS_REJECTED", "STATUS_EXPIRED", "STATUS_ERROR",
+    "REASON_MALFORMED", "REASON_UNKNOWN_MODEL", "REASON_OVERSIZE",
+    "REASON_QUEUE_FULL", "REASON_DEADLINE", "REASON_SHUTDOWN",
+    "TraceEvent", "poisson_trace", "bursty_trace", "merge_traces",
+]

@@ -1,0 +1,54 @@
+"""Clock abstraction for the serving tier.
+
+Every time-dependent decision in the scheduler — admission deadlines,
+expiry sweeps, latency accounting — reads time through a :class:`Clock`
+so the whole tier can run against a :class:`VirtualClock` in tests:
+deterministic simulations advance time explicitly instead of sleeping,
+which is what makes the admission/deadline/batch-forming suite
+(tests/test_serve.py) reproducible on any CI machine regardless of load.
+Production uses :class:`MonotonicClock` (``time.monotonic`` — immune to
+wall-clock steps).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class MonotonicClock:
+    """Real time: ``time.monotonic`` now, real ``sleep``."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class VirtualClock:
+    """Deterministic simulated time: ``now`` only moves via ``advance``.
+
+    ``sleep`` advances the clock by the requested amount, so code written
+    against the Clock protocol runs unchanged (just instantly) in
+    simulation.  Thread-safe: the scheduler and a test driver may read
+    ``now`` concurrently.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock backwards (dt={dt})")
+        with self._lock:
+            self._now += dt
+            return self._now
+
+    def sleep(self, dt: float) -> None:
+        self.advance(max(0.0, dt))

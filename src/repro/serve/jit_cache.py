@@ -1,0 +1,114 @@
+"""Bounded pow2-bucketed jit cache for descriptor programs.
+
+The serving layer pads every batch up to a power-of-two sample count so
+``jax.jit`` reuses one executable per bucket instead of recompiling per
+distinct batch size (api/serving.py established the discipline).  What
+it never had was a *bound*: ``jax.jit``'s per-shape cache inside the
+backend's shared evaluator grows monotonically, so a long-lived server
+fed adversarial batch sizes (or many resident models) accumulates
+executables forever.
+
+:class:`ProgramBucketCache` fixes that by owning the executables itself:
+one **fresh** ``program_evaluator_jnp`` closure per ``(program, bucket)``
+key — each closure's internal jit cache holds exactly the one shape it
+is ever called with — held in an LRU map capped at ``max_buckets``.
+Evicting an entry drops the only reference to that executable, so the
+bound is real, and evictions are counted and surfaced through
+``stats()`` (the serving tier's per-replica snapshots).
+
+Bit-exactness: padding replicates the final sample column (operators
+with domain constraints — ``1/x``, ``log`` — never see manufactured
+singularities) and elementwise tape evaluation is column-independent,
+so the unpadded lanes are bitwise identical to an unpadded evaluation.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+from ..core.descriptor import (
+    DescriptorProgram, eval_program_host, program_evaluator_jnp,
+)
+
+#: default cap on resident (program, bucket) executables per cache
+DEFAULT_MAX_BUCKETS = 16
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (the jit-cache shape bucket)."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def pad_columns(xp: np.ndarray, width: int) -> np.ndarray:
+    """Pad (P, S) primary rows to (P, width) by replicating the last column."""
+    s = xp.shape[1]
+    if width <= s:
+        return xp
+    return np.concatenate([xp, np.repeat(xp[:, -1:], width - s, axis=1)], axis=1)
+
+
+class ProgramBucketCache:
+    """LRU-bounded map of (program, bucket) -> compiled evaluator."""
+
+    def __init__(self, max_buckets: int = DEFAULT_MAX_BUCKETS):
+        if max_buckets < 1:
+            raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+        self.max_buckets = int(max_buckets)
+        self._lock = threading.Lock()
+        self._lru: OrderedDict = OrderedDict()
+        self._hits = 0
+        self._compiles = 0
+        self._evictions = 0
+
+    def _evaluator(self, program: DescriptorProgram, bucket: int):
+        key = (program, bucket)
+        with self._lock:
+            fn = self._lru.get(key)
+            if fn is not None:
+                self._lru.move_to_end(key)
+                self._hits += 1
+                return fn
+            # fresh closure per bucket: its jax.jit cache will only ever
+            # hold this one shape, so LRU eviction below really frees the
+            # executable rather than orphaning it in a shared cache
+            fn = program_evaluator_jnp(program)
+            self._lru[key] = fn
+            self._compiles += 1
+            while len(self._lru) > self.max_buckets:
+                self._lru.popitem(last=False)
+                self._evictions += 1
+            return fn
+
+    def evaluate(
+        self, program: DescriptorProgram, xp: np.ndarray,
+        bucket_batches: bool = True, host: bool = False,
+    ) -> np.ndarray:
+        """Descriptor values (n_outputs, S) for primary rows ``xp (P, S)``.
+
+        ``host=True`` replays the tape eagerly (the reference-backend
+        path — nothing is compiled, so nothing is cached).
+        """
+        if host:
+            return eval_program_host(program, xp)
+        s = xp.shape[1]
+        width = pow2_bucket(s) if bucket_batches else s
+        import jax.numpy as jnp
+
+        fn = self._evaluator(program, width)
+        d = np.asarray(
+            fn(jnp.asarray(pad_columns(xp, width), jnp.float64)), np.float64
+        )
+        return d[:, :s]
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "max_buckets": self.max_buckets,
+                "resident": len(self._lru),
+                "buckets": sorted({b for _, b in self._lru}),
+                "hits": self._hits,
+                "compiles": self._compiles,
+                "evictions": self._evictions,
+            }

@@ -1,0 +1,109 @@
+"""Model registry: many resident fitted artifacts, atomic hot-swap.
+
+The registry maps a routing key (``model_id``) to an immutable
+:class:`ResidentModel` snapshot — the :class:`FittedSisso` artifact plus
+the specific :class:`DescriptorModel` (dimension) it serves.  Swapping in
+a re-fit is a single reference replacement under a lock, so readers see
+either the old or the new snapshot, never a torn mix.
+
+The hot-swap contract the tier builds on:
+
+* ``resolve`` returns the snapshot current *at batch-forming time*; a
+  formed batch pins its snapshot, so in-flight batches finish on the old
+  program while newly formed batches pick up the new version.
+* Versions are monotonic per model id (first ``register`` is version 1).
+* No request ever fails because of a swap: a request queued across the
+  swap boundary simply executes against whichever version its batch
+  pinned, and the response records that version.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import TYPE_CHECKING, Dict, List, Optional
+
+if TYPE_CHECKING:  # annotation-only: keeps serve importable without api
+    from ..api.artifact import DescriptorModel, FittedSisso
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidentModel:
+    """One immutable registry snapshot: (model_id, version) -> program."""
+
+    model_id: str
+    version: int
+    fitted: "FittedSisso"
+    mdl: "DescriptorModel"
+
+    @property
+    def dim(self) -> int:
+        return self.mdl.dim
+
+    @property
+    def n_features_in(self) -> int:
+        return self.fitted.n_features_in
+
+
+class ModelRegistry:
+    """Thread-safe map of model_id -> ResidentModel with hot-swap."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._models: Dict[str, ResidentModel] = {}
+        self._versions: Dict[str, int] = {}
+        self._swaps: Dict[str, int] = {}
+
+    def register(
+        self, model_id: str, fitted: "FittedSisso", dim: Optional[int] = None
+    ) -> ResidentModel:
+        """Install (or hot-swap) ``model_id``; returns the new snapshot.
+
+        ``dim`` selects which fitted dimension serves (default: highest
+        non-empty, the artifact's own rule).  Re-registering an existing
+        id is the hot-swap: the version increments and the old snapshot
+        stays alive exactly as long as in-flight batches reference it.
+        """
+        mdl = fitted.model(dim)  # validates outside the lock (may raise)
+        with self._lock:
+            version = self._versions.get(model_id, 0) + 1
+            self._versions[model_id] = version
+            if model_id in self._models:
+                self._swaps[model_id] = self._swaps.get(model_id, 0) + 1
+            resident = ResidentModel(
+                model_id=model_id, version=version, fitted=fitted, mdl=mdl
+            )
+            self._models[model_id] = resident
+            return resident
+
+    def resolve(self, model_id: str) -> Optional[ResidentModel]:
+        """Current snapshot for ``model_id`` (None when unknown)."""
+        with self._lock:
+            return self._models.get(model_id)
+
+    def unregister(self, model_id: str) -> bool:
+        with self._lock:
+            return self._models.pop(model_id, None) is not None
+
+    def ids(self) -> List[str]:
+        with self._lock:
+            return sorted(self._models)
+
+    def __contains__(self, model_id: str) -> bool:
+        return self.resolve(model_id) is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._models)
+
+    def stats(self) -> dict:
+        """Per-model registry state: resident version, dim, swap count."""
+        with self._lock:
+            return {
+                mid: {
+                    "version": r.version,
+                    "dim": r.dim,
+                    "swaps": self._swaps.get(mid, 0),
+                    "problem": r.mdl.problem,
+                }
+                for mid, r in self._models.items()
+            }

@@ -1,0 +1,210 @@
+"""Replica workers: each owns a bounded inbox and a bounded jit cache.
+
+A :class:`Replica` is one unit of serving parallelism — on CPU CI a
+worker thread, on real hardware the thread that owns one device's
+executables.  Each replica holds its **own**
+:class:`~repro.serve.jit_cache.ProgramBucketCache` (per-replica compile
+state, the sarathi ``ReplicaResourceMapping`` idea: replicas serve
+independently and a swap/compile on one never stalls the others) and a
+bounded inbox of formed batches.
+
+``execute`` is the synchronous core — callable directly from the
+virtual-clock tests without any thread — and the thread runtime is a
+thin loop around it.  Every request in a batch is answered exactly once:
+success with predictions and the pinned model version, or
+``status="error"`` carrying the exception detail; a replica never drops
+a batch on the floor.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from ..precision import set_precision
+from .clock import MonotonicClock
+from .jit_cache import DEFAULT_MAX_BUCKETS, ProgramBucketCache
+from .request import STATUS_ERROR, STATUS_OK, Response
+from .scheduler import Batch
+
+#: latency/occupancy samples kept for percentile snapshots
+STATS_WINDOW = 4096
+
+
+class Replica:
+    """One serving worker: bounded inbox -> execute -> respond."""
+
+    def __init__(
+        self,
+        index: int,
+        row_budget: int,
+        backend: Optional[str] = None,
+        max_buckets: int = DEFAULT_MAX_BUCKETS,
+        inbox_limit: int = 4,
+        clock=None,
+        observer=None,
+    ):
+        self.index = int(index)
+        self.row_budget = int(row_budget)
+        self.backend = backend          # None: honor each artifact's config
+        self.clock = clock or MonotonicClock()
+        # called as observer(request, response) after each completion —
+        # the tier's per-model accounting hook
+        self.observer = observer
+        self.cache = ProgramBucketCache(max_buckets)
+        self.inbox: "queue.Queue[Batch]" = queue.Queue(maxsize=inbox_limit)
+        self._lock = threading.Lock()
+        self._pending_rows = 0
+        self._batches = 0
+        self._rows = 0
+        self._errors = 0
+        self._max_batch_rows = 0
+        self._latencies = deque(maxlen=STATS_WINDOW)   # submit -> respond, s
+        self._occupancy = deque(maxlen=STATS_WINDOW)   # batch rows / budget
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    # routing surface
+    # ------------------------------------------------------------------
+    def pending_rows(self) -> int:
+        """Rows enqueued but not yet responded (the least-loaded metric)."""
+        with self._lock:
+            return self._pending_rows
+
+    def enqueue(self, batch: Batch, timeout: Optional[float] = None) -> bool:
+        """Hand a formed batch to this replica; False when the inbox is
+        full within ``timeout`` (the dispatcher then re-routes)."""
+        try:
+            self.inbox.put(batch, timeout=timeout)
+        except queue.Full:
+            return False
+        with self._lock:
+            self._pending_rows += batch.rows
+        return True
+
+    # ------------------------------------------------------------------
+    # execution (synchronous core)
+    # ------------------------------------------------------------------
+    def execute(self, batch: Batch) -> None:
+        """Run one batch and complete every request's future."""
+        resident, requests = batch.resident, batch.requests
+        fitted, mdl = resident.fitted, resident.mdl
+        rows = batch.rows
+        try:
+            # the artifact's precision policy (the global x64 switch) must
+            # be applied before any program executes, same as
+            # FittedSisso.predict does for the single-artifact path
+            set_precision(fitted.config.precision)
+            X = np.concatenate([r.x for r in requests], axis=0)
+            # multi-task models: admission validated that every request
+            # carries per-row labels; single-task models ignore tasks
+            tasks = None
+            if fitted.n_tasks > 1:
+                tasks = np.concatenate([r.tasks for r in requests])
+            xp = fitted.primary_rows(X)
+            backend = self.backend or fitted.config.backend
+            d = self.cache.evaluate(
+                mdl.program, xp, host=(backend == "reference")
+            )
+            codes = fitted.task_codes(tasks, X.shape[0])
+            y = fitted.readout(mdl, d, codes)
+            now = self.clock.now()
+            off = 0
+            for r in requests:
+                self._respond(r, Response(
+                    request_id=r.request_id, status=STATUS_OK,
+                    y=y[off:off + r.rows], model_id=resident.model_id,
+                    model_version=resident.version, replica=self.index,
+                    latency=now - r.submitted,
+                ))
+                off += r.rows
+        except Exception as exc:  # answer, never drop: the caller is waiting
+            now = self.clock.now()
+            with self._lock:
+                self._errors += 1
+            for r in requests:
+                self._respond(r, Response(
+                    request_id=r.request_id, status=STATUS_ERROR,
+                    model_id=resident.model_id,
+                    model_version=resident.version, replica=self.index,
+                    latency=now - r.submitted,
+                    reason=f"{type(exc).__name__}: {exc}",
+                ))
+        finally:
+            with self._lock:
+                self._pending_rows -= rows
+                self._batches += 1
+                self._rows += rows
+                self._max_batch_rows = max(self._max_batch_rows, rows)
+                self._occupancy.append(rows / self.row_budget)
+                now = self.clock.now()
+                for r in requests:
+                    self._latencies.append(now - r.submitted)
+
+    def _respond(self, request, response: Response) -> None:
+        request.pending._complete(response)
+        if self.observer is not None:
+            self.observer(request, response)
+
+    # ------------------------------------------------------------------
+    # thread runtime
+    # ------------------------------------------------------------------
+    def start(self) -> "Replica":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name=f"replica-{self.index}", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                batch = self.inbox.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            self.execute(batch)
+
+    def stop(self, drain: bool = True, timeout: float = 5.0) -> None:
+        """Stop the worker; with ``drain`` outstanding batches finish first."""
+        if self._thread is None:
+            return
+        if drain:
+            deadline = self.clock.now() + timeout
+            while self.pending_rows() > 0 and self.clock.now() < deadline:
+                self.clock.sleep(0.01)
+        self._stop.set()
+        self._thread.join(timeout)
+        self._thread = None
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            occ = np.asarray(self._occupancy, np.float64)
+            return {
+                "replica": self.index,
+                "backend": self.backend or "per-artifact",
+                "queue_depth": self.inbox.qsize(),
+                "pending_rows": self._pending_rows,
+                "batches": self._batches,
+                "rows": self._rows,
+                "errors": self._errors,
+                "max_batch_rows": self._max_batch_rows,
+                "batch_occupancy_mean": (
+                    float(occ.mean()) if occ.size else 0.0
+                ),
+                "latency_p50_ms": (
+                    float(np.quantile(lat, 0.50) * 1e3) if lat.size else None
+                ),
+                "latency_p99_ms": (
+                    float(np.quantile(lat, 0.99) * 1e3) if lat.size else None
+                ),
+                "jit_cache": self.cache.stats(),
+            }

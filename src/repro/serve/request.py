@@ -1,0 +1,87 @@
+"""Request/response types for the serving tier.
+
+A :class:`PredictRequest` is one admitted predict call: validated rows,
+a routing key (``model_id``), and an absolute deadline on the tier
+clock.  Its :class:`PendingResponse` is the caller-facing future; the
+replica that executes the batch completes it with a :class:`Response`.
+
+Responses are *always* delivered — admission rejections, queue expiry
+and execution errors complete the future with a non-``ok`` status
+instead of dropping it, which is what lets the load harness assert
+"zero failed requests across a hot-swap" by accounting statuses rather
+than hunting for hangs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+#: terminal statuses a Response can carry
+STATUS_OK = "ok"              # predictions delivered
+STATUS_REJECTED = "rejected"  # refused at admission (reason says why)
+STATUS_EXPIRED = "expired"    # deadline passed while queued
+STATUS_ERROR = "error"        # execution raised (the "failed" bucket)
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """Terminal outcome of one request."""
+
+    request_id: int
+    status: str
+    y: Optional[np.ndarray] = None     # (rows,) predictions when ok
+    model_id: str = ""
+    model_version: int = -1            # registry version that served it
+    replica: int = -1                  # replica index that served it
+    latency: float = float("nan")      # submit -> respond, tier-clock s
+    reason: str = ""                   # rejection/error detail
+
+    @property
+    def ok(self) -> bool:
+        return self.status == STATUS_OK
+
+
+class PendingResponse:
+    """Caller-side future for one submitted request (thread-safe)."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._response: Optional[Response] = None
+
+    def _complete(self, response: Response) -> None:
+        # first completion wins: a request is resolved exactly once
+        if self._event.is_set():
+            return
+        self._response = response
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Response:
+        """Block until the response arrives (or raise TimeoutError)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("response not ready within timeout")
+        assert self._response is not None
+        return self._response
+
+
+@dataclasses.dataclass
+class PredictRequest:
+    """One admitted predict call flowing through the tier."""
+
+    request_id: int
+    model_id: str
+    x: np.ndarray                      # (rows, n_features) validated fp64
+    tasks: Optional[np.ndarray]        # per-row task labels or None
+    deadline: float                    # absolute, tier-clock seconds
+    submitted: float                   # admission time, tier-clock seconds
+    pending: PendingResponse = dataclasses.field(default_factory=PendingResponse)
+    meta: Any = None                   # caller payload, echoed untouched
+
+    @property
+    def rows(self) -> int:
+        return int(self.x.shape[0])

@@ -1,0 +1,277 @@
+"""Admission control and deadline-aware batch forming under a row budget.
+
+The scheduler is the sarathi-serve-shaped half of the tier: requests are
+admitted into one bounded queue (or rejected immediately — never
+silently dropped), and batches are formed earliest-deadline-first under
+an explicit **row budget**, the serving analogue of a token budget: no
+formed batch ever carries more sample rows than ``row_budget``, so the
+downstream jit executable per pow2 bucket stays bounded and a burst of
+large requests cannot starve the replicas.
+
+Pure logic, clock-injected: nothing here sleeps or spawns threads, so
+the deterministic simulation suite (tests/test_serve.py) drives it on a
+:class:`~repro.serve.clock.VirtualClock` — admission overload, budget
+packing and deadline ordering are asserted exactly, not statistically.
+The threaded runtime around it lives in tier.py.
+
+Admission can refuse for five reasons (every refusal completes the
+caller's future with ``status="rejected"`` and the reason):
+
+* ``malformed`` — validation failed (shape/dtype/non-finite rows)
+* ``unknown-model`` — no resident model under that id
+* ``oversize`` — request rows exceed the row budget (can never fit)
+* ``queue-full`` — admitting would exceed the queued-row bound
+* ``deadline-passed`` — the deadline already elapsed at submit time
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .clock import MonotonicClock
+from .request import PredictRequest
+
+REASON_MALFORMED = "malformed"
+REASON_UNKNOWN_MODEL = "unknown-model"
+REASON_OVERSIZE = "oversize"
+REASON_QUEUE_FULL = "queue-full"
+REASON_DEADLINE = "deadline-passed"
+REASON_SHUTDOWN = "shutdown"
+
+#: default queued-row bound as a multiple of the row budget
+DEFAULT_QUEUE_FACTOR = 8
+
+
+def validate_batch(X, tasks, n_features: int, n_tasks: int = 1):
+    """Validate one request batch; returns ``(X fp64 (rows, P), tasks)``.
+
+    Raises :class:`ValueError` with the rejection detail — the single
+    validation used by both the tier's admission path and the legacy
+    :class:`~repro.api.serving.SissoServer` shim, so malformed batches
+    (non-numeric dtype, wrong feature width, NaN/inf rows that would
+    flow through every descriptor op and return plausible numbers) are
+    refused identically everywhere.
+    """
+    try:
+        X = np.asarray(X, np.float64)
+    except (TypeError, ValueError) as exc:
+        raise ValueError(f"non-numeric input ({exc})") from None
+    if X.ndim == 1:
+        X = X[None, :]
+    if X.ndim != 2 or X.shape[1] != n_features:
+        raise ValueError(
+            f"expected shape (batch, {n_features}) matching the "
+            f"artifact's {n_features} primary features, got {X.shape}"
+        )
+    bad = ~np.isfinite(X).all(axis=1)
+    if bad.any():
+        rows = np.flatnonzero(bad)
+        raise ValueError(
+            f"{len(rows)} non-finite row(s) at indices "
+            f"{rows[:8].tolist()}{'...' if len(rows) > 8 else ''}"
+        )
+    if n_tasks > 1:
+        if tasks is None:
+            raise ValueError(
+                f"model was fit with {n_tasks} tasks; "
+                "pass tasks=(batch,) labels"
+            )
+        tasks = np.asarray(tasks)
+        if tasks.shape[0] != X.shape[0]:
+            raise ValueError(
+                f"tasks must have one label per row "
+                f"({tasks.shape[0]} labels for {X.shape[0]} rows)"
+            )
+    elif tasks is not None:
+        tasks = np.asarray(tasks)
+        if tasks.shape[0] != X.shape[0]:
+            raise ValueError("tasks must have one label per row")
+    return X, tasks
+
+
+@dataclasses.dataclass
+class Batch:
+    """One formed unit of replica work: same model, rows <= budget.
+
+    ``resident`` is the registry snapshot pinned at *forming* time —
+    the hot-swap contract: batches formed before a swap execute the old
+    program, batches formed after it the new one, and queued requests
+    are never invalidated by the swap.
+    """
+
+    resident: object                   # registry.ResidentModel
+    requests: List[PredictRequest]
+    formed_at: float
+
+    @property
+    def rows(self) -> int:
+        return sum(r.rows for r in self.requests)
+
+    @property
+    def model_id(self) -> str:
+        return self.resident.model_id
+
+
+class Scheduler:
+    """Bounded admission queue + EDF batch former (clock-injected)."""
+
+    def __init__(
+        self,
+        row_budget: int,
+        max_queued_rows: Optional[int] = None,
+        clock=None,
+        default_slo: float = 1.0,
+    ):
+        if row_budget < 1:
+            raise ValueError(f"row_budget must be >= 1, got {row_budget}")
+        self.row_budget = int(row_budget)
+        self.max_queued_rows = int(
+            max_queued_rows if max_queued_rows is not None
+            else DEFAULT_QUEUE_FACTOR * row_budget
+        )
+        self.clock = clock or MonotonicClock()
+        self.default_slo = float(default_slo)
+        self._lock = threading.Lock()
+        # every request carries >= 1 row, so max_queued_rows requests is a
+        # true upper bound on queue length — the deque bound is never the
+        # limiting admission control (rows are), it just makes the bound
+        # structural (reprolint RL010)
+        self._queue = deque(maxlen=self.max_queued_rows)
+        self._queued_rows = 0
+        self._admitted = 0
+        self._formed = 0
+        self._expired = 0
+        self._rejected = {
+            REASON_MALFORMED: 0, REASON_UNKNOWN_MODEL: 0,
+            REASON_OVERSIZE: 0, REASON_QUEUE_FULL: 0,
+            REASON_DEADLINE: 0, REASON_SHUTDOWN: 0,
+        }
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def count_rejection(self, reason: str) -> None:
+        """Account a rejection decided outside the queue lock (the tier
+        rejects unknown-model/malformed before constructing a request)."""
+        with self._lock:
+            self._rejected[reason] = self._rejected.get(reason, 0) + 1
+
+    def submit(self, request: PredictRequest) -> Optional[str]:
+        """Admit ``request`` (returns None) or refuse (returns reason)."""
+        now = self.clock.now()
+        with self._lock:
+            if request.deadline <= now:
+                self._rejected[REASON_DEADLINE] += 1
+                return REASON_DEADLINE
+            if request.rows > self.row_budget:
+                self._rejected[REASON_OVERSIZE] += 1
+                return REASON_OVERSIZE
+            if self._queued_rows + request.rows > self.max_queued_rows:
+                self._rejected[REASON_QUEUE_FULL] += 1
+                return REASON_QUEUE_FULL
+            self._queue.append(request)
+            self._queued_rows += request.rows
+            self._admitted += 1
+            return None
+
+    # ------------------------------------------------------------------
+    # batch forming
+    # ------------------------------------------------------------------
+    def form_batch(
+        self,
+        resolve: Callable[[str], Optional[object]],
+        now: Optional[float] = None,
+    ) -> Tuple[Optional[Batch], List[PredictRequest], List[PredictRequest]]:
+        """Form the next batch earliest-deadline-first under the budget.
+
+        Returns ``(batch, expired, unroutable)``: requests whose deadline
+        passed while queued, and requests whose model id no longer
+        resolves (unregistered after admission), are removed from the
+        queue and handed back for the caller to respond to — the queue
+        never silently drops work.
+
+        Forming: order live requests by ``(deadline, request_id)``, take
+        the head's model id, then fill with same-model requests in that
+        order while the row budget holds.  One model per batch — a batch
+        executes one descriptor program.
+        """
+        if now is None:
+            now = self.clock.now()
+        with self._lock:
+            expired = [r for r in self._queue if r.deadline < now]
+            live = [r for r in self._queue if r.deadline >= now]
+            unroutable: List[PredictRequest] = []
+            batch = None
+            if live:
+                live.sort(key=lambda r: (r.deadline, r.request_id))
+                # the head's model may have been unregistered since
+                # admission; skip past unroutable heads so one dead id
+                # cannot wedge the queue
+                residents = {}
+                for r in live:
+                    if r.model_id not in residents:
+                        residents[r.model_id] = resolve(r.model_id)
+                unroutable = [r for r in live if residents[r.model_id] is None]
+                live = [r for r in live if residents[r.model_id] is not None]
+            if live:
+                head = live[0]
+                resident = residents[head.model_id]
+                taken, rows = [], 0
+                for r in live:
+                    if r.model_id != head.model_id:
+                        continue
+                    if rows + r.rows > self.row_budget:
+                        continue
+                    taken.append(r)
+                    rows += r.rows
+                batch = Batch(resident=resident, requests=taken, formed_at=now)
+                self._formed += 1
+            removed = set(
+                id(r) for r in expired + unroutable
+                + (batch.requests if batch else [])
+            )
+            if removed:
+                kept = [r for r in self._queue if id(r) not in removed]
+                self._queue.clear()
+                self._queue.extend(kept)
+                self._queued_rows = sum(r.rows for r in kept)
+            self._expired += len(expired)
+            return batch, expired, unroutable
+
+    def drain(self) -> List[PredictRequest]:
+        """Remove and return every queued request (shutdown path)."""
+        with self._lock:
+            out = list(self._queue)
+            self._queue.clear()
+            self._queued_rows = 0
+            return out
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    @property
+    def queued_rows(self) -> int:
+        with self._lock:
+            return self._queued_rows
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "row_budget": self.row_budget,
+                "max_queued_rows": self.max_queued_rows,
+                "queue_depth": len(self._queue),
+                "queued_rows": self._queued_rows,
+                "admitted": self._admitted,
+                "formed_batches": self._formed,
+                "expired": self._expired,
+                "rejected": dict(self._rejected),
+            }

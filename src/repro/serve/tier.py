@@ -1,0 +1,337 @@
+"""ServingTier: the async front end tying scheduler, registry, replicas.
+
+Request lifecycle (the contract ARCHITECTURE.md documents)::
+
+    submit ──admit──▶ queue ──EDF form (≤ row budget)──▶ replica ──▶ respond
+        │                │                                   │
+        ├─ rejected      ├─ expired (deadline passed)        ├─ ok (+version)
+        │  (reason)      └─ unroutable (model unregistered)  └─ error (detail)
+
+``submit`` validates and admits synchronously and returns a
+:class:`~repro.serve.request.PendingResponse` immediately; a dispatcher
+thread forms deadline-ordered batches under the row budget and routes
+them to replica inboxes (``least-loaded`` by pending rows, round-robin
+tiebreak, or pure ``round-robin``).  Hot-swap: ``register`` on a live id
+atomically replaces the registry snapshot — batches formed before the
+swap finish on the old program, every response names the version that
+served it, and no request is ever failed or dropped by a swap.
+
+``stats()`` returns one nested snapshot: tier counters, scheduler queue
+state, per-replica latency percentiles / occupancy / jit-cache state,
+per-model request accounting, and registry versions.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .clock import MonotonicClock
+from .jit_cache import DEFAULT_MAX_BUCKETS
+from .registry import ModelRegistry, ResidentModel
+from .replica import Replica
+from .request import (
+    STATUS_ERROR, STATUS_EXPIRED, STATUS_OK, STATUS_REJECTED,
+    PendingResponse, PredictRequest, Response,
+)
+from .scheduler import (
+    REASON_MALFORMED, REASON_SHUTDOWN, REASON_UNKNOWN_MODEL,
+    Scheduler, validate_batch,
+)
+
+ROUTING_POLICIES = ("least-loaded", "round-robin")
+
+
+class ServingTier:
+    """Multi-model, multi-replica serving front end."""
+
+    def __init__(
+        self,
+        registry: Optional[ModelRegistry] = None,
+        *,
+        n_replicas: int = 2,
+        row_budget: int = 128,
+        max_queued_rows: Optional[int] = None,
+        backend: Optional[str] = None,
+        policy: str = "least-loaded",
+        max_buckets: int = DEFAULT_MAX_BUCKETS,
+        inbox_limit: int = 4,
+        default_slo: float = 1.0,
+        clock=None,
+        start: bool = True,
+    ):
+        if policy not in ROUTING_POLICIES:
+            raise ValueError(
+                f"policy must be one of {ROUTING_POLICIES}, got {policy!r}"
+            )
+        self.registry = registry if registry is not None else ModelRegistry()
+        self.clock = clock or MonotonicClock()
+        self.policy = policy
+        self.scheduler = Scheduler(
+            row_budget=row_budget, max_queued_rows=max_queued_rows,
+            clock=self.clock, default_slo=default_slo,
+        )
+        self.replicas: List[Replica] = [
+            Replica(i, row_budget=row_budget, backend=backend,
+                    max_buckets=max_buckets, inbox_limit=inbox_limit,
+                    clock=self.clock, observer=self._on_response)
+            for i in range(int(n_replicas))
+        ]
+        self.default_slo = float(default_slo)
+        self._seq = itertools.count(1)
+        self._rr = itertools.count()
+        self._lock = threading.Lock()
+        self._model_stats: Dict[str, dict] = {}
+        self._wake = threading.Condition()
+        self._stop = threading.Event()
+        self._dispatcher: Optional[threading.Thread] = None
+        self._closed = False
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------------
+    # registry surface (hot-swap)
+    # ------------------------------------------------------------------
+    def register(self, model_id: str, fitted, dim=None) -> ResidentModel:
+        """Install or atomically hot-swap ``model_id``."""
+        return self.registry.register(model_id, fitted, dim=dim)
+
+    def unregister(self, model_id: str) -> bool:
+        return self.registry.unregister(model_id)
+
+    # ------------------------------------------------------------------
+    # request surface
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        model_id: str,
+        X,
+        tasks=None,
+        *,
+        deadline: Optional[float] = None,
+        slo: Optional[float] = None,
+        meta=None,
+    ) -> PendingResponse:
+        """Admit one predict request; always returns a future.
+
+        Rejections (unknown model, malformed batch, overload, oversize,
+        past deadline) complete the future immediately with
+        ``status="rejected"`` and the reason — nothing raises, nothing
+        hangs, which is what lets callers drive open-loop load.
+        """
+        now = self.clock.now()
+        pending = PendingResponse()
+        resident = self.registry.resolve(model_id)
+        if resident is None:
+            self.scheduler.count_rejection(REASON_UNKNOWN_MODEL)
+            self._finish_early(
+                pending, model_id, REASON_UNKNOWN_MODEL,
+                f"no resident model under id {model_id!r}; "
+                f"resident: {self.registry.ids()}",
+            )
+            return pending
+        try:
+            Xv, tasksv = validate_batch(
+                X, tasks, resident.n_features_in, resident.fitted.n_tasks
+            )
+        except ValueError as exc:
+            self.scheduler.count_rejection(REASON_MALFORMED)
+            self._finish_early(pending, model_id, REASON_MALFORMED, str(exc))
+            return pending
+        request = PredictRequest(
+            request_id=next(self._seq), model_id=model_id, x=Xv,
+            tasks=tasksv, submitted=now,
+            deadline=(deadline if deadline is not None
+                      else now + (slo if slo is not None else self.default_slo)),
+            pending=pending, meta=meta,
+        )
+        self._count(model_id, "requests", 1)
+        self._count(model_id, "rows", request.rows)
+        reason = self.scheduler.submit(request)
+        if reason is not None:
+            self._finish_early(pending, model_id, reason,
+                               f"admission refused: {reason}")
+            return pending
+        with self._wake:
+            self._wake.notify()
+        return pending
+
+    def predict(
+        self, model_id: str, X, tasks=None, *,
+        timeout: float = 30.0, **kwargs,
+    ) -> np.ndarray:
+        """Synchronous convenience: submit, wait, return predictions.
+
+        Non-``ok`` outcomes raise :class:`RuntimeError` with the status
+        and reason.
+        """
+        resp = self.submit(model_id, X, tasks, **kwargs).result(timeout)
+        if not resp.ok:
+            raise RuntimeError(
+                f"predict on {model_id!r} {resp.status}: {resp.reason}"
+            )
+        return resp.y
+
+    # ------------------------------------------------------------------
+    # response accounting
+    # ------------------------------------------------------------------
+    def _count(self, model_id: str, key: str, n: int = 1) -> None:
+        with self._lock:
+            m = self._model_stats.setdefault(model_id, {
+                "requests": 0, "rows": 0, "ok": 0, "rejected": 0,
+                "expired": 0, "errors": 0, "by_version": {},
+            })
+            m[key] = m.get(key, 0) + n
+
+    def _count_version(self, model_id: str, version: int) -> None:
+        with self._lock:
+            by = self._model_stats.setdefault(model_id, {
+                "requests": 0, "rows": 0, "ok": 0, "rejected": 0,
+                "expired": 0, "errors": 0, "by_version": {},
+            })["by_version"]
+            by[version] = by.get(version, 0) + 1
+
+    def _finish_early(
+        self, pending: PendingResponse, model_id: str, reason: str,
+        detail: str, status: str = STATUS_REJECTED, request_id: int = -1,
+    ) -> None:
+        self._count(model_id, "rejected" if status == STATUS_REJECTED
+                    else "expired", 1)
+        pending._complete(Response(
+            request_id=request_id, status=status, model_id=model_id,
+            reason=detail or reason,
+        ))
+
+    def _respond_expired(self, request: PredictRequest) -> None:
+        self._finish_early(
+            request.pending, request.model_id, "deadline",
+            "deadline passed while queued", status=STATUS_EXPIRED,
+            request_id=request.request_id,
+        )
+
+    def _on_response(
+        self, request: PredictRequest, response: Response
+    ) -> None:
+        """Replica completion hook: fold into per-model counters."""
+        if response.status == STATUS_OK:
+            self._count(request.model_id, "ok", 1)
+            self._count_version(request.model_id, response.model_version)
+        elif response.status == STATUS_ERROR:
+            self._count(request.model_id, "errors", 1)
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+    def _route(self) -> Replica:
+        if self.policy == "round-robin":
+            return self.replicas[next(self._rr) % len(self.replicas)]
+        # least-loaded by pending rows; round-robin offset breaks ties so
+        # an idle tier still alternates replicas (warming every cache)
+        off = next(self._rr)
+        n = len(self.replicas)
+        return min(
+            (self.replicas[(off + i) % n] for i in range(n)),
+            key=lambda r: r.pending_rows(),
+        )
+
+    def _dispatch_once(self, timeout: float = 0.02) -> bool:
+        """Form and route one batch; returns whether anything progressed."""
+        batch, expired, unroutable = self.scheduler.form_batch(
+            self.registry.resolve, now=self.clock.now()
+        )
+        for r in expired:
+            self._respond_expired(r)
+        for r in unroutable:
+            self._finish_early(
+                r.pending, r.model_id, REASON_UNKNOWN_MODEL,
+                "model unregistered while queued", request_id=r.request_id,
+            )
+        if batch is None:
+            return bool(expired or unroutable)
+        replica = self._route()
+        while not replica.enqueue(batch, timeout=timeout):
+            if self._stop.is_set():
+                for r in batch.requests:
+                    self.scheduler.count_rejection(REASON_SHUTDOWN)
+                    self._finish_early(
+                        r.pending, r.model_id, REASON_SHUTDOWN,
+                        "tier shut down before execution",
+                        request_id=r.request_id,
+                    )
+                return True
+            replica = self._route()
+        return True
+
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            progressed = self._dispatch_once()
+            if not progressed:
+                with self._wake:
+                    self._wake.wait(timeout=0.02)
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> "ServingTier":
+        if self._dispatcher is None:
+            self._stop.clear()
+            for rep in self.replicas:
+                rep.start()
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, name="serve-dispatch", daemon=True
+            )
+            self._dispatcher.start()
+        return self
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Graceful shutdown: drain queues, answer stragglers, stop threads."""
+        if self._closed:
+            return
+        self._closed = True
+        # stop admission-to-replica flow first, then answer whatever is
+        # still queued (shutdown-rejected, never dropped)
+        self._stop.set()
+        with self._wake:
+            self._wake.notify_all()
+        if self._dispatcher is not None:
+            self._dispatcher.join(timeout)
+            self._dispatcher = None
+        for r in self.scheduler.drain():
+            self.scheduler.count_rejection(REASON_SHUTDOWN)
+            self._finish_early(
+                r.pending, r.model_id, REASON_SHUTDOWN,
+                "tier shut down before execution", request_id=r.request_id,
+            )
+        for rep in self.replicas:
+            rep.stop(drain=True, timeout=timeout)
+
+    def __enter__(self) -> "ServingTier":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """One nested snapshot of the whole tier (the stats schema)."""
+        with self._lock:
+            models = {
+                mid: {**m, "by_version": dict(m["by_version"])}
+                for mid, m in self._model_stats.items()
+            }
+        return {
+            "tier": {
+                "n_replicas": len(self.replicas),
+                "policy": self.policy,
+                "row_budget": self.scheduler.row_budget,
+                "default_slo": self.default_slo,
+            },
+            "scheduler": self.scheduler.stats(),
+            "replicas": [rep.stats() for rep in self.replicas],
+            "models": models,
+            "registry": self.registry.stats(),
+        }

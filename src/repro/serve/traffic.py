@@ -1,0 +1,97 @@
+"""Synthetic request traces for the serving load harness.
+
+Two arrival processes, seeded and fully deterministic given an
+``np.random.Generator`` (the request-generator half of the sarathi-style
+load harness):
+
+* :func:`poisson_trace` — memoryless arrivals at a target mean rate
+  (exponential inter-arrival gaps), the steady-traffic baseline.
+* :func:`bursty_trace` — an on/off process: bursts of closely spaced
+  arrivals separated by idle gaps, the worst case for admission control
+  and batch forming (queues fill in the burst, drain in the gap).
+
+Request sizes are drawn from a clipped geometric so most requests are
+small with a heavy-ish tail, matching screening-campaign traffic where
+occasional bulk queries ride along with single-sample probes.  Events
+interleave across model ids uniformly, producing the mixed multi-model
+trace the tier's router has to handle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One scheduled request: arrival time, routing key, sample rows."""
+
+    t: float
+    model_id: str
+    rows: int
+
+
+def _rows(rng: np.random.Generator, mean_rows: float, max_rows: int) -> int:
+    r = int(rng.geometric(1.0 / max(mean_rows, 1.0)))
+    return int(np.clip(r, 1, max_rows))
+
+
+def poisson_trace(
+    rate: float,
+    horizon: float,
+    model_ids: Sequence[str],
+    rng: np.random.Generator,
+    mean_rows: float = 4.0,
+    max_rows: int = 32,
+) -> List[TraceEvent]:
+    """Poisson arrivals at ``rate`` req/s over ``horizon`` seconds."""
+    events: List[TraceEvent] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate))
+        if t >= horizon:
+            return events
+        events.append(TraceEvent(
+            t=t,
+            model_id=str(model_ids[int(rng.integers(len(model_ids)))]),
+            rows=_rows(rng, mean_rows, max_rows),
+        ))
+
+
+def bursty_trace(
+    burst_rate: float,
+    burst_len: float,
+    idle: float,
+    horizon: float,
+    model_ids: Sequence[str],
+    rng: np.random.Generator,
+    mean_rows: float = 4.0,
+    max_rows: int = 32,
+) -> List[TraceEvent]:
+    """On/off arrivals: ``burst_len`` s of Poisson(``burst_rate``), then
+    ``idle`` s of silence, repeated across ``horizon``."""
+    events: List[TraceEvent] = []
+    start = 0.0
+    while start < horizon:
+        end = min(start + burst_len, horizon)
+        t = start
+        while True:
+            t += float(rng.exponential(1.0 / burst_rate))
+            if t >= end:
+                break
+            events.append(TraceEvent(
+                t=t,
+                model_id=str(model_ids[int(rng.integers(len(model_ids)))]),
+                rows=_rows(rng, mean_rows, max_rows),
+            ))
+        start = end + idle
+    return events
+
+
+def merge_traces(*traces: List[TraceEvent]) -> List[TraceEvent]:
+    """Interleave traces into one arrival-ordered stream."""
+    merged = [e for trace in traces for e in trace]
+    merged.sort(key=lambda e: e.t)
+    return merged

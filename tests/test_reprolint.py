@@ -486,6 +486,72 @@ def test_rl009_silent_on_narrow_except_in_loop():
 
 
 # ---------------------------------------------------------------------------
+# RL010 — bounded serving buffers (scoped to src/repro/serve/)
+# ---------------------------------------------------------------------------
+
+def test_rl010_fires_on_unbounded_queue_in_serve():
+    findings = run(
+        """
+        import queue
+        class Replica:
+            def __init__(self):
+                self.inbox = queue.Queue()
+        """,
+        path="src/repro/serve/replica.py",
+    )
+    assert ids_of(findings) == ["RL010"]
+
+
+def test_rl010_fires_on_each_unbounded_spelling():
+    findings = run(
+        """
+        from queue import Queue, SimpleQueue
+        from collections import deque
+        from concurrent.futures import ThreadPoolExecutor
+        a = Queue(maxsize=0)
+        b = SimpleQueue()
+        c = deque()
+        d = deque(maxlen=None)
+        e = ThreadPoolExecutor()
+        """,
+        path="src/repro/serve/tier.py",
+    )
+    assert [f.rule_id for f in findings] == ["RL010"] * 5
+
+
+def test_rl010_silent_on_bounded_buffers():
+    # literal, positional and config-derived bounds are all accepted
+    findings = run(
+        """
+        import collections
+        import queue
+        from concurrent.futures import ThreadPoolExecutor
+        def build(limit):
+            a = queue.Queue(maxsize=8)
+            b = queue.Queue(16)
+            c = collections.deque(maxlen=limit)
+            d = collections.deque([], 32)
+            e = ThreadPoolExecutor(max_workers=4)
+            return a, b, c, d, e
+        """,
+        path="src/repro/serve/scheduler.py",
+    )
+    assert findings == []
+
+
+def test_rl010_scoped_to_serve_tree():
+    # the same unbounded queue outside src/repro/serve/ is out of scope
+    findings = run(
+        """
+        import queue
+        q = queue.Queue()
+        """,
+        path="src/repro/runtime/pool.py",
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # escape hatch + output formats + the real tree
 # ---------------------------------------------------------------------------
 
@@ -531,7 +597,7 @@ def test_github_format_annotation():
 
 
 def test_every_rule_has_id_name_and_rationale():
-    assert len(RULES) == 9
+    assert len(RULES) == 10
     for rule in RULES:
         assert rule.id.startswith("RL") and len(rule.id) == 5
         assert rule.doc and rule.id in rule.doc

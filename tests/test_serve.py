@@ -1,0 +1,424 @@
+"""Serving-tier suite: deterministic simulations plus threaded smoke.
+
+The scheduler half runs entirely on a :class:`VirtualClock` — admission
+overload, budget packing, EDF ordering and queue expiry are asserted
+exactly, with no sleeps and no threads (the scheduler is pure
+clock-injected logic).  The threaded half exercises the real tier:
+prediction parity with the estimator, routing policies, and the
+hot-swap contract — concurrent in-flight predicts across a re-register
+with **zero** failed requests.
+"""
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import SissoRegressor
+from repro.api.serving import SissoServer
+from repro.core.descriptor import eval_program_host
+from repro.serve import (
+    REASON_DEADLINE, REASON_OVERSIZE, REASON_QUEUE_FULL, REASON_SHUTDOWN,
+    REASON_UNKNOWN_MODEL, STATUS_EXPIRED, STATUS_OK, STATUS_REJECTED,
+    PredictRequest, ProgramBucketCache, Scheduler, ServingTier, VirtualClock,
+    bursty_trace, merge_traces, pad_columns, poisson_trace, pow2_bucket,
+)
+
+N_FEATURES = 4
+
+
+@pytest.fixture(scope="module")
+def fitted_pair():
+    """Two fast-fit models sharing one request surface (4 features)."""
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0.5, 3.0, size=(80, N_FEATURES))
+
+    def fit(y):
+        est = SissoRegressor(max_rung=1, n_dim=1, n_sis=8,
+                             op_names=("add", "mul", "sq"))
+        return est.fit(X, y)
+
+    return fit(2.0 * X[:, 0] * X[:, 1] + 1.0), fit(0.5 * X[:, 2] ** 2 - 3.0)
+
+
+class FakeResident:
+    """Scheduler tests only need a routing key and a version."""
+
+    def __init__(self, model_id, version=1):
+        self.model_id = model_id
+        self.version = version
+
+
+def mk_request(rid, model_id="m", rows=2, deadline=10.0, submitted=0.0):
+    return PredictRequest(
+        request_id=rid, model_id=model_id,
+        x=np.zeros((rows, N_FEATURES)), tasks=None,
+        deadline=deadline, submitted=submitted,
+    )
+
+
+def resolver(*ids):
+    residents = {i: FakeResident(i) for i in ids}
+    return residents.get
+
+
+# ---------------------------------------------------------------------------
+# admission control (virtual clock, no threads)
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_past_deadline():
+    clock = VirtualClock(start=5.0)
+    sched = Scheduler(row_budget=8, clock=clock)
+    assert sched.submit(mk_request(1, deadline=4.0)) == REASON_DEADLINE
+    assert sched.submit(mk_request(2, deadline=6.0)) is None
+    assert sched.stats()["rejected"][REASON_DEADLINE] == 1
+
+
+def test_submit_rejects_oversize():
+    sched = Scheduler(row_budget=8, clock=VirtualClock())
+    assert sched.submit(mk_request(1, rows=9)) == REASON_OVERSIZE
+    assert sched.submit(mk_request(2, rows=8)) is None
+
+
+def test_overload_rejects_queue_full():
+    sched = Scheduler(row_budget=8, max_queued_rows=16, clock=VirtualClock())
+    outcomes = [sched.submit(mk_request(i, rows=4)) for i in range(1, 6)]
+    assert outcomes == [None, None, None, None, REASON_QUEUE_FULL]
+    assert sched.queued_rows == 16
+    # draining the backlog restores admission: overload is a state, not a
+    # death sentence
+    sched.drain()
+    assert sched.submit(mk_request(9, rows=4)) is None
+
+
+def test_form_batch_respects_row_budget():
+    sched = Scheduler(row_budget=8, clock=VirtualClock())
+    for i, rows in enumerate((3, 3, 3), start=1):
+        assert sched.submit(mk_request(i, rows=rows)) is None
+    batch, expired, unroutable = sched.form_batch(resolver("m"))
+    assert expired == [] and unroutable == []
+    # 3+3 fits, the third 3-row request would exceed 8 and stays queued
+    assert batch.rows == 6
+    assert [r.request_id for r in batch.requests] == [1, 2]
+    assert sched.queue_depth == 1
+
+
+def test_form_batch_skips_oversized_fill_but_takes_later_fits():
+    sched = Scheduler(row_budget=8, clock=VirtualClock())
+    sched.submit(mk_request(1, rows=5, deadline=1.0))
+    sched.submit(mk_request(2, rows=5, deadline=2.0))  # 5+5 > 8: skipped
+    sched.submit(mk_request(3, rows=3, deadline=3.0))  # 5+3 = 8: taken
+    batch, _, _ = sched.form_batch(resolver("m"))
+    assert [r.request_id for r in batch.requests] == [1, 3]
+    assert batch.rows == 8
+    assert sched.queue_depth == 1
+
+
+def test_form_batch_orders_by_deadline_not_arrival():
+    sched = Scheduler(row_budget=4, clock=VirtualClock())
+    sched.submit(mk_request(1, rows=4, deadline=9.0))   # arrives first
+    sched.submit(mk_request(2, rows=4, deadline=1.0))   # tighter deadline
+    batch, _, _ = sched.form_batch(resolver("m"))
+    assert [r.request_id for r in batch.requests] == [2]
+    batch, _, _ = sched.form_batch(resolver("m"))
+    assert [r.request_id for r in batch.requests] == [1]
+
+
+def test_form_batch_is_single_model():
+    sched = Scheduler(row_budget=8, clock=VirtualClock())
+    sched.submit(mk_request(1, model_id="a", rows=2, deadline=1.0))
+    sched.submit(mk_request(2, model_id="b", rows=2, deadline=2.0))
+    sched.submit(mk_request(3, model_id="a", rows=2, deadline=3.0))
+    batch, _, _ = sched.form_batch(resolver("a", "b"))
+    # head deadline belongs to "a": the batch is all-"a", "b" stays queued
+    assert batch.model_id == "a"
+    assert [r.request_id for r in batch.requests] == [1, 3]
+    batch, _, _ = sched.form_batch(resolver("a", "b"))
+    assert batch.model_id == "b"
+
+
+def test_queued_requests_expire_on_virtual_time():
+    clock = VirtualClock()
+    sched = Scheduler(row_budget=8, clock=clock)
+    sched.submit(mk_request(1, rows=2, deadline=1.0))
+    sched.submit(mk_request(2, rows=2, deadline=5.0))
+    clock.advance(2.0)
+    batch, expired, _ = sched.form_batch(resolver("m"))
+    assert [r.request_id for r in expired] == [1]
+    assert [r.request_id for r in batch.requests] == [2]
+    assert sched.stats()["expired"] == 1
+    assert sched.queued_rows == 0
+
+
+def test_unroutable_requests_are_handed_back():
+    sched = Scheduler(row_budget=8, clock=VirtualClock())
+    sched.submit(mk_request(1, model_id="gone", rows=2, deadline=1.0))
+    sched.submit(mk_request(2, model_id="m", rows=2, deadline=2.0))
+    batch, expired, unroutable = sched.form_batch(resolver("m"))
+    assert [r.request_id for r in unroutable] == [1]
+    assert batch.model_id == "m"
+    assert sched.queue_depth == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded jit cache
+# ---------------------------------------------------------------------------
+
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 4, 5, 17, 64)] == \
+        [1, 2, 4, 4, 8, 32, 64]
+
+
+def test_pad_columns_replicates_last_sample():
+    xp = np.array([[1.0, 2.0], [3.0, 4.0]])
+    padded = pad_columns(xp, 4)
+    assert padded.shape == (2, 4)
+    assert np.array_equal(padded[:, 2], xp[:, 1])
+    assert np.array_equal(padded[:, 3], xp[:, 1])
+
+
+def test_bucket_cache_lru_eviction(fitted_pair):
+    fitted = fitted_pair[0].fitted_
+    mdl = fitted.model()
+    rng = np.random.default_rng(3)
+    cache = ProgramBucketCache(max_buckets=2)
+    for s in (3, 9, 17):  # buckets 4, 16, 32: third compile evicts bucket 4
+        xp = fitted.primary_rows(rng.uniform(0.5, 3.0, (s, N_FEATURES)))
+        d = cache.evaluate(mdl.program, xp)
+        assert np.array_equal(d, eval_program_host(mdl.program, xp))
+    st = cache.stats()
+    assert st["resident"] == 2 and st["evictions"] == 1
+    assert st["buckets"] == [16, 32]
+    # re-touching a resident bucket is a hit, not a recompile
+    xp = fitted.primary_rows(rng.uniform(0.5, 3.0, (10, N_FEATURES)))
+    cache.evaluate(mdl.program, xp)
+    assert cache.stats()["hits"] == 1
+    assert cache.stats()["compiles"] == 3
+
+
+# ---------------------------------------------------------------------------
+# tier: deterministic (virtual clock, dispatcher driven by hand)
+# ---------------------------------------------------------------------------
+
+def test_tier_expires_queued_requests_deterministically(fitted_pair):
+    clock = VirtualClock()
+    tier = ServingTier(n_replicas=1, row_budget=8, clock=clock, start=False)
+    tier.register("m", fitted_pair[0].fitted_)
+    p = tier.submit("m", np.full((2, N_FEATURES), 1.0), slo=0.5)
+    clock.advance(1.0)
+    tier._dispatch_once()
+    resp = p.result(timeout=0)
+    assert resp.status == STATUS_EXPIRED
+    assert "deadline" in resp.reason
+    assert tier.stats()["models"]["m"]["expired"] == 1
+
+
+def test_tier_forms_budget_bounded_batches_and_executes(fitted_pair):
+    est = fitted_pair[0]
+    clock = VirtualClock()
+    tier = ServingTier(n_replicas=1, row_budget=8, clock=clock, start=False)
+    tier.register("m", est.fitted_)
+    rng = np.random.default_rng(5)
+    xs = [rng.uniform(0.5, 3.0, (3, N_FEATURES)) for _ in range(3)]
+    futures = [tier.submit("m", x, slo=10.0) for x in xs]
+    tier._dispatch_once()
+    batch = tier.replicas[0].inbox.get_nowait()
+    assert batch.rows == 6 <= tier.scheduler.row_budget
+    tier.replicas[0].execute(batch)
+    for x, p in zip(xs[:2], futures[:2]):
+        resp = p.result(timeout=0)
+        assert resp.ok and resp.model_version == 1
+        assert np.array_equal(resp.y, est.predict(x))
+    assert not futures[2].done()  # third request rode over to the next batch
+
+
+def test_tier_close_answers_queued_requests(fitted_pair):
+    tier = ServingTier(n_replicas=1, row_budget=8,
+                       clock=VirtualClock(), start=False)
+    tier.register("m", fitted_pair[0].fitted_)
+    p = tier.submit("m", np.full((2, N_FEATURES), 1.0), slo=10.0)
+    tier.close()
+    resp = p.result(timeout=0)
+    assert resp.status == STATUS_REJECTED and "shut down" in resp.reason
+    assert tier.scheduler.stats()["rejected"][REASON_SHUTDOWN] == 1
+
+
+def test_tier_rejects_unknown_model_and_malformed(fitted_pair):
+    tier = ServingTier(n_replicas=1, row_budget=8,
+                       clock=VirtualClock(), start=False)
+    tier.register("m", fitted_pair[0].fitted_)
+
+    resp = tier.submit("nope", np.ones((2, N_FEATURES))).result(timeout=0)
+    assert resp.status == STATUS_REJECTED and "nope" in resp.reason
+
+    resp = tier.submit("m", np.ones((2, N_FEATURES + 1))).result(timeout=0)
+    assert resp.status == STATUS_REJECTED
+
+    bad = np.ones((2, N_FEATURES))
+    bad[1, 0] = np.nan
+    resp = tier.submit("m", bad).result(timeout=0)
+    assert resp.status == STATUS_REJECTED and "non-finite" in resp.reason
+
+    rej = tier.scheduler.stats()["rejected"]
+    assert rej[REASON_UNKNOWN_MODEL] == 1
+    assert rej["malformed"] == 2
+
+
+def test_tier_oversize_and_overload_reject_via_futures(fitted_pair):
+    tier = ServingTier(n_replicas=1, row_budget=4, max_queued_rows=8,
+                       clock=VirtualClock(), start=False)
+    tier.register("m", fitted_pair[0].fitted_)
+    resp = tier.submit("m", np.ones((5, N_FEATURES))).result(timeout=0)
+    assert resp.status == STATUS_REJECTED and REASON_OVERSIZE in resp.reason
+    futures = [tier.submit("m", np.ones((4, N_FEATURES))) for _ in range(3)]
+    assert not futures[0].done() and not futures[1].done()
+    resp = futures[2].result(timeout=0)
+    assert resp.status == STATUS_REJECTED and REASON_QUEUE_FULL in resp.reason
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_route_least_loaded_prefers_idle_replica(fitted_pair):
+    tier = ServingTier(n_replicas=3, row_budget=8, start=False)
+    tier.replicas[0].pending_rows = lambda: 12
+    tier.replicas[1].pending_rows = lambda: 0
+    tier.replicas[2].pending_rows = lambda: 7
+    for _ in range(4):
+        assert tier._route() is tier.replicas[1]
+
+
+def test_route_round_robin_alternates(fitted_pair):
+    tier = ServingTier(n_replicas=2, row_budget=8, policy="round-robin",
+                       start=False)
+    picks = [tier._route().index for _ in range(4)]
+    assert picks == [0, 1, 0, 1]
+
+
+def test_bad_routing_policy_rejected():
+    with pytest.raises(ValueError, match="policy"):
+        ServingTier(policy="random", start=False)
+
+
+# ---------------------------------------------------------------------------
+# tier: threaded end-to-end, prediction parity, hot-swap
+# ---------------------------------------------------------------------------
+
+def test_tier_predict_matches_estimator(fitted_pair):
+    est_a, est_b = fitted_pair
+    rng = np.random.default_rng(7)
+    with ServingTier(n_replicas=2, row_budget=32, default_slo=30.0) as tier:
+        tier.register("a", est_a.fitted_)
+        tier.register("b", est_b.fitted_)
+        for est, mid in ((est_a, "a"), (est_b, "b")):
+            for rows in (1, 3, 8):
+                x = rng.uniform(0.5, 3.0, (rows, N_FEATURES))
+                assert np.array_equal(tier.predict(mid, x), est.predict(x))
+
+
+def test_hot_swap_under_concurrent_load_zero_failures(fitted_pair):
+    est_v1, est_v2 = fitted_pair
+    rng = np.random.default_rng(9)
+    xs = [rng.uniform(0.5, 3.0, (int(r), N_FEATURES))
+          for r in rng.integers(1, 9, size=60)]
+    responses = []
+    resp_lock = threading.Lock()
+
+    with ServingTier(n_replicas=2, row_budget=32, default_slo=30.0) as tier:
+        tier.register("m", est_v1.fitted_)
+
+        def hammer(chunk):
+            futs = [tier.submit("m", x) for x in chunk]
+            got = [f.result(timeout=30.0) for f in futs]
+            with resp_lock:
+                responses.extend(got)
+
+        threads = [threading.Thread(target=hammer, args=(xs[i::3],))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        tier.register("m", est_v2.fitted_)  # the mid-load hot-swap
+        for t in threads:
+            t.join()
+
+        # the hot-swap contract: every request answered ok, each on
+        # exactly one version, and post-swap traffic serves v2
+        assert [r.status for r in responses] == [STATUS_OK] * len(xs)
+        assert set(r.model_version for r in responses) <= {1, 2}
+        x = rng.uniform(0.5, 3.0, (4, N_FEATURES))
+        resp = tier.submit("m", x).result(timeout=30.0)
+        assert resp.model_version == 2
+        assert np.array_equal(resp.y, est_v2.predict(x))
+        m = tier.stats()["models"]["m"]
+        assert m["errors"] == 0
+        assert m["ok"] == len(xs) + 1
+        assert tier.stats()["registry"]["m"]["swaps"] == 1
+
+
+def test_unregister_answers_queued_requests(fitted_pair):
+    clock = VirtualClock()
+    tier = ServingTier(n_replicas=1, row_budget=8, clock=clock, start=False)
+    tier.register("m", fitted_pair[0].fitted_)
+    p = tier.submit("m", np.ones((2, N_FEATURES)), slo=10.0)
+    assert tier.unregister("m")
+    tier._dispatch_once()
+    resp = p.result(timeout=0)
+    assert resp.status == STATUS_REJECTED
+    assert "unregistered" in resp.reason
+
+
+# ---------------------------------------------------------------------------
+# traffic generators
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_is_deterministic_and_in_range():
+    a = poisson_trace(50.0, 2.0, ("a", "b"), np.random.default_rng(1),
+                      mean_rows=4, max_rows=16)
+    b = poisson_trace(50.0, 2.0, ("a", "b"), np.random.default_rng(1),
+                      mean_rows=4, max_rows=16)
+    assert a == b and len(a) > 0
+    assert all(0.0 < e.t < 2.0 for e in a)
+    assert all(1 <= e.rows <= 16 for e in a)
+    assert {e.model_id for e in a} == {"a", "b"}
+    assert [e.t for e in a] == sorted(e.t for e in a)
+
+
+def test_bursty_trace_respects_on_off_windows():
+    events = bursty_trace(200.0, burst_len=0.5, idle=1.0, horizon=3.0,
+                          model_ids=("m",), rng=np.random.default_rng(2))
+    assert len(events) > 0
+    for e in events:  # bursts cover [0, .5) and [1.5, 2.0): never the idle
+        assert e.t % 1.5 < 0.5
+
+
+def test_merge_traces_orders_by_arrival():
+    rng = np.random.default_rng(3)
+    merged = merge_traces(
+        poisson_trace(30.0, 1.0, ("a",), rng),
+        bursty_trace(100.0, 0.2, 0.3, 1.0, ("b",), rng),
+    )
+    assert [e.t for e in merged] == sorted(e.t for e in merged)
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
+
+def test_sisso_server_warns_and_bounds_its_cache(fitted_pair):
+    est = fitted_pair[0]
+    with pytest.warns(DeprecationWarning, match="ServingTier"):
+        server = SissoServer(est.fitted_, max_buckets=1)
+    rng = np.random.default_rng(11)
+    for rows in (3, 9, 2):  # buckets 4, 16, 4: two evictions under cap 1
+        x = rng.uniform(0.5, 3.0, (rows, N_FEATURES))
+        assert np.array_equal(server.predict(x), est.predict(x))
+    st = server.stats
+    assert st["max_buckets"] == 1
+    assert st["resident_buckets"] == 1
+    assert st["evictions"] == 2
+    assert st["requests"] == 3
+    # already-constructed servers keep serving without re-warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        server.predict(np.ones((2, N_FEATURES)))

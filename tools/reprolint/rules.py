@@ -611,6 +611,99 @@ def check_rl009(fctx: FileCtx, project: Project) -> Iterable[Finding]:
                         )
 
 
+# ---------------------------------------------------------------------------
+# RL010
+# ---------------------------------------------------------------------------
+
+#: constructor -> (bound kwarg name, its positional index)
+_RL010_BOUNDED_CTORS = {
+    "queue.Queue": ("maxsize", 0),
+    "queue.LifoQueue": ("maxsize", 0),
+    "queue.PriorityQueue": ("maxsize", 0),
+    "collections.deque": ("maxlen", 1),
+    "concurrent.futures.ThreadPoolExecutor": ("max_workers", 0),
+    "concurrent.futures.ProcessPoolExecutor": ("max_workers", 0),
+}
+
+
+def _in_serve(path: str) -> bool:
+    p = _parts(path)
+    return any(
+        p[i] == "repro" and p[i + 1] == "serve" for i in range(len(p) - 1)
+    )
+
+
+def _rl010_bound_arg(call: ast.Call, kwarg: str, pos: int):
+    """The bound expression passed to the constructor, or None."""
+    for k in call.keywords:
+        if k.arg == kwarg:
+            return k.value
+    if len(call.args) > pos and not any(
+        isinstance(a, ast.Starred) for a in call.args[: pos + 1]
+    ):
+        return call.args[pos]
+    return None
+
+
+def check_rl010(fctx: FileCtx, project: Project) -> Iterable[Finding]:
+    """RL010 — serving-tier queues and executors must be explicitly bounded.
+
+    Originating design rule (PR 10 serving tier): every buffer between
+    admission and execution is part of the tier's backpressure story.  An
+    unbounded ``queue.Queue()`` / ``deque()`` / executor between the
+    scheduler and a replica silently absorbs overload that admission
+    control was supposed to reject — memory grows, p99 explodes, and the
+    "rejected" stats read zero while the tier is drowning.  Scope:
+    ``src/repro/serve/`` (the shipped runtime, not tests).  Every
+    ``queue.Queue``/``LifoQueue``/``PriorityQueue`` needs ``maxsize``,
+    every ``collections.deque`` needs ``maxlen``, every
+    ``ThreadPoolExecutor``/``ProcessPoolExecutor`` needs ``max_workers``,
+    and the bound must not be the unbounded literal (``0``/negative
+    ``maxsize``, ``None`` ``maxlen``).  ``queue.SimpleQueue`` is
+    unbounded by construction and always flagged.  Non-literal bounds
+    (config values) are trusted.
+    """
+    if not _in_serve(fctx.path):
+        return
+    for call in iter_calls(fctx.tree):
+        name = fctx.canonical_call(call)
+        if name is None:
+            continue
+        if name == "queue.SimpleQueue":
+            yield Finding(
+                fctx.path, call.lineno, call.col_offset, "RL010",
+                "queue.SimpleQueue is unbounded by construction: serving "
+                "buffers must bound their depth (use queue.Queue(maxsize=N) "
+                "so overload surfaces as admission rejection, not memory "
+                "growth)",
+            )
+            continue
+        spec = _RL010_BOUNDED_CTORS.get(name)
+        if spec is None:
+            continue
+        kwarg, pos = spec
+        bound = _rl010_bound_arg(call, kwarg, pos)
+        short = name.split(".")[-1]
+        if bound is None:
+            yield Finding(
+                fctx.path, call.lineno, call.col_offset, "RL010",
+                f"{short} without an explicit {kwarg}: an unbounded "
+                "serving-tier buffer absorbs overload that admission "
+                "control should reject (memory growth + unbounded queueing "
+                f"delay); pass {kwarg}=<bound>",
+            )
+        elif isinstance(bound, ast.Constant) and (
+            bound.value is None
+            or (isinstance(bound.value, int) and bound.value <= 0)
+        ):
+            yield Finding(
+                fctx.path, call.lineno, call.col_offset, "RL010",
+                f"{short}({kwarg}={bound.value!r}) is the unbounded "
+                f"spelling: pass a positive {kwarg} so the buffer has a "
+                "real depth bound",
+            )
+
+
 RULES: List[Rule] = [
     Rule("RL001", "stable-selection", check_rl001.__doc__, check_rl001),
     Rule("RL002", "timed-region-blocks", check_rl002.__doc__, check_rl002),
@@ -622,4 +715,6 @@ RULES: List[Rule] = [
     Rule("RL008", "no-effects-barrier-sync", check_rl008.__doc__, check_rl008),
     Rule("RL009", "crash-consistent-publish", check_rl009.__doc__,
          check_rl009),
+    Rule("RL010", "bounded-serving-buffers", check_rl010.__doc__,
+         check_rl010),
 ]
